@@ -1,0 +1,151 @@
+"""Benchmark harness: one entry per paper table/figure + kernel
+microbenchmarks + the roofline table from the dry-run artifacts.
+
+    PYTHONPATH=src python -m benchmarks.run [--only table1,fig14,...]
+
+Prints ``name,us_per_call,derived`` CSV lines per benchmark plus a summary
+block comparing each reproduced number to the paper's claim.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+ALL = ("table1", "fig12", "fig13", "fig14", "fig15", "fusion", "fig18",
+       "fig20", "kernels", "roofline")
+
+
+def _run(name, fn):
+    t0 = time.perf_counter()
+    rows, summary = fn()
+    dt = (time.perf_counter() - t0) * 1e6
+    print(f"\n=== {name} ===")
+    for r in rows[:12]:
+        print("  " + json.dumps(r))
+    if len(rows) > 12:
+        print(f"  ... ({len(rows)} rows total)")
+    print(f"  summary: {json.dumps(summary)}")
+    print(f"{name},{dt:.0f},{json.dumps(summary)}")
+    return rows, summary
+
+
+def bench_kernels():
+    """Kernel wall-times (interpret mode on CPU -> correctness-scale only;
+    the derived column is max |err| vs the jnp oracle)."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.kernels import ref
+    from repro.kernels.chain_norm import chain_norm
+    from repro.kernels.flash_attention import flash_attention
+    from repro.kernels.gconv_matmul import gconv_matmul
+    from repro.kernels.gconv_spatial import gconv_spatial
+
+    rows = []
+
+    def one(name, fn, fn_ref, *args):
+        y = fn(*args)
+        jax.block_until_ready(y)
+        t0 = time.perf_counter()
+        for _ in range(3):
+            y = fn(*args)
+        jax.block_until_ready(y)
+        us = (time.perf_counter() - t0) / 3 * 1e6
+        err = float(jnp.max(jnp.abs(
+            jnp.asarray(y, jnp.float32)
+            - jnp.asarray(fn_ref(*args), jnp.float32))))
+        rows.append(dict(kernel=name, us_per_call=round(us),
+                         max_err=round(err, 6)))
+
+    k = jax.random.PRNGKey(0)
+    x = jax.random.normal(k, (4, 64, 64))
+    w = jax.random.normal(k, (4, 64, 64))
+    one("gconv_matmul(4x64x64x64)",
+        lambda a, b: gconv_matmul(a, b, block_m=32, block_n=32, block_k=32,
+                                  interpret=True),
+        ref.gconv_matmul_ref, x, w)
+    xs = jax.random.normal(k, (2, 16, 16, 8))
+    ws = jax.random.normal(k, (3, 3, 8, 16))
+    one("gconv_spatial(2x16x16x8)",
+        lambda a, b: gconv_spatial(a, b, pad=1, interpret=True),
+        lambda a, b: ref.gconv_spatial_ref(a, b, pad=1), xs, ws)
+    xn = jax.random.normal(k, (128, 256))
+    g = jnp.ones((256,))
+    one("chain_norm(128x256)",
+        lambda a, b: chain_norm(a, b, block_t=64, interpret=True),
+        ref.chain_norm_ref, xn, g)
+    q = jax.random.normal(k, (2, 64, 32))
+    one("flash_attention(2x64x32)",
+        lambda a: flash_attention(a, a, a, block_q=32, block_k=32,
+                                  interpret=True),
+        lambda a: ref.flash_attention_ref(a, a, a), q)
+    worst = max(r["max_err"] for r in rows)
+    return rows, {"kernels": len(rows), "worst_err": worst,
+                  "all_match_oracle": bool(worst < 5e-2)}
+
+
+def bench_roofline():
+    """Roofline table from the dry-run JSON cache (run launch/dryrun first)."""
+    out_dir = os.path.join(os.path.dirname(__file__), "..", "results",
+                           "dryrun")
+    rows = []
+    if not os.path.isdir(out_dir):
+        return [], {"note": "no dry-run results yet "
+                            "(python -m repro.launch.dryrun --all)"}
+    for fn in sorted(os.listdir(out_dir)):
+        if not fn.endswith(".json"):
+            continue
+        with open(os.path.join(out_dir, fn)) as f:
+            rec = json.load(f)
+        if rec.get("status") != "ok":
+            rows.append(dict(cell=fn[:-5], status=rec.get("status"),
+                             reason=str(rec.get("reason",
+                                                rec.get("error", "")))[:60]))
+            continue
+        r = rec["roofline"]
+        rows.append(dict(
+            cell=fn[:-5], status="ok", dominant=r["dominant"],
+            compute_ms=round(r["compute_s"] * 1e3, 3),
+            memory_ms=round(r["memory_s"] * 1e3, 3),
+            collective_ms=round(r["collective_s"] * 1e3, 3),
+            useful=round(r["useful_ratio"], 3),
+            per_dev_gb=rec.get("per_device_gb")))
+    ok = [r for r in rows if r.get("status") == "ok"]
+    doms = {}
+    for r in ok:
+        doms[r["dominant"]] = doms.get(r["dominant"], 0) + 1
+    return rows, {"cells_ok": len(ok), "dominant_histogram": doms}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    want = args.only.split(",") if args.only else list(ALL)
+
+    from benchmarks import paper_tables as pt
+
+    table = {
+        "table1": pt.table1_layers, "fig12": pt.fig12_breakdown,
+        "fig13": pt.fig13_conv_speedup, "fig14": pt.fig14_speedup,
+        "fig15": pt.fig15_code_density, "fusion": pt.fusion_gains,
+        "fig18": pt.fig18_energy, "fig20": pt.fig20_wholelife,
+        "kernels": bench_kernels, "roofline": bench_roofline,
+    }
+    results = {}
+    for name in want:
+        results[name] = _run(name, table[name])
+    out = os.path.join(os.path.dirname(__file__), "..", "results",
+                       "benchmarks.json")
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump({k: {"rows": v[0], "summary": v[1]}
+                   for k, v in results.items()}, f, indent=1, default=str)
+    print(f"\nwrote {os.path.abspath(out)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+"""Serving demo: slot-based continuous batching over a small model.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py
+"""
+from repro.launch.serve import Request, Server
+import numpy as np, json
+
+srv = Server("tinyllama-1.1b", smoke=True, slots=4, max_len=64)
+rng = np.random.default_rng(0)
+for i in range(8):
+    prompt = rng.integers(0, srv.cfg.vocab, int(rng.integers(2, 6))).tolist()
+    srv.submit(Request(rid=i, prompt=prompt, max_new=10))
+report = srv.run_until_drained()
+print(json.dumps(report, indent=1))
+assert report["requests"] == 8
+print("OK: drained", report["requests"], "requests")

@@ -1,0 +1,163 @@
+"""Roofline-term extraction from compiled XLA artifacts.
+
+Three terms per (arch x shape x mesh), in seconds (TPU v5e constants):
+
+    compute    = HLO_FLOPs   / (chips * 197e12 FLOP/s)       [bf16 MXU]
+    memory     = HLO_bytes   / (chips * 819e9  B/s)           [HBM]
+    collective = coll_bytes  / (chips * 50e9   B/s/link)      [ICI]
+
+HLO_FLOPs / bytes come from ``compiled.cost_analysis()`` of the PARTITIONED
+module — i.e. PER-DEVICE quantities (verified empirically; the SPMD
+executable is the per-device program). The three terms are therefore
+per-chip times directly:
+
+    compute_s    = flops_per_device / 197e12
+    memory_s     = bytes_per_device / 819e9
+    collective_s = collective_bytes_per_device / 50e9
+
+Collective bytes are NOT in cost_analysis: we parse the compiled module text
+and sum result-shape bytes of every all-gather / all-reduce / reduce-scatter
+/ all-to-all / collective-permute. MODEL_FLOPS (6*N*D dense / 6*N_active*D
+MoE) / (chips * flops_per_device) gives the useful-compute ratio — it
+catches remat recompute, padding waste, AND replicated work (e.g. batch=1
+decode replicated across the data axis shows up as a low ratio).
+"""
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import asdict, dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+# TPU v5e per-chip constants (assignment-specified)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s/link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter",
+                   "all-to-all", "collective-permute")
+
+# shapes like f32[128,256]{1,0} or (f32[2,3], bf16[4])
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dtype, dims = m.group(1), m.group(2)
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(",
+    re.M)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result-shape bytes per collective kind from compiled HLO text.
+    ``-done`` ops are skipped so async pairs are not double-counted."""
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVE_OPS}
+    for m in _INSTR_RE.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2)
+        full = m.group(0)
+        if f"{kind}-done" in full:
+            continue
+        out[kind] += _shape_bytes(shape_str)
+    return out
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    coll_bytes: float
+    coll_breakdown: Dict[str, int]
+    model_flops: float
+    per_device_hbm_bytes: float = 0.0
+
+    @property
+    def compute_s(self) -> float:
+        return self.hlo_flops / PEAK_FLOPS          # per-device flops
+
+    @property
+    def memory_s(self) -> float:
+        return self.hlo_bytes / HBM_BW              # per-device bytes
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll_bytes / ICI_BW             # per-device coll bytes
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self) -> float:
+        denom = self.hlo_flops * self.chips
+        return self.model_flops / denom if denom else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """compute-term / total — how close the step is to compute-bound
+        (1.0 = perfectly compute-limited = at the roofline for this shape)."""
+        bound = max(self.compute_s, self.memory_s, self.collective_s)
+        return self.compute_s / bound if bound else 0.0
+
+    def to_dict(self) -> dict:
+        d = asdict(self)
+        d.update(compute_s=self.compute_s, memory_s=self.memory_s,
+                 collective_s=self.collective_s, dominant=self.dominant,
+                 useful_ratio=self.useful_ratio,
+                 roofline_fraction=self.roofline_fraction)
+        return d
+
+
+def model_flops(cfg, cell, n_params_total: int, n_params_active: int) -> float:
+    """6*N*D (train) / 2*N*D (inference fwd) over the cell's token count."""
+    tokens = cell.global_batch * (cell.seq_len if cell.kind != "decode"
+                                  else 1)
+    n = n_params_active or n_params_total
+    mult = 6.0 if cell.kind == "train" else 2.0
+    return mult * n * tokens
+
+
+def from_compiled(arch: str, shape: str, mesh_name: str, chips: int,
+                  compiled, model_fl: float) -> Roofline:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    bts = float(ca.get("bytes accessed", 0.0))
+    text = compiled.as_text()
+    coll = collective_bytes(text)
+    mem = compiled.memory_analysis()
+    per_dev = 0.0
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes"):
+        per_dev += float(getattr(mem, attr, 0.0) or 0.0)
+    return Roofline(arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+                    hlo_flops=flops, hlo_bytes=bts,
+                    coll_bytes=float(sum(coll.values())),
+                    coll_breakdown=coll, model_flops=model_fl,
+                    per_device_hbm_bytes=per_dev)

@@ -1,0 +1,175 @@
+"""Sharded, async, integrity-checked checkpointing with rotation + elastic
+restore.
+
+Layout per step:
+    <dir>/step_<N>.tmp/ -> (atomic rename) -> <dir>/step_<N>/
+        meta.json            step, leaf manifest, crc32 per leaf, mesh shape
+        <leaf-path>.npy      one file per pytree leaf
+
+Design notes for real clusters (single-process container runs the same
+code):
+  * every host writes only the shards it owns (here: the lone process owns
+    all); the manifest records the logical global shape, so a RESTORE ONTO A
+    DIFFERENT MESH (elastic scale-up/down) just device_puts each leaf with
+    the new NamedSharding — GSPMD resharding does the rest;
+  * writes happen on a background thread (training continues), fsync +
+    tmp-dir + atomic rename make partial checkpoints invisible;
+  * crc32 per leaf catches torn/corrupt files at restore; corrupted or
+    incomplete checkpoints are skipped and the previous one is used —
+    that's the node-failure recovery path (runtime/fault_tolerance.py).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import zlib
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_path_str(p) for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    return str(p)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep_n: int = 3,
+                 async_write: bool = True):
+        self.dir = directory
+        self.keep_n = keep_n
+        self.async_write = async_write
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------------------------------------------
+    def save(self, step: int, tree, extra: Optional[dict] = None):
+        """Snapshot to host memory now; write in the background."""
+        flat = _flatten(tree)
+        host = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
+        self.wait()
+        if self.async_write:
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host, extra or {}),
+                daemon=True)
+            self._thread.start()
+        else:
+            self._write(step, host, extra or {})
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step: int, host: Dict[str, np.ndarray], extra: dict):
+        tmp = os.path.join(self.dir, f"step_{step}.tmp")
+        final = os.path.join(self.dir, f"step_{step}")
+        shutil.rmtree(tmp, ignore_errors=True)
+        os.makedirs(tmp)
+        manifest = {}
+        for key, arr in host.items():
+            fn = key.replace("/", "__") + ".npy"
+            np.save(os.path.join(tmp, fn), arr)
+            manifest[key] = {
+                "file": fn, "shape": list(arr.shape), "dtype": str(arr.dtype),
+                "crc32": zlib.crc32(np.ascontiguousarray(arr).tobytes()),
+            }
+        meta = {"step": step, "manifest": manifest, **extra}
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump(meta, f)
+            f.flush()
+            os.fsync(f.fileno())
+        shutil.rmtree(final, ignore_errors=True)
+        os.rename(tmp, final)
+        self._rotate()
+
+    def _rotate(self):
+        steps = sorted(self.all_steps())
+        for s in steps[: -self.keep_n]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s}"),
+                          ignore_errors=True)
+
+    # ------------------------------------------------------------------
+    def all_steps(self):
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                try:
+                    out.append(int(name.split("_")[1]))
+                except ValueError:
+                    pass
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def _verify(self, path: str) -> Optional[dict]:
+        meta_path = os.path.join(path, "meta.json")
+        if not os.path.exists(meta_path):
+            return None
+        try:
+            with open(meta_path) as f:
+                meta = json.load(f)
+            for key, info in meta["manifest"].items():
+                arr = np.load(os.path.join(path, info["file"]), mmap_mode="r")
+                if list(arr.shape) != info["shape"]:
+                    return None
+                crc = zlib.crc32(np.ascontiguousarray(arr).tobytes())
+                if crc != info["crc32"]:
+                    return None
+            return meta
+        except Exception:
+            return None
+
+    def restore(self, tree_like, step: Optional[int] = None,
+                shardings=None) -> Tuple[Optional[int], Any]:
+        """Restore into the structure of ``tree_like``. Walks back through
+        checkpoints until an integrity-clean one is found. ``shardings``
+        (same pytree structure or a callable leaf->sharding) enables elastic
+        restore onto a different mesh."""
+        candidates = ([step] if step is not None
+                      else list(reversed(self.all_steps())))
+        for s in candidates:
+            path = os.path.join(self.dir, f"step_{s}")
+            meta = self._verify(path)
+            if meta is None:
+                continue
+            flat_like = _flatten(tree_like)
+            out = {}
+            ok = True
+            for key, leaf in flat_like.items():
+                info = meta["manifest"].get(key)
+                if info is None:
+                    ok = False
+                    break
+                arr = np.load(os.path.join(path, info["file"]))
+                out[key] = arr
+            if not ok:
+                continue
+            leaves, treedef = jax.tree_util.tree_flatten(tree_like)
+            keys = list(_flatten(tree_like).keys())
+            new_leaves = []
+            for key, leaf in zip(keys, leaves):
+                arr = out[key].astype(leaf.dtype)
+                if shardings is not None:
+                    sh = (shardings(key) if callable(shardings)
+                          else _flatten(shardings)[key])
+                    arr = jax.device_put(arr, sh)
+                new_leaves.append(arr)
+            return s, jax.tree_util.tree_unflatten(treedef, new_leaves)
+        return None, tree_like

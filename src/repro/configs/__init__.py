@@ -1,0 +1,148 @@
+"""Architecture registry + shape cells + input_specs.
+
+``--arch <id>`` ids map to modules here; each module exports the exact
+published CONFIG and a reduced SMOKE config of the same family.
+
+Shape cells (assigned): train_4k / prefill_32k / decode_32k / long_500k.
+``decode_*``/``long_*`` lower ``serve_step`` (one token against a seq_len
+KV/state cache); ``long_500k`` requires sub-quadratic attention and therefore
+runs only for the SSM/hybrid archs (skip recorded per cell).
+"""
+from __future__ import annotations
+
+import importlib
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig
+
+_MODULES = {
+    "tinyllama-1.1b": "tinyllama_1_1b",
+    "yi-34b": "yi_34b",
+    "starcoder2-15b": "starcoder2_15b",
+    "phi3-mini-3.8b": "phi3_mini_3_8b",
+    "hymba-1.5b": "hymba_1_5b",
+    "qwen2-vl-2b": "qwen2_vl_2b",
+    "seamless-m4t-medium": "seamless_m4t_medium",
+    "rwkv6-7b": "rwkv6_7b",
+    "olmoe-1b-7b": "olmoe_1b_7b",
+    "arctic-480b": "arctic_480b",
+}
+
+ARCHS = tuple(_MODULES)
+
+
+@dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                      # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524288, 1, "decode"),
+}
+
+# long_500k needs sub-quadratic sequence mixing
+SUBQUADRATIC = ("rwkv6-7b", "hymba-1.5b")
+
+
+def get(arch: str, smoke: bool = False) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+    return mod.SMOKE if smoke else mod.CONFIG
+
+
+def cell_supported(arch: str, shape: str) -> Tuple[bool, str]:
+    """(supported, reason-if-not) for an (arch x shape) cell."""
+    if shape == "long_500k" and arch not in SUBQUADRATIC:
+        return False, "skip:quadratic (full attention at 524288)"
+    return True, ""
+
+
+def all_cells(include_skipped: bool = False):
+    for arch in ARCHS:
+        for shape in SHAPES:
+            ok, why = cell_supported(arch, shape)
+            if ok or include_skipped:
+                yield arch, shape, ok, why
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; nothing is allocated)
+# ---------------------------------------------------------------------------
+def input_specs(arch: str, shape: str,
+                cfg: Optional[ModelConfig] = None) -> Dict[str, object]:
+    """Inputs for the cell's step function as ShapeDtypeStructs.
+
+    train/prefill -> the batch pytree for loss_fn/forward;
+    decode        -> {token} (the serve cache is built separately since it is
+                     carried state, not an input stream).
+    """
+    cfg = cfg or get(arch)
+    cell = SHAPES[shape]
+    B, T = cell.global_batch, cell.seq_len
+    i32 = jnp.int32
+
+    def tok(shape_):
+        return jax.ShapeDtypeStruct(shape_, i32)
+
+    if cell.kind == "train":
+        if cfg.family == "encdec":
+            half = T // 2
+            return {
+                "src_embeds": jax.ShapeDtypeStruct(
+                    (B, half, cfg.d_model), jnp.dtype(cfg.dtype)),
+                "tgt_tokens": tok((B, half)),
+                "labels": tok((B, half)),
+            }
+        batch = {"tokens": tok((B, T)), "labels": tok((B, T))}
+        if cfg.family == "vlm":
+            batch["embed_overlay"] = jax.ShapeDtypeStruct(
+                (B, T, cfg.d_model), jnp.dtype(cfg.dtype))
+            batch["overlay_mask"] = jax.ShapeDtypeStruct((B, T), jnp.bool_)
+            batch["positions"] = tok((B, 3, T))
+        return batch
+
+    if cell.kind == "prefill":
+        if cfg.family == "encdec":
+            return {"src_embeds": jax.ShapeDtypeStruct(
+                (B, T, cfg.d_model), jnp.dtype(cfg.dtype))}
+        return {"tokens": tok((B, T))}
+
+    # decode: one new token; cache of depth seq_len is carried state
+    return {"token": tok((B, 1))}
+
+
+def concrete_batch(cfg: ModelConfig, batch: int, seq: int, key=None):
+    """Small concrete batch for smoke tests."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    k1, k2 = jax.random.split(key)
+    if cfg.family == "encdec":
+        half = max(seq // 2, 4)
+        return {
+            "src_embeds": 0.02 * jax.random.normal(
+                k1, (batch, half, cfg.d_model), jnp.float32
+            ).astype(jnp.dtype(cfg.dtype)),
+            "tgt_tokens": jax.random.randint(k2, (batch, half), 0, cfg.vocab),
+            "labels": jax.random.randint(k2, (batch, half), 0, cfg.vocab),
+        }
+    batch_d = {
+        "tokens": jax.random.randint(k1, (batch, seq), 0, cfg.vocab),
+        "labels": jax.random.randint(k2, (batch, seq), 0, cfg.vocab),
+    }
+    if cfg.family == "vlm":
+        batch_d["embed_overlay"] = 0.02 * jax.random.normal(
+            k1, (batch, seq, cfg.d_model)).astype(jnp.dtype(cfg.dtype))
+        batch_d["overlay_mask"] = (
+            jax.random.uniform(k2, (batch, seq)) < 0.3)
+        pos = jnp.broadcast_to(jnp.arange(seq)[None, None],
+                               (batch, 3, seq))
+        batch_d["positions"] = pos
+    return batch_d

@@ -1,0 +1,15 @@
+"""arctic-480b [moe] — 128 experts top-2 + dense residual
+[hf:Snowflake/snowflake-arctic-base; hf]. Dense-MoE hybrid: a dense FFN
+residual runs in parallel with the routed experts every layer."""
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="arctic-480b", family="moe",
+    n_layers=35, d_model=7168, n_heads=56, n_kv_heads=8,
+    d_ff=4864, vocab=32000, head_dim=128, norm="rms", act="silu",
+    n_experts=128, top_k=2, moe_dense_ff=4864, rope_theta=10000.0)
+
+SMOKE = CONFIG.replace(name="arctic-smoke", n_layers=2, d_model=64,
+                       n_heads=4, n_kv_heads=2, head_dim=16, d_ff=32,
+                       vocab=256, n_experts=8, top_k=2, moe_dense_ff=32,
+                       attn_impl="naive", dtype="float32")

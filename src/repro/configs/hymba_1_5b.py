@@ -1,0 +1,16 @@
+"""hymba-1.5b [hybrid] — parallel attn+mamba heads [arXiv:2411.13676; hf].
+Sliding-window attention (2048) + per-head SSM state => sub-quadratic; the
+long_500k cell RUNS for this arch. Simplifications vs. checkpoint noted in
+DESIGN.md §Arch-applicability."""
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="hymba-1.5b", family="hybrid",
+    n_layers=32, d_model=1600, n_heads=25, n_kv_heads=5,
+    d_ff=5504, vocab=32001, head_dim=64, norm="rms", act="silu",
+    ssm_state=16, sliding_window=2048, rope_theta=10000.0)
+
+SMOKE = CONFIG.replace(name="hymba-smoke", n_layers=2, d_model=64, n_heads=4,
+                       n_kv_heads=2, head_dim=16, d_ff=128, vocab=256,
+                       ssm_state=4, sliding_window=16, attn_impl="naive",
+                       dtype="float32")

@@ -1,0 +1,14 @@
+"""olmoe-1b-7b [moe] — 64 experts top-8 [arXiv:2409.02060; hf].
+MoE fully replaces the dense FFN; d_ff=1024 is the per-expert width."""
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="olmoe-1b-7b", family="moe",
+    n_layers=16, d_model=2048, n_heads=16, n_kv_heads=16,
+    d_ff=1024, vocab=50304, head_dim=128, norm="rms", act="silu",
+    n_experts=64, top_k=8, rope_theta=10000.0)
+
+SMOKE = CONFIG.replace(name="olmoe-smoke", n_layers=2, d_model=64, n_heads=4,
+                       n_kv_heads=4, head_dim=16, d_ff=32, vocab=256,
+                       n_experts=8, top_k=2, attn_impl="naive",
+                       dtype="float32")

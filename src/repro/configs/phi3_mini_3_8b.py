@@ -1,0 +1,13 @@
+"""phi3-mini-3.8b [dense] — RoPE SwiGLU GQA [arXiv:2404.14219; unverified].
+kv=32 == n_heads => effectively MHA."""
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="phi3-mini-3.8b", family="dense",
+    n_layers=32, d_model=3072, n_heads=32, n_kv_heads=32,
+    d_ff=8192, vocab=32064, head_dim=96, norm="rms", act="silu",
+    rope_theta=10000.0)
+
+SMOKE = CONFIG.replace(name="phi3-smoke", n_layers=2, d_model=64, n_heads=4,
+                       n_kv_heads=4, head_dim=16, d_ff=128, vocab=256,
+                       attn_impl="naive", dtype="float32")

@@ -1,0 +1,15 @@
+"""qwen2-vl-2b [vlm] — M-RoPE, dynamic resolution [arXiv:2409.12191; hf].
+Backbone only: the vision frontend is a stub — input_specs() provides the
+patch-embedding overlay (B,T,D) + mask; M-RoPE takes (B,3,T) positions."""
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-2b", family="vlm",
+    n_layers=28, d_model=1536, n_heads=12, n_kv_heads=2,
+    d_ff=8960, vocab=151936, head_dim=128, norm="rms", act="silu",
+    rope_theta=1000000.0, mrope_sections=(16, 24, 24))
+
+SMOKE = CONFIG.replace(name="qwen2vl-smoke", n_layers=2, d_model=64,
+                       n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128,
+                       vocab=256, mrope_sections=(2, 3, 3),
+                       attn_impl="naive", dtype="float32")

@@ -1,0 +1,13 @@
+"""rwkv6-7b [ssm] — Finch, data-dependent decay [arXiv:2404.05892; hf].
+Attention-free: wkv state (heads x 64 x 64) => O(1) decode; long_500k RUNS."""
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-7b", family="ssm",
+    n_layers=32, d_model=4096, n_heads=64, n_kv_heads=64,
+    d_ff=14336, vocab=65536, head_dim=64, norm="rms", act="silu",
+    ssm_heads=64)
+
+SMOKE = CONFIG.replace(name="rwkv6-smoke", n_layers=2, d_model=64, n_heads=2,
+                       n_kv_heads=2, head_dim=32, d_ff=128, vocab=256,
+                       ssm_heads=2, dtype="float32")

@@ -1,0 +1,16 @@
+"""seamless-m4t-medium [audio] — enc-dec, multimodal [arXiv:2308.11596; hf].
+"12L" realized as 12 encoder + 12 decoder layers (published text
+enc/dec depths). Audio frontend stubbed: encoder consumes precomputed frame
+embeddings (B, Ts, d_model)."""
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-medium", family="encdec",
+    n_layers=12, n_enc_layers=12, d_model=1024, n_heads=16, n_kv_heads=16,
+    d_ff=4096, vocab=256206, head_dim=64, norm="layer", act="gelu",
+    embed_inputs=True)
+
+SMOKE = CONFIG.replace(name="seamless-smoke", n_layers=2, n_enc_layers=2,
+                       d_model=64, n_heads=4, n_kv_heads=4, head_dim=16,
+                       d_ff=128, vocab=256, attn_impl="naive",
+                       dtype="float32")

@@ -1,0 +1,14 @@
+"""starcoder2-15b [dense] — GQA, RoPE [arXiv:2402.19173; hf].
+LayerNorm + GELU per the published stack; full (non-windowed) attention as
+assigned."""
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="starcoder2-15b", family="dense",
+    n_layers=40, d_model=6144, n_heads=48, n_kv_heads=4,
+    d_ff=24576, vocab=49152, head_dim=128, norm="layer", act="gelu",
+    rope_theta=100000.0)
+
+SMOKE = CONFIG.replace(name="starcoder2-smoke", n_layers=2, d_model=64,
+                       n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128,
+                       vocab=256, attn_impl="naive", dtype="float32")

@@ -1,0 +1,12 @@
+"""tinyllama-1.1b [dense] — llama2-arch small [arXiv:2401.02385; hf]."""
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="tinyllama-1.1b", family="dense",
+    n_layers=22, d_model=2048, n_heads=32, n_kv_heads=4,
+    d_ff=5632, vocab=32000, head_dim=64, norm="rms", act="silu",
+    rope_theta=10000.0)
+
+SMOKE = CONFIG.replace(name="tinyllama-smoke", n_layers=2, d_model=64,
+                       n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128,
+                       vocab=256, attn_impl="naive", dtype="float32")

@@ -1,0 +1,12 @@
+"""yi-34b [dense] — llama-arch GQA [arXiv:2403.04652; hf]."""
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="yi-34b", family="dense",
+    n_layers=60, d_model=7168, n_heads=56, n_kv_heads=8,
+    d_ff=20480, vocab=64000, head_dim=128, norm="rms", act="silu",
+    rope_theta=5000000.0)
+
+SMOKE = CONFIG.replace(name="yi-smoke", n_layers=2, d_model=64, n_heads=8,
+                       n_kv_heads=2, head_dim=8, d_ff=128, vocab=256,
+                       attn_impl="naive", dtype="float32")

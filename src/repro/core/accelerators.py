@@ -1,0 +1,177 @@
+"""Accelerator abstractions + the paper's Table 4 configurations.
+
+Per paper §4.4, every evaluated accelerator manifests (a) spatial unrolling
+dimensions — differing in count and *functions* (reduce links, output
+bandwidth, overlap-reuse primitives) — and (b) temporal unrolling into a
+memory hierarchy (per-PE local scratchpads, shared global buffer). The
+mapping algorithm (mapping.py) is generic over this spec; per-accelerator
+parameter priorities "slightly change Lines 7–22 of Algorithm 1".
+
+Sizes are in words (one operand), bandwidths in words/cycle, matching the
+paper's Table 4 conventions. ``offload`` marks CIPs that must ship
+non-traditional layers to a host CPU (ARM A53 over PCIe 4.0 in §6.2).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Sequence, Tuple
+
+
+@dataclass(frozen=True)
+class SpatialDim:
+    """One spatial unrolling dimension of a PE array."""
+
+    name: str                       # e.g. "py", "px", "sub"
+    size: int
+    reduce: bool = False            # partial-result forwarding links
+    overlap: bool = False           # overlap-reuse primitive lives here
+    priority: Tuple[str, ...] = ("ks", "opc", "op", "g")
+
+
+@dataclass(frozen=True)
+class AcceleratorSpec:
+    name: str
+    kind: str                       # "TIP" | "LIP" | "CIP"
+    spatial: Tuple[SpatialDim, ...]
+    ls: Dict[str, int]              # per-PE scratchpad words: {"I","K","O"}
+    gb: Dict[str, int]              # global buffer words per data type
+    gb_bandwidth: Dict[str, int]    # words/cycle between GB and array
+    temporal_priority: Tuple[str, ...] = ("op", "ks", "opc", "g")
+    freq_mhz: int = 700
+    offload: bool = False           # CIP: non-traditional layers -> host
+    has_overlap_primitive: bool = False
+
+    @property
+    def n_pes(self) -> int:
+        n = 1
+        for s in self.spatial:
+            n *= s.size
+        return n
+
+    def spatial_by_name(self, name: str) -> SpatialDim:
+        for s in self.spatial:
+            if s.name == name:
+                return s
+        raise KeyError(name)
+
+
+MB = 1024 * 1024 // 2  # words of 16-bit data per MB (paper uses 16-bit ops)
+KB = 1024 // 2
+
+
+# ---------------------------------------------------------------------------
+# Table 4 configurations
+# ---------------------------------------------------------------------------
+def tpu_like() -> AcceleratorSpec:
+    """TIP: TPU basic block scaled down 4x4 (64x64 systolic array)."""
+    return AcceleratorSpec(
+        name="TPU", kind="TIP",
+        spatial=(
+            SpatialDim("rows", 64, reduce=True,
+                       priority=("ks", "opc", "op", "g")),
+            SpatialDim("cols", 64, reduce=False,
+                       priority=("op", "opc", "ks", "g")),
+        ),
+        ls={"I": 1, "K": 1, "O": 1},        # no per-PE scratchpads
+        gb={"I": int(0.75 * MB), "O": int(0.75 * MB), "K": int(0.25 * MB)},
+        gb_bandwidth={"I": 64, "O": 64, "K": 11},
+        offload=False, has_overlap_primitive=False)
+
+
+def dnnweaver() -> AcceleratorSpec:
+    """LIP: DNNWeaver, 14 PUs x 74 PEs (AlexNet config, Stratix V)."""
+    return AcceleratorSpec(
+        name="DNNW", kind="LIP",
+        spatial=(
+            SpatialDim("pe", 74, reduce=True, overlap=True,
+                       priority=("ks", "opc", "op", "g")),
+            SpatialDim("pu", 14, reduce=False,
+                       priority=("op", "opc", "ks", "g")),
+        ),
+        ls={"I": 1, "K": 1, "O": 1},
+        gb={"I": 4 * KB * 14, "O": 4 * KB * 14, "K": int(8.5 * KB) * 14},
+        gb_bandwidth={"I": 14, "O": 14, "K": 14},
+        offload=False, has_overlap_primitive=True)
+
+
+def eyeriss() -> AcceleratorSpec:
+    """CIP: Eyeriss 12x14, row-stationary (paper Fig. 7/8, Alg. 1 defaults)."""
+    return AcceleratorSpec(
+        name="ER", kind="CIP",
+        spatial=(
+            SpatialDim("py", 12, reduce=True, overlap=True,
+                       priority=("ks", "opc", "op", "g")),
+            SpatialDim("px", 14, reduce=False, overlap=True,
+                       priority=("opc", "op", "ks", "g")),
+        ),
+        ls={"I": 12, "K": 224, "O": 24},
+        gb={"I": int(0.05 * MB), "O": int(0.05 * MB), "K": int(0.008 * MB)},
+        gb_bandwidth={"I": 16, "O": 16, "K": 16},
+        offload=True, has_overlap_primitive=True)
+
+
+def eager_pruning() -> AcceleratorSpec:
+    """CIP: EagerPruning, 4 subsystems x 512 PEs; single spatial dim per
+    subsystem exploits reduce and overlap simultaneously (paper §4.4)."""
+    return AcceleratorSpec(
+        name="EP", kind="CIP",
+        spatial=(
+            SpatialDim("pe", 512, reduce=True, overlap=True,
+                       priority=("ks", "opc", "op", "g")),
+            SpatialDim("sub", 4, reduce=False,
+                       priority=("op", "opc", "ks", "g")),
+        ),
+        ls={"I": 64, "K": 1, "O": 1},
+        gb={"I": int(1.5 * MB), "O": int(1.5 * MB), "K": int(1.5 * MB)},
+        gb_bandwidth={"I": 128, "O": 128, "K": 128},
+        offload=True, has_overlap_primitive=True)
+
+
+def nlr() -> AcceleratorSpec:
+    """CIP: NLR (Zhang FPGA'15), Tm=64 output x Tn=7 input unrolling; no
+    overlap-reuse (paper §6.5 notes its high on-chip movement)."""
+    return AcceleratorSpec(
+        name="NLR", kind="CIP",
+        spatial=(
+            SpatialDim("tn", 7, reduce=True,
+                       priority=("ks", "opc", "op", "g")),
+            SpatialDim("tm", 64, reduce=False,
+                       priority=("op", "opc", "ks", "g")),
+        ),
+        ls={"I": 1, "K": 1, "O": 1},
+        gb={"I": int(0.75 * MB), "K": int(0.75 * MB), "O": int(0.375 * MB)},
+        gb_bandwidth={"I": 7, "K": 7, "O": 64},
+        offload=True, has_overlap_primitive=False)
+
+
+def tpu_v5e() -> AcceleratorSpec:
+    """Our TPU-native target (DESIGN.md §2): one MXU modeled as a 128x128
+    contraction array with VMEM as the (shared) local store. Used by the
+    kernel mapper / cost model to pick BlockSpec tiles; roofline analysis of
+    the real compiled HLO supersedes this for §Roofline."""
+    vmem_words = 64 * MB        # 128 MB VMEM, 16-bit words
+    return AcceleratorSpec(
+        name="TPUv5e", kind="GC-TPU",
+        spatial=(
+            SpatialDim("mxu_k", 128, reduce=True,
+                       priority=("ks", "opc", "op", "g")),
+            SpatialDim("mxu_n", 128, reduce=False,
+                       priority=("op", "opc", "ks", "g")),
+        ),
+        ls={"I": vmem_words // 4, "K": vmem_words // 4, "O": vmem_words // 2},
+        gb={"I": 8 * 1024 * MB, "O": 8 * 1024 * MB, "K": 8 * 1024 * MB},
+        gb_bandwidth={"I": 256, "O": 256, "K": 256},
+        freq_mhz=940,
+        offload=False, has_overlap_primitive=True)
+
+
+TABLE4: Dict[str, AcceleratorSpec] = {}
+for _f in (tpu_like, dnnweaver, eyeriss, eager_pruning, nlr):
+    _spec = _f()
+    TABLE4[_spec.name] = _spec
+
+
+def get(name: str) -> AcceleratorSpec:
+    if name == "TPUv5e":
+        return tpu_v5e()
+    return TABLE4[name]

@@ -1,0 +1,344 @@
+"""Chain-level performance/energy simulator (paper §4.2 + §6.2 methodology).
+
+Implements the paper's concise model: computation cycles from Eq. (6), data
+movement from Table 3 / Eqs. (7)-(10), latency = max(compute, per-type load)
+(loading overlaps the systolic computation), and movement-dominated energy.
+
+Three evaluation paths:
+  * :func:`gconv_chain_cost` — the paper's system: every node auto-mapped by
+    Algorithm 1 (+ §4.3 consistent-mapping loop exchange between
+    producer/consumer pairs) on the full PE array.
+  * :func:`baseline_cost` — the accelerator's native operation (§6.2):
+      - CIP: traditional layers on-chip (same mapper = their native
+        dataflow; GCONV is "no worse" on convs), non-traditional layers
+        offloaded to an ARM-A53-class host over PCIe 4.0;
+      - TIP: everything on-chip but via im2col-style matrix ops — input
+        replication, no overlap-reuse;
+      - LIP: two fixed pipeline stages (traditional / non-traditional
+        units), resources partitioned by the suite-wide computation ratio —
+        pipeline bubbles when a network deviates from that ratio.
+
+Energy units are relative to one local-scratchpad access = 1.0 (Eyeriss
+convention); offload costs 146x an on-chip GB access (paper §2.3).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from .accelerators import AcceleratorSpec
+from .chain import Chain, Concat, Movement
+from .gconv import GConv
+from .mapping import Mapping, apply_loop_exchange, map_gconv
+
+# ---------------------------------------------------------------------------
+# constants (§6.2): 700 MHz accelerators; ARM A53 host over PCIe 4.0
+# ---------------------------------------------------------------------------
+PCIE_WORDS_PER_CYCLE = 2.9       # ~4 GB/s effective / 2 B / 700 MHz
+HOST_OPS_PER_CYCLE = 4.0         # A53-class, memory-bound on tensor ops
+OFFLOAD_LAUNCH_CYCLES = 7000.0   # ~10 us driver/DMA setup per offload
+E_MAC = 0.2
+E_LS = 1.0
+E_GB = 6.0
+E_OFFLOAD = 146.0 * E_GB         # per word shipped to/from the host
+LIP_TRAD_FRACTION = 0.8          # suite-wide trad/non-trad resource split
+MISALIGN_FACTOR = 3.9            # strided (format-inconsistent) load penalty
+                                 # = the paper's max loop-exchange gain (§4.3)
+TIP_ISSUE_CYCLES = 2000.0        # per-instruction-group issue/drain bubble
+
+
+@dataclass
+class NodeCost:
+    name: str
+    kind: str                    # "gconv" | "movement" | "offload"
+    cycles: float = 0.0
+    load_cycles: float = 0.0
+    latency: float = 0.0
+    movement: Dict[str, float] = field(default_factory=dict)
+    energy: float = 0.0
+    traditional: bool = True
+    mapping: Optional[Mapping] = None
+
+
+@dataclass
+class ChainCost:
+    chain_name: str
+    accel: str
+    mode: str
+    nodes: List[NodeCost]
+
+    @property
+    def latency(self) -> float:
+        return sum(n.latency for n in self.nodes)
+
+    @property
+    def compute_cycles(self) -> float:
+        return sum(n.cycles for n in self.nodes)
+
+    @property
+    def movement_words(self) -> float:
+        return sum(sum(n.movement.values()) for n in self.nodes)
+
+    @property
+    def energy(self) -> float:
+        return sum(n.energy for n in self.nodes)
+
+    @property
+    def offload_latency(self) -> float:
+        return sum(n.latency for n in self.nodes if n.kind == "offload")
+
+    def summary(self) -> dict:
+        return dict(chain=self.chain_name, accel=self.accel, mode=self.mode,
+                    latency=self.latency, cycles=self.compute_cycles,
+                    movement=self.movement_words, energy=self.energy,
+                    offload_latency=self.offload_latency)
+
+
+def _movement_node_cost(node, chain: Chain, spec: AcceleratorSpec,
+                        traditional: bool) -> NodeCost:
+    elems = node.out_elems
+    bw = max(spec.gb_bandwidth.values())
+    return NodeCost(name=node.name, kind="movement",
+                    latency=elems / bw, load_cycles=elems / bw,
+                    movement={"I": elems, "O": elems},
+                    energy=2 * elems * E_GB, traditional=traditional)
+
+
+def _gconv_node_cost(g: GConv, spec: AcceleratorSpec,
+                     load_width: Dict[str, int] = None,
+                     im2col: bool = False,
+                     energy_overhead: float = 0.0,
+                     mapping: Optional[Mapping] = None,
+                     k_actual_elems: Optional[int] = None) -> NodeCost:
+    m = mapping if mapping is not None else map_gconv(g, spec)
+    mov = dict(m.movement())
+    if g.main == "none":
+        mov["K"] = 0.0                      # no kernel parameters at all
+    elif k_actual_elems is not None and g.k_elems > 0:
+        # broadcast kernels (Table 2: FP1 as FP2's kernel, etc.) only move
+        # their actual elements, not the full per-dim k_size product
+        mov["K"] = mov["K"] * min(1.0, k_actual_elems / g.k_elems)
+    if im2col:
+        # TIP path: inputs replicated into matrix columns — overlap-reuse
+        # becomes data replication (paper Fig. 1(c) / Table 1(b) col 1).
+        repl = 1.0
+        for d in g.dims:
+            unique = d.ng * d.nips
+            loaded = d.ng * d.nopc * d.nks
+            repl *= max(1.0, loaded / unique)
+        mov["I"] = mov["I"] * repl
+    load = {}
+    for t in mov:
+        bw = max(1, spec.gb_bandwidth.get(t, 1))
+        aligned = (load_width or {}).get(t, True)
+        # format misalignment only hurts scratchpad loading (§4.3 is about
+        # the ILS fill path); stream-from-GB accelerators (ls=1) don't care
+        penalize = (not aligned) and spec.ls.get(t, 1) > 1
+        load[t] = mov[t] / bw * (MISALIGN_FACTOR if penalize else 1.0)
+    cycles = m.cycles()
+    latency = max(float(cycles), *load.values())
+    energy = (g.macs * E_MAC + g.macs * E_LS
+              + sum(mov.values()) * E_GB)
+    energy *= (1.0 + energy_overhead)
+    return NodeCost(name=g.name, kind="gconv", cycles=cycles,
+                    load_cycles=max(load.values()), latency=latency,
+                    movement=mov, energy=energy, mapping=m)
+
+
+def _offload_node_cost(node, chain: Chain) -> NodeCost:
+    """Ship inputs out + results back over PCIe; compute on the host."""
+    if isinstance(node, GConv):
+        in_elems, out_elems, macs = node.in_elems, node.out_elems, node.macs
+    else:
+        out_elems = node.out_elems
+        in_elems, macs = out_elems, 0
+    transfer = (in_elems + out_elems) / PCIE_WORDS_PER_CYCLE
+    host = macs / HOST_OPS_PER_CYCLE
+    return NodeCost(name=node.name, kind="offload",
+                    latency=OFFLOAD_LAUNCH_CYCLES + transfer + host,
+                    load_cycles=transfer,
+                    movement={"I": in_elems, "O": out_elems},
+                    energy=(in_elems + out_elems) * E_OFFLOAD,
+                    traditional=False)
+
+
+# ---------------------------------------------------------------------------
+# GCONV Chain path
+# ---------------------------------------------------------------------------
+def gconv_chain_cost(chain: Chain, spec: AcceleratorSpec,
+                     consistent: bool = True,
+                     energy_overhead: float = 0.19) -> ChainCost:
+    """Every node auto-mapped on the full array (paper's GC-<accel>).
+
+    ``energy_overhead`` charges the GCONV augmentation (instruction buffers,
+    generalized main/reduce ALUs): +19 % power per paper Fig. 17.
+    """
+    mappings: Dict[str, Mapping] = {}
+    for name, node in chain.nodes.items():
+        if isinstance(node, GConv):
+            mappings[name] = map_gconv(node, spec)
+    # §4.3 consistent mapping between chain producer/consumer pairs: where
+    # the consumer's load format can be made consistent with the producer's
+    # store format (loop exchange), intermediate loads run at full bus width;
+    # otherwise they pay the strided-access penalty.
+    aligned: Dict[str, bool] = {}
+    for name, node in chain.nodes.items():
+        if not isinstance(node, GConv):
+            continue
+        prod = node.input
+        if prod in mappings:
+            if consistent:
+                w = apply_loop_exchange(mappings[prod], mappings[name])
+            else:
+                from .mapping import consistent_load_width
+                w = consistent_load_width(mappings[prod], mappings[name])
+            aligned[name] = w > 1
+        else:
+            aligned[name] = True       # chain inputs stream from DRAM
+    nodes = []
+    for name, node in chain.nodes.items():
+        trad = chain.meta.get(name, {}).get("traditional", True)
+        if isinstance(node, (Concat, Movement)):
+            nodes.append(_movement_node_cost(node, chain, spec, trad))
+        else:
+            lw = {"I": aligned.get(name, True)}
+            nc = _gconv_node_cost(node, spec, load_width=lw,
+                                  energy_overhead=energy_overhead,
+                                  mapping=mappings[name],
+                                  k_actual_elems=_k_elems(chain, node))
+            nc.traditional = trad
+            nodes.append(nc)
+    return ChainCost(chain.name, spec.name, "gconv", nodes)
+
+
+def _k_elems(chain: Chain, g: GConv) -> Optional[int]:
+    if g.kernel is None:
+        return None
+    n = 1
+    for s in chain.shape_of(g.kernel):
+        n *= s
+    return n
+
+
+# ---------------------------------------------------------------------------
+# baseline paths (§6.2)
+# ---------------------------------------------------------------------------
+def baseline_cost(chain: Chain, spec: AcceleratorSpec) -> ChainCost:
+    kind = spec.kind
+    nodes: List[NodeCost] = []
+    # baselines do not coordinate producer/consumer storage formats across
+    # layers (that is the §4.3 GCONV-Chain feature): evaluate the natural
+    # (exchange-free) load alignment between consecutive on-chip nodes
+    aligned = _natural_alignment(chain, spec)
+    if kind == "CIP":
+        for name, node in chain.nodes.items():
+            trad = chain.meta.get(name, {}).get("traditional", False)
+            if trad and isinstance(node, GConv):
+                nc = _gconv_node_cost(node, spec, energy_overhead=0.0,
+                                      load_width={"I": aligned.get(name,
+                                                                   True)},
+                                      k_actual_elems=_k_elems(chain, node))
+                nc.traditional = True
+                nodes.append(nc)
+            else:
+                nodes.append(_offload_node_cost(node, chain))
+        return ChainCost(chain.name, spec.name, "baseline", nodes)
+
+    if kind == "TIP":
+        # TIPs issue explicit load + matrix/vector instructions per op and
+        # cannot fuse (pre/post operators don't exist): every intermediate
+        # round-trips the GB, plus a per-op issue/drain bubble (paper Fig. 12:
+        # TPU all-busy 31%; Fig. 15: 2.6x worse code density than GC-CIP).
+        for name, node in chain.nodes.items():
+            trad = chain.meta.get(name, {}).get("traditional", False)
+            if isinstance(node, (Concat, Movement)):
+                nodes.append(_movement_node_cost(node, chain, spec, trad))
+            else:
+                nc = _gconv_node_cost(node, spec, im2col=True,
+                                      energy_overhead=0.0,
+                                      load_width={"I": aligned.get(name,
+                                                                   True)},
+                                      k_actual_elems=_k_elems(chain, node))
+                nc.latency += TIP_ISSUE_CYCLES
+                nc.traditional = trad
+                nodes.append(nc)
+        return ChainCost(chain.name, spec.name, "baseline", nodes)
+
+    if kind == "LIP":
+        # Fixed two-stage pipeline. Resources split by the suite-wide ratio;
+        # per-layer cycles scale inversely with the allotted fraction, and the
+        # pipeline throughput is set by the slower stage (bubbles in the
+        # other — paper Table 1(b) col 3).
+        r = LIP_TRAD_FRACTION
+        t_time = n_time = 0.0
+        for name, node in chain.nodes.items():
+            trad = chain.meta.get(name, {}).get("traditional", False)
+            if isinstance(node, (Concat, Movement)):
+                nc = _movement_node_cost(node, chain, spec, trad)
+            else:
+                nc = _gconv_node_cost(node, spec, energy_overhead=0.0,
+                                      load_width={"I": aligned.get(name,
+                                                                   True)},
+                                      k_actual_elems=_k_elems(chain, node))
+                nc.traditional = trad
+            scale = (1.0 / r) if trad else (1.0 / (1.0 - r))
+            nc.latency *= scale
+            nc.cycles *= scale
+            if trad:
+                t_time += nc.latency
+            else:
+                n_time += nc.latency
+            nodes.append(nc)
+        cost = ChainCost(chain.name, spec.name, "baseline", nodes)
+        cost.pipeline_stage_times = (t_time, n_time)     # type: ignore
+        return cost
+
+    raise ValueError(f"no baseline semantics for accelerator kind {kind!r}")
+
+
+def _natural_alignment(chain: Chain, spec: AcceleratorSpec):
+    """Exchange-free producer/consumer format consistency per node."""
+    from .mapping import consistent_load_width
+
+    mappings = {}
+    for name, node in chain.nodes.items():
+        if isinstance(node, GConv):
+            mappings[name] = map_gconv(node, spec)
+    out = {}
+    for name, node in chain.nodes.items():
+        if not isinstance(node, GConv):
+            continue
+        prod = node.input
+        if prod in mappings:
+            out[name] = consistent_load_width(
+                mappings[prod], mappings[name]) > 1
+        else:
+            out[name] = True       # chain inputs stream from DRAM
+    return out
+
+
+def lip_utilization(cost: ChainCost) -> float:
+    """All-busy fraction of the 2-stage LIP pipeline (paper Fig. 12)."""
+    t, n = getattr(cost, "pipeline_stage_times", (0.0, 0.0))
+    hi = max(t, n)
+    if hi == 0:
+        return 1.0
+    return min(t, n) / hi
+
+
+def speedup(chain: Chain, spec: AcceleratorSpec, consistent: bool = True,
+            fuse: bool = True) -> Tuple[float, ChainCost, ChainCost]:
+    """End-to-end GCONV-Chain-vs-baseline speedup (paper Fig. 14 method):
+    the GC path runs the full compiler pipeline (§4.3 fusion + consistent
+    mapping); the baseline runs the accelerator's native mode."""
+    from .fusion import fuse_chain
+
+    base = baseline_cost(chain, spec)
+    if spec.kind == "LIP":
+        base_latency = max(getattr(base, "pipeline_stage_times"))
+    else:
+        base_latency = base.latency
+    gchain = fuse_chain(chain)[0] if fuse else chain
+    gc = gconv_chain_cost(gchain, spec, consistent=consistent)
+    return base_latency / gc.latency, base, gc

@@ -1,0 +1,149 @@
+"""Operation fusion (paper §4.3).
+
+"We apply operation fusion by fusing the GCONVs with no *reduce* operator
+into the pre, post or main operators of their consumer or producer. [...]
+Since the outputs only need to be processed once, fusing to the post operator
+is preferred. After fusion, the pre and post operators may have more than one
+parameter."
+
+A GCONV is *fusible* when it performs no reduction (all ``Nks==1``, reduce ==
+'none') and no replication (all ``Nop==1`` — its output is elementwise in its
+input). Two directions, tried in order:
+
+  1. **producer-post** (preferred): if its input is a GCONV node whose sole
+     consumer it is, its pre/main/post collapse into the producer's ``post``
+     sequence (the elementwise kernel, if any, becomes a tensor-operand
+     ``post`` op — this is how FP2's ``-mu`` rides on FP1's output path).
+  2. **consumer-pre**: otherwise, if every consumer reads it as ``input``,
+     its operation is replicated into each consumer's ``pre`` sequence
+     (paper: "FP2 can be processed as the pre of FP3 and FP4").
+
+Either way one intermediate tensor is never materialized in the global
+buffer; the eliminated movement is returned for the Fig.-18-style benchmark.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+from .chain import Chain, Concat, Movement
+from .gconv import GConv, Op
+
+# main operators expressible as a unary op with a tensor operand
+_MAIN_AS_UNARY = {"mul": "mul", "add": "add", "sub": "sub", "rsub": "rsub",
+                  "div": "div", "max": "maximum"}
+
+
+@dataclass
+class FusionReport:
+    before_len: int
+    after_len: int
+    fused: List[str]
+    saved_elems: int
+
+    @property
+    def length_reduction(self) -> float:
+        return 1.0 - self.after_len / max(1, self.before_len)
+
+
+def _is_fusible(g: GConv) -> bool:
+    if g.reduce != "none":
+        return False
+    if any(d.nks > 1 or d.nop > 1 for d in g.dims):
+        return False
+    if g.main != "none" and g.main not in _MAIN_AS_UNARY:
+        return False
+    return True
+
+
+def _as_unary_ops(g: GConv) -> Tuple[Op, ...]:
+    """The fusible GCONV's whole computation as a pre/post op sequence."""
+    ops = tuple(g.pre)
+    if g.main != "none":
+        ops += (Op(_MAIN_AS_UNARY[g.main], operand=g.kernel),)
+    ops += tuple(g.post)
+    return ops
+
+
+def fuse_chain(chain: Chain) -> Tuple[Chain, FusionReport]:
+    """Return a new, fused chain plus the fusion report. Pure (input chain is
+    not mutated); iterates to fixpoint."""
+    import copy
+
+    chain = copy.deepcopy(chain)
+    before_len = len(chain.nodes)
+    fused_names: List[str] = []
+    saved = 0
+    order = list(chain.nodes)
+    positions = {n: i for i, n in enumerate(order)}
+
+    changed = True
+    while changed:
+        changed = False
+        consumers = chain.consumers()
+        for name in list(chain.nodes):
+            node = chain.nodes.get(name)
+            if node is None or not isinstance(node, GConv):
+                continue
+            if not _is_fusible(node):
+                continue
+            if name in chain.outputs:
+                continue
+            cons = consumers.get(name, [])
+            if not cons:
+                continue
+            # never eliminate a tensor someone consumes as kernel/operand
+            used_as_input_only = all(
+                isinstance(chain.nodes[c], GConv)
+                and chain.nodes[c].input == name
+                and chain.nodes[c].kernel != name
+                and all(op.operand != name for op in
+                        tuple(chain.nodes[c].pre) + tuple(chain.nodes[c].post))
+                for c in cons)
+            if not used_as_input_only:
+                continue
+            unary = _as_unary_ops(node)
+            # operand tensors must already exist before the fusion target
+            producer = node.input
+            # --- direction 1: fuse into producer's post --------------------
+            prod_node = chain.nodes.get(producer)
+            if (isinstance(prod_node, GConv)
+                    and consumers.get(producer, []) == [name]
+                    and producer not in chain.outputs
+                    and tuple(chain.shape_of(producer)) == node.out_shape
+                    and all(op.operand is None
+                            or positions.get(op.operand, -1)
+                            < positions[producer]
+                            for op in unary)):
+                prod_node.post = tuple(prod_node.post) + unary
+                for c in cons:
+                    cn = chain.nodes[c]
+                    cn.input = producer  # type: ignore[union-attr]
+                del chain.nodes[name]
+                chain.meta.pop(name, None)
+                fused_names.append(f"{name}->post({producer})")
+                saved += node.out_elems
+                changed = True
+                break
+            # --- direction 2: fuse into every consumer's pre ---------------
+            ok = all(
+                positions.get(op.operand, -1) < positions[c]
+                for c in cons for op in unary if op.operand is not None)
+            same_shape = tuple(chain.shape_of(node.input)) == node.out_shape
+            if ok and same_shape:
+                for c in cons:
+                    cn = chain.nodes[c]
+                    cn.pre = unary + tuple(cn.pre)   # type: ignore
+                    cn.input = node.input            # type: ignore
+                del chain.nodes[name]
+                chain.meta.pop(name, None)
+                fused_names.append(f"{name}->pre({','.join(cons)})")
+                saved += node.out_elems
+                changed = True
+                break
+        if changed:
+            consumers = chain.consumers()
+    chain.validate()
+    return chain, FusionReport(before_len, len(chain.nodes),
+                               fused_names, saved)

@@ -1,0 +1,158 @@
+"""Pure-JAX GCONV chain interpreter (the semantic oracle).
+
+Executes a :class:`~repro.core.chain.Chain` node by node, realizing the paper's
+nested-loop semantics (Fig. 4) with vectorized JAX ops. Per dimension the input
+axis (size ``Ng*Nips``) is viewed as ``(Ng, Nips)``, padded with the *reduce
+identity*, and expanded into sliding windows ``(Ng, Nopc, Nks)``; the kernel
+axis is viewed as ``(Ng, Nop, Nks)``; ``main`` combines them with broadcasting
+and ``reduce`` folds every ``Nks`` axis, yielding ``(Ng, Nop, Nopc)`` per
+dimension, re-flattened to the output axis.
+
+This is deliberately the *simple, obviously-correct* realization: it is the
+oracle against which the mapped/fused/Pallas execution paths are tested. It is
+only meant to run at test sizes (the expanded main-operand tensor has
+``macs`` elements).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Mapping, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import operators as ops
+from .chain import Chain, Concat, Movement
+from .gconv import DimSpec, GConv
+
+
+def _window_axis(x: jnp.ndarray, axis: int, d: DimSpec, pad_val: float):
+    """(…, Ng*Nips, …) -> (…, Ng, Nopc, Nks, …) at ``axis``."""
+    x = jnp.moveaxis(x, axis, -1)
+    lead = x.shape[:-1]
+    x = x.reshape(lead + (d.ng, d.nips))
+    if d.padr < 0:                      # crop: trailing elements never read
+        x = x[..., : d.nips + d.padr]
+    if d.pad > 0 or d.padr > 0:
+        pad = [(0, 0)] * (x.ndim - 1) + [(d.pad, max(d.padr, 0))]
+        x = jnp.pad(x, pad, constant_values=pad_val)
+    # gather windows: idx[opc, ks] = opc*s + ks
+    idx = (np.arange(d.nopc)[:, None] * d.stride + np.arange(d.nks)[None, :])
+    x = x[..., idx]                     # (…, Ng, Nopc, Nks)
+    return x
+
+
+def eval_gconv(node: GConv,
+               x: jnp.ndarray,
+               k: Optional[jnp.ndarray],
+               operand_lookup: Optional[Callable] = None) -> jnp.ndarray:
+    """Evaluate one GCONV on concrete arrays (oracle semantics)."""
+    nd = len(node.dims)
+    compute_dtype = jnp.result_type(x.dtype, jnp.float32)
+    x = x.astype(compute_dtype)
+    # pre operators act on the loaded inputs (before windowing / padding)
+    x = ops.apply_unary_seq(node.pre, x, operand_lookup)
+    pad_val = ops.pad_value(node.reduce)
+    # expand each dim into (g, opc, ks); axes triple per original dim
+    for i, d in enumerate(node.dims):
+        # current position of the i-th original axis = 3*i (each processed dim
+        # has been replaced by 3 axes in-place)
+        x = _window_axis(x, 3 * i, d, pad_val)
+        # _window_axis moves the processed axis to the end; bring the triple
+        # back to position 3*i
+        x = jnp.moveaxis(x, (-3, -2, -1), (3 * i, 3 * i + 1, 3 * i + 2))
+    # x now has per-dim axes (g, opc, ks); insert op axis -> (g, op, opc, ks)
+    x_shape = []
+    for i, d in enumerate(node.dims):
+        x_shape += [d.ng, 1, d.nopc, d.nks]
+    x = x.reshape(x_shape)
+    if node.main != "none":
+        assert k is not None
+        k = k.astype(compute_dtype)
+        k_shape = []
+        for i, d in enumerate(node.dims):
+            if k.shape[i] == 1:
+                k_shape += [1, 1, 1, 1]
+            else:
+                k_shape += [d.ng, d.nop, 1, d.nks]
+        k = k.reshape(k_shape)
+        y = ops.apply_main(node.main, x, k)
+    else:
+        y = x
+    ks_axes = tuple(4 * i + 3 for i in range(nd))
+    y = ops.apply_reduce(node.reduce, y, ks_axes)
+    if node.reduce == "none":
+        y = y.reshape([s for i, s in enumerate(y.shape) if i % 4 != 3])
+    # y axes per dim: (g, op, opc) -> flatten to out axis
+    y = y.reshape(node.out_shape)
+    y = ops.apply_unary_seq(node.post, y, operand_lookup)
+    if node.out_dtype is not None:
+        y = y.astype(node.out_dtype)
+    return y
+
+
+class ChainExecutor:
+    """Executes a chain on concrete inputs/params, returns all node outputs."""
+
+    def __init__(self, chain: Chain):
+        chain.validate()
+        self.chain = chain
+
+    def init_params(self, key, scale: float = 0.1) -> Dict[str, jnp.ndarray]:
+        out = {}
+        for name, info in self.chain.params.items():
+            key, sub = jax.random.split(key)
+            out[name] = scale * jax.random.normal(
+                sub, info.shape, dtype=info.dtype)
+        return out
+
+    def __call__(self,
+                 inputs: Mapping[str, jnp.ndarray],
+                 params: Optional[Mapping[str, jnp.ndarray]] = None,
+                 keep_all: bool = False) -> Dict[str, jnp.ndarray]:
+        params = params or {}
+        env: Dict[str, jnp.ndarray] = {}
+        for name, info in self.chain.inputs.items():
+            if name not in inputs:
+                raise ValueError(f"missing chain input {name!r}")
+            arr = jnp.asarray(inputs[name])
+            if tuple(arr.shape) != info.shape:
+                raise ValueError(
+                    f"input {name!r}: got {arr.shape}, want {info.shape}")
+            env[name] = arr
+        for name, info in self.chain.params.items():
+            if name not in params:
+                raise ValueError(f"missing chain param {name!r}")
+            env[name] = jnp.asarray(params[name])
+
+        lookup = lambda op: env[op.operand]
+        for name, node in self.chain.nodes.items():
+            if isinstance(node, Concat):
+                env[name] = jnp.concatenate(
+                    [env[r] for r in node.inputs], axis=node.axis)
+            elif isinstance(node, Movement):
+                x = env[node.input]
+                if node.pre_shape is not None:
+                    x = x.reshape(node.pre_shape)
+                if node.perm is not None:
+                    x = jnp.transpose(x, node.perm)
+                for ax in node.flip:
+                    x = jnp.flip(x, axis=ax)
+                if node.gather:
+                    # runtime-dependent selection (RoI boxes / NMS) is
+                    # modeled as a deterministic stand-in: cycle through the
+                    # flattened source (movement cost is what matters here)
+                    flat = x.reshape(-1)
+                    n = node.out_elems
+                    reps = -(-n // flat.size)
+                    flat = jnp.tile(flat, reps)[:n]
+                    env[name] = flat.reshape(node.out_shape)
+                else:
+                    env[name] = x.reshape(node.out_shape)
+            else:
+                k = env[node.kernel] if node.kernel is not None else None
+                env[name] = eval_gconv(node, env[node.input], k, lookup)
+        if keep_all:
+            return env
+        outs = self.chain.outputs or [list(self.chain.nodes)[-1]]
+        return {o: env[o] for o in outs}

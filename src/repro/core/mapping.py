@@ -1,0 +1,339 @@
+"""GCONV mapping (paper §4.1, Algorithm 1) generalized over accelerators.
+
+The mapper unrolls the 4-loops-per-dimension nest of a GCONV
+  * **spatially** onto the accelerator's spatial unrolling dimensions
+    (PE-array axes; which loop goes to which axis decides parallel reuse and
+    whether the axis' special function — reduce links, output bandwidth,
+    overlap primitive — is exploited), and
+  * **temporally** into the local scratchpads (deciding per-PE data reuse).
+
+Faithful to Algorithm 1: overlap-reuse primitives are allocated first to any
+dimension with overlap-reuse (not hardwired to W/H); then spatial dims fill by
+their per-accelerator parameter priority; then temporal unrolling fills the
+scratchpads; remaining loops are appended outside the reuse pointers. Per
+§4.4, different accelerators only change the priorities and resources.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field, replace
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .accelerators import AcceleratorSpec, SpatialDim
+from .gconv import DimSpec, GConv
+
+PARAMS = ("ks", "opc", "op", "g")
+# Algorithm 1 iterates dimensions in ["W","H","C","B"] order; we generalize to
+# "reversed axis order" (innermost/fastest-varying first) for N-D GCONVs.
+
+
+@dataclass(frozen=True)
+class Entry:
+    param: str          # 'ks' | 'opc' | 'op' | 'g'
+    dim: str            # dimension name
+    factor: int
+    where: str          # spatial dim name, or "T" for temporal
+    sliding: bool = False   # overlap-reuse primitive: loads s new inputs/step
+
+    def pretty(self) -> str:
+        tag = "~" if self.sliding else ""
+        return f"[{self.param},{self.dim},{self.factor}]{tag}@{self.where}"
+
+
+def _loop_counts(g: GConv) -> Dict[str, Dict[str, int]]:
+    return {d.name: {"g": d.ng, "op": d.nop, "opc": d.nopc, "ks": d.nks}
+            for d in g.dims}
+
+
+def _dim_order(g: GConv) -> List[str]:
+    return [d.name for d in reversed(g.dims)]
+
+
+def factors_by(entries: Sequence[Entry]) -> Dict[Tuple[str, str], int]:
+    """(param, dim) -> product of unrolling factors."""
+    out: Dict[Tuple[str, str], int] = {}
+    for e in entries:
+        key = (e.param, e.dim)
+        out[key] = out.get(key, 1) * e.factor
+    return out
+
+
+def tile_sizes(entries: Sequence[Entry], g: GConv) -> Dict[str, int]:
+    """Paper Table 3: data footprint of a set of unrollings, per data type."""
+    f = factors_by(entries)
+    I = K = O = 1
+    for d in g.dims:
+        pg = f.get(("g", d.name), 1)
+        pop = f.get(("op", d.name), 1)
+        popc = f.get(("opc", d.name), 1)
+        pks = f.get(("ks", d.name), 1)
+        I *= pg * (pks + d.stride * (popc - 1))
+        K *= pg * pop * pks
+        O *= pg * pop * popc
+    return {"I": I, "K": K, "O": O}
+
+
+# which data types grow when unrolling parameter p (Table 3 reuse columns)
+_AFFECTS = {"ks": ("I", "K"), "opc": ("I", "O"), "op": ("K", "O"),
+            "g": ("I", "K", "O")}
+
+
+@dataclass
+class Mapping:
+    gconv: GConv
+    spec: AcceleratorSpec
+    spatial: List[Entry] = field(default_factory=list)
+    temporal: List[Entry] = field(default_factory=list)   # innermost first
+
+    # ------------------------------------------------------------------
+    @property
+    def spatial_factors(self) -> Dict[Tuple[str, str], int]:
+        return factors_by(self.spatial)
+
+    def cycles(self) -> int:
+        """Paper Eq. (6): computation cycles from spatial unrolling."""
+        sp = self.spatial_factors
+        cyc = 1
+        for d in self.gconv.dims:
+            for p in PARAMS:
+                n = {"g": d.ng, "op": d.nop, "opc": d.nopc, "ks": d.nks}[p]
+                cyc *= math.ceil(n / sp.get((p, d.name), 1))
+        return cyc
+
+    def pe_utilization(self) -> float:
+        used = 1
+        for e in self.spatial:
+            used *= e.factor
+        return used / self.spec.n_pes
+
+    def pointer(self, dtype: str) -> int:
+        """Index of the last temporal entry whose prefix tile still fits the
+        ``dtype`` scratchpad (paper's ilst/olst/klst). -1 if even the first
+        entry overflows; sliding entries count as inside (they stream)."""
+        cap = self.spec.ls[dtype]
+        ptr = -1
+        for i in range(len(self.temporal)):
+            e = self.temporal[i]
+            if e.sliding and dtype == "I":
+                ptr = i
+                continue
+            tile = tile_sizes(
+                [t for t in self.temporal[: i + 1]
+                 if not (t.sliding and dtype == "I")], self.gconv)[dtype]
+            if tile <= cap:
+                ptr = i
+            else:
+                break
+        return ptr
+
+    def movement(self) -> Dict[str, int]:
+        """Paper Eqs. (7)-(10): GB<->array words moved per data type."""
+        out = {}
+        sp_tiles = tile_sizes(self.spatial, self.gconv)
+        for dtype in ("I", "K", "O"):
+            ptr = self.pointer(dtype)
+            inside = [t for t in self.temporal[: ptr + 1]]
+            in_tile = tile_sizes(inside, self.gconv)[dtype]      # per PE
+            reloads = 1
+            for e in self.temporal[ptr + 1:]:
+                reloads *= e.factor                              # Eq. (8)
+            out[dtype] = reloads * sp_tiles[dtype] * in_tile     # Eq. (10)
+        return out
+
+    def load_cycles(self, load_width: Dict[str, int] = None) -> Dict[str, float]:
+        mov = self.movement()
+        lw = load_width or {}
+        out = {}
+        for dtype, m in mov.items():
+            bw = self.spec.gb_bandwidth.get(dtype, 1)
+            out[dtype] = m / max(1, min(bw, lw.get(dtype, bw)))
+        return out
+
+    def latency(self, load_width: Dict[str, int] = None) -> float:
+        """max(compute, per-type load) — systolic load/compute overlap."""
+        return max(self.cycles(), *self.load_cycles(load_width).values())
+
+    def pretty(self) -> str:
+        sp = " ".join(e.pretty() for e in self.spatial)
+        tp = " ".join(e.pretty() for e in self.temporal)
+        return (f"{self.gconv.name}@{self.spec.name}: spatial[{sp}] "
+                f"temporal[{tp}] cycles={self.cycles()}")
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1
+# ---------------------------------------------------------------------------
+def map_gconv(g: GConv, spec: AcceleratorSpec) -> Mapping:
+    m = Mapping(gconv=g, spec=spec)
+    loops = _loop_counts(g)
+    dims = {d.name: d for d in g.dims}
+    order = _dim_order(g)
+    remaining = {s.name: s.size for s in spec.spatial}
+
+    def unroll_spatial(sname: str, p: str, d: str,
+                       insert_at: Optional[int] = None) -> int:
+        uf = min(remaining[sname], loops[d][p])
+        if uf <= 1:
+            return 0
+        loops[d][p] = math.ceil(loops[d][p] / uf)
+        remaining[sname] = remaining[sname] // uf
+        e = Entry(p, d, uf, sname)
+        if insert_at is None:
+            m.spatial.append(e)
+        else:
+            m.spatial.insert(insert_at, e)
+        return uf
+
+    def ls_max_factor(p: str, d: str, prefix: List[Entry]) -> int:
+        """Largest factor of Loop[d][p] whose temporal tile fits every
+        affected scratchpad (binary search; Table 3 is monotone in f)."""
+        hi = loops[d][p]
+        if hi <= 1:
+            return 0
+        lo_ok = 0
+        lo, hicur = 1, hi
+        while lo <= hicur:
+            mid = (lo + hicur) // 2
+            cand = prefix + [Entry(p, d, mid, "T")]
+            tiles = tile_sizes(cand, g)
+            if all(tiles[t] <= spec.ls[t] for t in _AFFECTS[p]):
+                lo_ok = mid
+                lo = mid + 1
+            else:
+                hicur = mid - 1
+        return lo_ok
+
+    # ---- Lines 7-13: overlap-reuse primitives -----------------------------
+    overlap_dims = [d for d in order if dims[d].has_overlap_reuse]
+    sliding_entries: List[Entry] = []
+    if spec.has_overlap_primitive and overlap_dims:
+        ov_spatial = [s for s in spec.spatial if s.overlap]
+        d0 = overlap_dims[0]
+        if len(ov_spatial) >= 2:
+            # Eyeriss-style: ks vertically (reduce links), opc horizontally
+            red = next((s for s in ov_spatial if s.reduce), ov_spatial[0])
+            oth = next((s for s in ov_spatial if s.name != red.name),
+                       ov_spatial[-1])
+            unroll_spatial(red.name, "ks", d0)
+            unroll_spatial(oth.name, "opc", d0)
+        else:
+            unroll_spatial(ov_spatial[0].name, "ks", d0)
+            unroll_spatial(ov_spatial[0].name, "opc", d0)
+        if len(overlap_dims) > 1:
+            # second overlap-reuse dim -> temporal primitive (Fig. 8a):
+            # Loop[d][ks] into ILS, then Loop[d][opc] slides (s new inputs).
+            d1 = overlap_dims[1]
+            f = ls_max_factor("ks", d1, m.temporal)
+            if f > 1:
+                loops[d1]["ks"] = math.ceil(loops[d1]["ks"] / f)
+                m.temporal.append(Entry("ks", d1, f, "T"))
+            if loops[d1]["opc"] > 1:
+                e = Entry("opc", d1, loops[d1]["opc"], "T", sliding=True)
+                sliding_entries.append(e)
+                loops[d1]["opc"] = 1
+
+    # ---- Lines 14-19: fill the spatial dims by priority --------------------
+    for sdim in spec.spatial:
+        for p in sdim.priority:
+            for d in order:
+                unroll_spatial(sdim.name, p, d)
+
+    # ---- Lines 20-22: temporal unrolling to fill local scratchpads ---------
+    for p in spec.temporal_priority:
+        for d in order:
+            f = ls_max_factor(p, d, m.temporal)
+            if f > 1:
+                loops[d][p] = math.ceil(loops[d][p] / f)
+                m.temporal.append(Entry(p, d, f, "T"))
+    # the sliding opc of the temporal overlap primitive sits right after the
+    # scratchpad-resident region (it streams, loading s inputs per step)
+    m.temporal.extend(sliding_entries)
+
+    # ---- Lines 23-25: append every remaining loop --------------------------
+    for p in ("opc", "op", "ks", "g"):
+        for d in order:
+            if loops[d][p] > 1:
+                m.temporal.append(Entry(p, d, loops[d][p], "T"))
+                loops[d][p] = 1
+    return m
+
+
+# ---------------------------------------------------------------------------
+# §4.3 consistent mapping: loop exchange
+# ---------------------------------------------------------------------------
+_OUT_PARAMS = ("opc", "op", "g")      # output-indexing params -> store format
+_IN_PARAMS = ("ks", "opc", "g")       # input-indexing params  -> load format
+
+
+def store_format(m: Mapping) -> Optional[Tuple[str, int]]:
+    """(dim, width) of the producer's output storage: the innermost
+    output-indexing unrolling on a non-reduce spatial dim (outputs unrolled in
+    px are collected in parallel — paper Fig. 10(c))."""
+    for e in m.spatial:
+        sd = m.spec.spatial_by_name(e.where)
+        if not sd.reduce and e.param in _OUT_PARAMS:
+            return (e.dim, e.factor)
+    return None
+
+
+def load_format(m: Mapping) -> Optional[Tuple[str, int]]:
+    """(dim, width) the consumer wants to load in parallel: the innermost
+    input-indexing temporal unrolling (paper Fig. 10(d))."""
+    for e in m.temporal:
+        if e.param in _IN_PARAMS:
+            return (e.dim, e.factor)
+    return None
+
+
+def consistent_load_width(producer: Mapping, consumer: Mapping) -> int:
+    sf, lf = store_format(producer), load_format(consumer)
+    if sf is None or lf is None:
+        return 1
+    return lf[1] if sf[0] == lf[0] else 1
+
+
+def apply_loop_exchange(producer: Mapping, consumer: Mapping) -> int:
+    """Make the consumer's load format consistent with the producer's store
+    format by exchanging unrolling loops (paper Fig. 10(e)). Tries, in order:
+    (1) exchange within the consumer's temporal list; (2) exchange within the
+    producer's spatial (px) list. Returns the resulting parallel load width.
+
+    Per the paper, a legal exchange "does not affect the performance or data
+    movement based on Equations (6) and (10)"; an exchange that would move an
+    entry across a reuse pointer *does* change Eq. (10), so such candidates
+    are rejected (movement snapshot + revert)."""
+    sf = store_format(producer)
+    if sf is None:
+        return 1
+    want_dim = sf[0]
+    # (1) find an input-indexing temporal entry of the consumer on want_dim
+    for i, e in enumerate(consumer.temporal):
+        if e.param in _IN_PARAMS and e.dim == want_dim:
+            first = next((j for j, t in enumerate(consumer.temporal)
+                          if t.param in _IN_PARAMS), None)
+            if first is not None and first != i:
+                before = consumer.movement()
+                consumer.temporal[first], consumer.temporal[i] = (
+                    consumer.temporal[i], consumer.temporal[first])
+                after = consumer.movement()
+                if any(after[t] > before[t] for t in before):
+                    consumer.temporal[first], consumer.temporal[i] = (
+                        consumer.temporal[i], consumer.temporal[first])
+                    continue
+            return consistent_load_width(producer, consumer)
+    # (2) exchange in the producer: promote a px entry matching the
+    # consumer's current load dim
+    lf = load_format(consumer)
+    if lf is None:
+        return 1
+    px_entries = [(i, e) for i, e in enumerate(producer.spatial)
+                  if not producer.spec.spatial_by_name(e.where).reduce
+                  and e.param in _OUT_PARAMS]
+    for i, e in px_entries:
+        if e.dim == lf[0]:
+            j = px_entries[0][0]
+            if j != i:
+                producer.spatial[j], producer.spatial[i] = (
+                    producer.spatial[i], producer.spatial[j])
+            return consistent_load_width(producer, consumer)
+    return consistent_load_width(producer, consumer)

@@ -1,0 +1,127 @@
+"""GCONV operator registries (paper §3.1).
+
+``pre``/``post`` are elementwise unary ops, optionally parameterized by a
+scalar ``const`` or a broadcastable tensor ``operand`` (fusion, §4.3).
+``main`` combines input and kernel parameter; ``reduce`` folds the Nks taps.
+
+The TPU adaptation (DESIGN.md §2): GCONVs with main=mul/reduce=add run on the
+MXU; every other combination runs on the VPU. The registry records the unit so
+the cost model can price each GCONV correctly.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .gconv import Op
+
+# ---------------------------------------------------------------------------
+# pre/post unary operators: fn(x, const, operand) -> array
+# ---------------------------------------------------------------------------
+_EPS_DEFAULT = 1e-5
+
+
+def _need_operand(name):
+    raise ValueError(f"operator {name!r} requires an operand tensor")
+
+
+UNARY: Dict[str, Callable] = {
+    "id": lambda x, c, p: x,
+    "neg": lambda x, c, p: -x,
+    "abs": lambda x, c, p: jnp.abs(x),
+    "square": lambda x, c, p: x * x,
+    "sqrt": lambda x, c, p: jnp.sqrt(x),
+    "recip": lambda x, c, p: 1.0 / x,
+    "exp": lambda x, c, p: jnp.exp(x),
+    "log": lambda x, c, p: jnp.log(x),
+    "relu": lambda x, c, p: jnp.maximum(x, 0),
+    "gtz": lambda x, c, p: (x > 0).astype(x.dtype),   # relu' (BP mask)
+    "sigmoid": lambda x, c, p: jax.nn.sigmoid(x),
+    "silu": lambda x, c, p: jax.nn.silu(x),
+    "gelu": lambda x, c, p: jax.nn.gelu(x),
+    "tanh": lambda x, c, p: jnp.tanh(x),
+    # scalar-parameterized ("LUT"-class in the paper)
+    "scale": lambda x, c, p: x * c,
+    "add_const": lambda x, c, p: x + c,
+    "pow": lambda x, c, p: x ** c,
+    "rsqrt_eps": lambda x, c, p: jax.lax.rsqrt(x + (c if c is not None else _EPS_DEFAULT)),
+    "leaky_relu": lambda x, c, p: jnp.where(x >= 0, x, x * c),
+    "clip_max": lambda x, c, p: jnp.minimum(x, c),
+    # tensor-parameterized (post-fusion pre/post ops, paper §4.3)
+    "mul": lambda x, c, p: x * p if p is not None else _need_operand("mul"),
+    "add": lambda x, c, p: x + p if p is not None else _need_operand("add"),
+    "sub": lambda x, c, p: x - p if p is not None else _need_operand("sub"),
+    "rsub": lambda x, c, p: p - x if p is not None else _need_operand("rsub"),
+    "div": lambda x, c, p: x / p if p is not None else _need_operand("div"),
+    "maximum": lambda x, c, p: jnp.maximum(x, p) if p is not None else _need_operand("maximum"),
+}
+
+# ---------------------------------------------------------------------------
+# main operators: fn(input_window, kernel_param) -> array
+# ---------------------------------------------------------------------------
+MAIN: Dict[str, Callable] = {
+    "mul": lambda i, k: i * k,
+    "add": lambda i, k: i + k,
+    "sub": lambda i, k: i - k,        # Table 2: FP2, BP4, BP5 use main='-'
+    "rsub": lambda i, k: k - i,
+    "max": lambda i, k: jnp.maximum(i, k),
+    "min": lambda i, k: jnp.minimum(i, k),
+    "sqdiff": lambda i, k: (i - k) * (i - k),
+    "div": lambda i, k: i / k,
+    # "none" handled by the evaluator: pass input through
+}
+
+# ---------------------------------------------------------------------------
+# reduce operators: (associative fn, identity) — identity doubles as pad value
+# ---------------------------------------------------------------------------
+REDUCE: Dict[str, tuple] = {
+    "add": (jnp.add, 0.0),
+    "max": (jnp.maximum, -jnp.inf),
+    "min": (jnp.minimum, jnp.inf),
+    # "none": no reduction (all nks == 1)
+}
+
+
+def pad_value(reduce: str) -> float:
+    if reduce == "none":
+        return 0.0
+    return REDUCE[reduce][1]
+
+
+def apply_unary_seq(ops, x, operand_lookup: Optional[Callable] = None):
+    """Apply a pre/post operator sequence. ``operand_lookup(op) -> array``
+    resolves tensor operands (already broadcast to x's layout by the caller)."""
+    for op in ops:
+        fn = UNARY.get(op.name)
+        if fn is None:
+            raise KeyError(f"unknown unary operator {op.name!r}")
+        p = operand_lookup(op) if (op.operand is not None and operand_lookup) else None
+        x = fn(x, op.const, p)
+    return x
+
+
+def apply_main(name: str, i, k):
+    fn = MAIN.get(name)
+    if fn is None:
+        raise KeyError(f"unknown main operator {name!r}")
+    return fn(i, k)
+
+
+def apply_reduce(name: str, x, axes):
+    if name == "none":
+        return x
+    fn, _ = REDUCE[name]
+    if name == "add":
+        return jnp.sum(x, axis=axes)
+    if name == "max":
+        return jnp.max(x, axis=axes)
+    if name == "min":
+        return jnp.min(x, axis=axes)
+    raise KeyError(name)
+
+
+def unit_for(main: str, reduce: str) -> str:
+    """TPU execution unit for an operator combo (cost model)."""
+    return "mxu" if (main == "mul" and reduce == "add") else "vpu"

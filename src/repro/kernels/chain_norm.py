@@ -1,0 +1,71 @@
+"""Fused normalization-segment kernel (the Table-2 chain as ONE kernel).
+
+RMSNorm / (batch-free) LayerNorm decompose into the paper's reduce-GCONV +
+broadcast-GCONV chain (FP1..FP4 pattern). After §4.3 operation fusion the
+whole segment collapses to one pass over the row: a VPU reduction feeding an
+elementwise epilogue, with gamma (and beta) as fused ``post`` operands. One
+kernel = one HBM round-trip for x instead of four.
+
+Blocking: grid (T/bt,); block (bt, C) rows resident in VMEM; the C-axis
+reduction is a VPU tree-reduce; the rescale re-reads the same VMEM block.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import cdiv, use_interpret
+
+
+def _kernel(x_ref, g_ref, b_ref, o_ref, *, eps: float, mode: str):
+    x = x_ref[...].astype(jnp.float32)           # (bt, C)
+    if mode == "layer":
+        mu = jnp.mean(x, axis=-1, keepdims=True)
+        xc = x - mu
+    else:
+        xc = x
+    ms = jnp.mean(xc * xc, axis=-1, keepdims=True)
+    y = xc * jax.lax.rsqrt(ms + eps)
+    y = y * g_ref[...].astype(jnp.float32)
+    if b_ref is not None:
+        y = y + b_ref[...].astype(jnp.float32)
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("eps", "mode", "block_t", "interpret"))
+def chain_norm(x: jax.Array, gamma: jax.Array,
+               beta: Optional[jax.Array] = None, *, eps: float = 1e-6,
+               mode: str = "rms", block_t: int = 256,
+               interpret: Optional[bool] = None) -> jax.Array:
+    """x: (T, C); gamma/beta: (C,). Returns same dtype as x."""
+    if interpret is None:
+        interpret = use_interpret()
+    T, C = x.shape
+    bt = min(block_t, T)
+    grid = (cdiv(T, bt),)
+    in_specs = [
+        pl.BlockSpec((bt, C), lambda t: (t, 0)),
+        pl.BlockSpec((C,), lambda t: (0,)),
+    ]
+    args = [x, gamma]
+    if beta is not None:
+        in_specs.append(pl.BlockSpec((C,), lambda t: (0,)))
+        args.append(beta)
+        kern = functools.partial(_kernel, eps=eps, mode=mode)
+    else:
+        def kern(x_ref, g_ref, o_ref, *, _e=eps, _m=mode):
+            _kernel(x_ref, g_ref, None, o_ref, eps=_e, mode=_m)
+
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bt, C), lambda t: (t, 0)),
+        out_shape=jax.ShapeDtypeStruct((T, C), x.dtype),
+        interpret=interpret,
+    )(*args)

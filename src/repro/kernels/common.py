@@ -1,0 +1,34 @@
+"""Shared kernel utilities: interpret-mode dispatch and tile helpers."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.lru_cache(maxsize=1)
+def use_interpret() -> bool:
+    """Pallas kernels target TPU Mosaic; anywhere else (this CPU container)
+    they run in interpret mode, which executes the kernel body with the
+    same blocking semantics for correctness validation."""
+    return jax.default_backend() != "tpu"
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def round_up(a: int, b: int) -> int:
+    return cdiv(a, b) * b
+
+
+def pick_block(n: int, target: int, align: int = 128) -> int:
+    """Largest hardware-aligned block <= target that does not overshoot n
+    too badly. MXU wants multiples of 128 in contraction/output dims; VPU
+    lanes want multiples of 8 in sublanes."""
+    if n <= align:
+        return max(1, n)
+    b = min(target, round_up(n, align))
+    b = (b // align) * align
+    return max(align, b)

@@ -1,0 +1,125 @@
+"""Flash attention — the fused 5-GCONV attention chain segment.
+
+The attention block is, in chain terms, scores-GCONV -> softmax chain
+(max/sub-exp/sum/div GCONVs) -> values-GCONV (core.layers.attention_*). The
+paper's fusion rule says reduce-free links fold into neighbors; the *online
+softmax* trick extends that across the two reduce-GCONVs as well, so the
+whole segment becomes one kernel whose intermediates (the Tq x Tk score
+matrix!) never exist in HBM. This is the strongest instance of the paper's
+thesis on TPU: chain-level fusion beats any per-GCONV mapping.
+
+Blocking: grid (H, Tq/bq, Tk/bk) with the key axis innermost-sequential.
+Each step holds the (bq, D) query block plus ONE (bk, D) key and value block
+in VMEM; running (acc, m, l) statistics live in VMEM scratch across the key
+sweep (output-stationary). Causal steps that are fully masked skip their
+MXU work via pl.when.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .common import cdiv, use_interpret
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            scale: float, causal: bool, bq: int, bk: int, t_k: int,
+            q_offset: int, n_kb: int):
+    qi = pl.program_id(1)
+    kb = pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # causal: key block fully after the query block -> nothing to do
+    first_masked = (q_offset + qi * bq + bq - 1) // bk + 1
+    live = jnp.logical_or(jnp.logical_not(causal), kb < first_masked)
+
+    @pl.when(live)
+    def _step():
+        q = q_ref[0].astype(jnp.float32) * scale       # (bq, D)
+        k = k_ref[0].astype(jnp.float32)               # (bk, D)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        k_ids = kb * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = k_ids < t_k                             # zero-padded tail keys
+        if causal:
+            q_ids = (q_offset + qi * bq
+                     + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0))
+            mask = jnp.logical_and(mask, q_ids >= k_ids)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev, l_prev, acc = m_ref[...], l_ref[...], acc_ref[...]
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_cur)
+        alpha = jnp.exp(m_prev - m_cur)
+        l_ref[...] = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_cur
+
+    @pl.when(kb == n_kb - 1)
+    def _epilogue():
+        o_ref[0] = (acc_ref[...]
+                    / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "scale", "block_q", "block_k", "q_offset",
+                     "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, scale: Optional[float] = None,
+                    block_q: int = 256, block_k: int = 256,
+                    q_offset: int = 0,
+                    interpret: Optional[bool] = None) -> jax.Array:
+    """q: (H, Tq, D); k, v: (H, Tk, D) -> (H, Tq, D), q.dtype.
+
+    ``q_offset`` positions the query block on the key timeline for
+    decode/chunked-prefill causal masking (query i attends keys
+    <= q_offset + i).
+    """
+    if interpret is None:
+        interpret = use_interpret()
+    H, Tq, D = q.shape
+    H2, Tk, D2 = k.shape
+    assert (H, D) == (H2, D2), (q.shape, k.shape)
+    bq = min(block_q, Tq)
+    bk = min(block_k, Tk)
+    n_kb = cdiv(Tk, bk)
+    if Tk % bk:
+        pad = n_kb * bk - Tk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0)))
+    grid = (H, cdiv(Tq, bq), n_kb)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, scale=scale or D ** -0.5, causal=causal,
+                          bq=bq, bk=bk, t_k=Tk, q_offset=q_offset,
+                          n_kb=n_kb),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, bk, D), lambda h, i, j: (h, j, 0)),
+            pl.BlockSpec((1, bk, D), lambda h, i, j: (h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((H, Tq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, D), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,113 @@
+"""Grouped GCONV matmul kernel — the TPU "GCONV engine" for mul/add GCONVs.
+
+This is the MXU-eligible half of the paper's generalized PE array
+(DESIGN.md §2): any GCONV with ``main=mul, reduce=add`` whose loops the
+mapper assigns to the MXU lowers to a grouped contraction
+
+    out[g, m, n] = post( sum_k pre(x)[g, m, k] * w[g, k, n] )
+
+with the paper's ``pre``/``post`` operators fused as the epilogue/prologue —
+the §4.3 operation-fusion result executed in registers instead of ever
+touching HBM. ``Ng`` maps to the grid's group axis (experts in MoE, groups in
+grouped convolution, heads in attention), ``Nop/Nopc`` to the (m, n) output
+tile, ``Nks`` to the contraction.
+
+Blocking: grid (G, M/bm, N/bn, K/bk), K innermost so each (g, m, n) output
+block stays resident in VMEM while the contraction streams over K
+(output-stationary; kernel/input blocks are the streamed operands). f32
+accumulation in the output block; the cast to the storage dtype happens on
+the last K step together with the ``post`` epilogue.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import cdiv, pick_block, use_interpret
+
+# epilogue/prologue vocabulary (a subset of core.operators.UNARY that makes
+# sense in-register; extend as chains demand)
+EPILOGUES = {
+    "id": lambda x: x,
+    "relu": lambda x: jnp.maximum(x, 0),
+    "silu": jax.nn.silu,
+    "gelu": jax.nn.gelu,
+    "sigmoid": jax.nn.sigmoid,
+    "tanh": jnp.tanh,
+    "exp": jnp.exp,
+    "square": lambda x: x * x,
+}
+
+
+def _kernel(x_ref, w_ref, o_ref, *, n_k: int, post: str, scale: float,
+            out_dtype):
+    k = pl.program_id(3)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[0].astype(jnp.float32)         # (bm, bk)
+    w = w_ref[0].astype(jnp.float32)         # (bk, bn)
+    acc = jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    o_ref[...] += acc[None]
+
+    @pl.when(k == n_k - 1)
+    def _epilogue():
+        y = o_ref[...]
+        if scale != 1.0:
+            y = y * scale
+        y = EPILOGUES[post](y)
+        o_ref[...] = y
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("post", "scale", "block_m", "block_n", "block_k",
+                     "interpret"))
+def gconv_matmul(x: jax.Array, w: jax.Array, *, post: str = "id",
+                 scale: float = 1.0, block_m: int = 256, block_n: int = 256,
+                 block_k: int = 512,
+                 interpret: Optional[bool] = None) -> jax.Array:
+    """out[g] = post(scale * (x[g] @ w[g])), f32 accumulation.
+
+    x: (G, M, K); w: (G, K, N) -> (G, M, N) in f32 (callers cast).
+    Shapes need not be tile-aligned; blocks are shrunk to fit.
+    """
+    if interpret is None:
+        interpret = use_interpret()
+    G, M, K = x.shape
+    G2, K2, N = w.shape
+    assert G == G2 and K == K2, (x.shape, w.shape)
+    bm = min(block_m, pick_block(M, block_m, 8))
+    bn = min(block_n, pick_block(N, block_n, 128))
+    bk = min(block_k, pick_block(K, block_k, 128))
+    # pad to tile multiples: boundary-block contents are implementation-
+    # defined in Pallas, and a mul/add GCONV is exactly zero-pad-safe
+    Mp, Kp, Np = (cdiv(M, bm) * bm, cdiv(K, bk) * bk, cdiv(N, bn) * bn)
+    if (Mp, Kp) != (M, K):
+        x = jnp.pad(x, ((0, 0), (0, Mp - M), (0, Kp - K)))
+    if (Kp, Np) != (K, N):
+        w = jnp.pad(w, ((0, 0), (0, Kp - K), (0, Np - N)))
+    n_k = Kp // bk
+    grid = (G, Mp // bm, Np // bn, n_k)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, n_k=n_k, post=post, scale=scale,
+                          out_dtype=jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm, bk), lambda g, m, n, k: (g, m, k)),
+            pl.BlockSpec((1, bk, bn), lambda g, m, n, k: (g, k, n)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda g, m, n, k: (g, m, n)),
+        out_shape=jax.ShapeDtypeStruct((G, Mp, Np), jnp.float32),
+        interpret=interpret,
+    )(x, w)
+    return out[:, :M, :N]

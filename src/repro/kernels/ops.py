@@ -1,0 +1,60 @@
+"""Public jit'd entry points for the kernel layer.
+
+Models call these; each dispatches to the Pallas kernel (TPU Mosaic on
+hardware, interpret mode on CPU) with shape-aware block choices. A
+``REPRO_FORCE_REF=1`` env escape hatch routes to the jnp oracles — useful for
+bisecting kernel-vs-model bugs and for the CPU dry-run path (the distributed
+dry-run lowers the pure-JAX path; see DESIGN.md §7).
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .chain_norm import chain_norm
+from .flash_attention import flash_attention
+from .gconv_matmul import gconv_matmul
+from .gconv_spatial import gconv_spatial
+
+
+def _force_ref() -> bool:
+    return os.environ.get("REPRO_FORCE_REF", "0") == "1"
+
+
+def grouped_matmul(x, w, *, post: str = "id", scale: float = 1.0,
+                   out_dtype=None, **block_kw):
+    """(G,M,K) x (G,K,N) -> (G,M,N); the MoE-expert / grouped-GCONV engine."""
+    if _force_ref():
+        y = ref.gconv_matmul_ref(x, w, post=post, scale=scale)
+    else:
+        y = gconv_matmul(x, w, post=post, scale=scale, **block_kw)
+    return y.astype(out_dtype or x.dtype)
+
+
+def conv2d_nhwc(x, w, *, stride: int = 1, pad: int = 0, out_dtype=None,
+                **block_kw):
+    if _force_ref():
+        y = ref.gconv_spatial_ref(x, w, stride=stride, pad=pad)
+    else:
+        y = gconv_spatial(x, w, stride=stride, pad=pad, **block_kw)
+    return y.astype(out_dtype or x.dtype)
+
+
+def fused_norm(x, gamma, beta=None, *, eps: float = 1e-6, mode: str = "rms",
+               **block_kw):
+    if _force_ref():
+        return ref.chain_norm_ref(x, gamma, beta, eps=eps, mode=mode)
+    return chain_norm(x, gamma, beta, eps=eps, mode=mode, **block_kw)
+
+
+def attention(q, k, v, *, causal: bool = True, scale: Optional[float] = None,
+              q_offset: int = 0, **block_kw):
+    if _force_ref():
+        return ref.flash_attention_ref(q, k, v, causal=causal, scale=scale,
+                                       q_offset=q_offset)
+    return flash_attention(q, k, v, causal=causal, scale=scale,
+                           q_offset=q_offset, **block_kw)

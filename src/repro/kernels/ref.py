@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for every kernel (the allclose references)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .gconv_matmul import EPILOGUES
+
+
+def gconv_matmul_ref(x, w, *, post: str = "id", scale: float = 1.0):
+    y = jnp.einsum("gmk,gkn->gmn", x.astype(jnp.float32),
+                   w.astype(jnp.float32))
+    return EPILOGUES[post](y * scale)
+
+
+def gconv_spatial_ref(x, w, *, stride: int = 1, pad: int = 0):
+    # NHWC x (KH,KW,C,O) via lax.conv_general_dilated
+    return jax.lax.conv_general_dilated(
+        x.astype(jnp.float32), w.astype(jnp.float32),
+        (stride, stride), [(pad, pad), (pad, pad)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def chain_norm_ref(x, gamma, beta=None, *, eps: float = 1e-6,
+                   mode: str = "rms"):
+    xf = x.astype(jnp.float32)
+    if mode == "layer":
+        xf = xf - xf.mean(-1, keepdims=True)
+    y = xf * jax.lax.rsqrt((xf * xf).mean(-1, keepdims=True) + eps)
+    y = y * gamma.astype(jnp.float32)
+    if beta is not None:
+        y = y + beta.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        scale: Optional[float] = None, q_offset: int = 0):
+    H, Tq, D = q.shape
+    Tk = k.shape[1]
+    s = jnp.einsum("hqd,hkd->hqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (scale or D ** -0.5)
+    if causal:
+        q_ids = q_offset + jnp.arange(Tq)[:, None]
+        k_ids = jnp.arange(Tk)[None, :]
+        s = jnp.where(q_ids >= k_ids, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("hqk,hkd->hqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,333 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+# ^ MUST precede any jax import (device count locks at first init).
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell
+against the production mesh, prove memory fit, and extract roofline terms.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch yi-34b \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+
+Results are cached as JSON under results/dryrun/ (one file per cell) so
+re-runs are incremental; --force recompiles.
+"""
+import argparse          # noqa: E402
+import functools         # noqa: E402
+import json              # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro import configs                       # noqa: E402
+from repro.analysis import roofline as rl       # noqa: E402
+from repro.models import api                    # noqa: E402
+from repro.optim import adamw                   # noqa: E402
+from repro.launch import sharding as shlib      # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.train import jit_train_step   # noqa: E402
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+
+def _result_path(arch, shape, mesh_name, out_dir):
+    return os.path.join(out_dir, f"{arch}__{shape}__{mesh_name}.json")
+
+
+def _opt_cfg(arch: str) -> adamw.OptConfig:
+    # memory-bound giants store moments in bf16 (DESIGN.md §4)
+    mdt = "bfloat16" if arch in ("arctic-480b", "yi-34b") else "float32"
+    return adamw.OptConfig(moment_dtype=mdt)
+
+
+def _active_params(cfg, params_shape) -> int:
+    """Active params per token for MODEL_FLOPS (MoE: top_k/E of experts)."""
+    import numpy as np
+
+    total = 0
+    active = 0.0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params_shape)[0]:
+        n = int(np.prod(leaf.shape))
+        total += n
+        name = ""
+        for p in reversed(path):
+            if hasattr(p, "key"):
+                name = str(p.key)
+                break
+        if cfg.n_experts and name in ("e_gate", "e_up", "e_down"):
+            active += n * cfg.top_k / cfg.n_experts
+        else:
+            active += n
+    return total, int(active)
+
+
+def _layer_ks(L: int):
+    """Two unroll factors (k_a < k_b) dividing L for the slope fit; using a
+    mid-range pair avoids the unroll=1-vs-2 fusion-noise cliff."""
+    divs = [k for k in (2, 3, 4, 5, 6, 7, 8, 10) if L % k == 0]
+    if len(divs) >= 2:
+        return divs[0], divs[1]
+    if len(divs) == 1:
+        return 1, divs[0]
+    return 1, 1
+
+
+def _time_trips(cfg, cell) -> int:
+    """Trip count of the per-layer time scan (attention/wkv chunks)."""
+    T = cell.seq_len if cell.kind != "decode" else 1
+    if cell.kind == "decode":
+        return 1
+    if cfg.family == "ssm":
+        return max(1, T // 32)              # wkv chunk size
+    if cfg.family == "encdec" and cell.kind == "train":
+        T = T // 2
+    return max(1, -(-T // cfg.attn_chunk))
+
+
+def _ssm_trips(cfg, cell) -> int:
+    if cfg.family != "hybrid" or cell.kind == "decode":
+        return 1
+    if "ssm_chunked" in cfg.perf_flags:
+        return max(1, cell.seq_len // 128)   # SSD chunk scan trips
+    return cell.seq_len
+
+
+def build_lowerable(arch: str, shape: str, mesh,
+                    cfg_overrides: dict = None):
+    """Return (jitted_fn, args, model_flops, meta)."""
+    cfg = configs.get(arch)
+    if cfg_overrides:
+        cfg = cfg.replace(**cfg_overrides)
+    cell = configs.SHAPES[shape]
+    model = api.build(cfg)
+    shard_fn = shlib.make_shard_fn(cfg, mesh)
+    params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    p_sh = shlib.param_shardings(cfg, mesh, params_shape)
+    n_total, n_active = _active_params(cfg, params_shape)
+    mfl = rl.model_flops(cfg, cell, n_total, n_active)
+    ispec = configs.input_specs(arch, shape, cfg)
+
+    if cell.kind == "train":
+        opt_cfg = _opt_cfg(arch)
+        jit_fn, (p_sh, o_sh, b_sh) = jit_train_step(
+            model, opt_cfg, mesh, ispec)
+        opt_shape = jax.eval_shape(
+            functools.partial(adamw.init_state, opt_cfg), params_shape)
+        args = (params_shape, opt_shape, ispec)
+        return jit_fn, args, mfl, dict(n_total=n_total, n_active=n_active)
+
+    if cell.kind == "prefill":
+        if cfg.family == "encdec":
+            fn = lambda p, b: model.encode(p, b["src_embeds"],
+                                           shard_fn=shard_fn)
+        elif cfg.family in ("ssm", "hybrid"):
+            fn = lambda p, b: model.forward(p, b["tokens"],
+                                            shard_fn=shard_fn)
+        else:
+            fn = lambda p, b: model.prefill(p, b["tokens"],
+                                            shard_fn=shard_fn)
+        b_sh = shlib.batch_shardings(cfg, mesh, ispec)
+        jit_fn = jax.jit(fn, in_shardings=(p_sh, b_sh))
+        return jit_fn, (params_shape, ispec), mfl, dict(
+            n_total=n_total, n_active=n_active)
+
+    # decode: serve_step = one token against a seq_len-deep cache
+    cell_len = cell.seq_len
+    B = cell.global_batch
+    if cfg.family == "encdec":
+        cache_shape = jax.eval_shape(
+            lambda: model.serve_state_init(B, cell_len,
+                                           src_len=cell_len))
+    else:
+        cache_shape = jax.eval_shape(
+            lambda: model.serve_state_init(B, cell_len))
+    c_sh = shlib.cache_shardings(cfg, mesh, cache_shape)
+    t_sh = shlib.batch_shardings(cfg, mesh, ispec)
+
+    def serve_step(p, token, cache):
+        return model.decode_step(p, token, cache, shard_fn=shard_fn)
+
+    jit_fn = jax.jit(serve_step, in_shardings=(p_sh, t_sh["token"], c_sh),
+                     donate_argnums=(2,))
+    return jit_fn, (params_shape, ispec["token"], cache_shape), mfl, dict(
+        n_total=n_total, n_active=n_active)
+
+
+def _measure(arch, shape, mesh, overrides):
+    """Compile one variant; return raw (flops, bytes, coll, compiled)."""
+    jit_fn, args, mfl, meta = build_lowerable(arch, shape, mesh, overrides)
+    lowered = jit_fn.lower(*args)
+    compiled = lowered.compile()
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    text = compiled.as_text()
+    coll = rl.collective_bytes(text)
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes": float(ca.get("bytes accessed", 0.0)),
+        "coll": float(sum(coll.values())),
+        "coll_breakdown": coll,
+        "compiled": compiled, "mfl": mfl, "meta": meta,
+    }
+
+
+def _fit_totals(arch, shape, mesh, cfg, cell, base,
+                fit_time: bool, fit_ssm: bool, verbose=True,
+                overrides=None):
+    """cost_analysis counts each while body once; compile at 2-4 unroll
+    factors and fit  total = A + L*(B + trips_t*Ca + trips_s*Cs).
+    Returns dict of extrapolated (flops, bytes, coll)."""
+    ov = dict(overrides or {})      # perf-lever overrides ride along
+    L_fit = cfg.n_layers            # both stacks share layer_unroll
+    ka, kb = _layer_ks(cfg.n_layers)
+    trips_t = _time_trips(cfg, cell)
+    trips_s = _ssm_trips(cfg, cell)
+    ms = {"ka": (base if ka == 1 else _measure(
+              arch, shape, mesh, {**ov, "layer_unroll": ka})),
+          "kb": _measure(arch, shape, mesh, {**ov, "layer_unroll": kb})}
+    if fit_time and trips_t > 1:
+        ms["t"] = _measure(arch, shape, mesh, {**ov, "time_unroll": 2})
+    if fit_ssm and trips_s > 1:
+        ms["s"] = _measure(arch, shape, mesh, {**ov, "ssm_unroll": 2})
+    out = {}
+    for key in ("flops", "bytes", "coll"):
+        f111 = base[key]
+        slope = max((ms["kb"][key] - ms["ka"][key]) / (kb - ka), 0.0)
+        A = max(ms["ka"][key] - ka * slope, 0.0)       # B+Ca+Cs = slope
+        Ca = max(ms["t"][key] - f111, 0.0) if "t" in ms else 0.0
+        Cs = max(ms["s"][key] - f111, 0.0) if "s" in ms else 0.0
+        B = max(slope - Ca - Cs, 0.0)
+        out[key] = A + L_fit * (B + trips_t * Ca + trips_s * Cs)
+        out[f"{key}_terms"] = dict(outside=A, per_layer=B, per_time=Ca,
+                                   per_ssm=Cs, trips_t=trips_t,
+                                   trips_s=trips_s, ka=ka, kb=kb)
+    return out
+
+
+def run_cell(arch: str, shape: str, mesh_name: str, out_dir: str,
+             force: bool = False, verbose: bool = True,
+             fit: bool = True, overrides: dict = None,
+             tag: str = "") -> dict:
+    path = _result_path(arch + tag, shape, mesh_name, out_dir)
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+    ok, why = configs.cell_supported(arch, shape)
+    if not ok:
+        rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+               "status": "skipped", "reason": why}
+        _save(path, rec)
+        return rec
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+    chips = mesh.devices.size
+    cfg = configs.get(arch)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    cell = configs.SHAPES[shape]
+    t0 = time.time()
+    try:
+        base = _measure(arch, shape, mesh, overrides or {})
+        compiled = base["compiled"]
+        if fit:
+            ov = dict(overrides or {})
+            fit_time = cell.kind != "decode"
+            fit_ssm = cfg.family == "hybrid" and cell.kind != "decode"
+            totals = _fit_totals(
+                arch, shape, mesh, cfg, cell,
+                base, fit_time, fit_ssm, verbose, overrides=overrides)
+        else:
+            totals = {k: base[k] for k in ("flops", "bytes", "coll")}
+        t_compile = time.time() - t0
+        roof = rl.Roofline(
+            arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+            hlo_flops=totals["flops"], hlo_bytes=totals["bytes"],
+            coll_bytes=totals["coll"],
+            coll_breakdown=base["coll_breakdown"],
+            model_flops=base["mfl"])
+        mem = compiled.memory_analysis()
+        rec = {
+            "arch": arch, "shape": shape, "mesh": mesh_name,
+            "status": "ok", "chips": chips,
+            "compile_s": round(t_compile, 1),
+            "memory_analysis": {
+                k: int(getattr(mem, k, 0) or 0)
+                for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                          "temp_size_in_bytes", "alias_size_in_bytes",
+                          "generated_code_size_in_bytes")},
+            "roofline": roof.to_dict(),
+            "fit_terms": {k: totals.get(f"{k}_terms")
+                          for k in ("flops", "bytes", "coll")} if fit else {},
+            **base["meta"],
+        }
+        per_dev_gb = (rec["memory_analysis"]["argument_size_in_bytes"]
+                      + rec["memory_analysis"]["temp_size_in_bytes"]) / 2**30
+        rec["per_device_gb"] = round(per_dev_gb, 3)   # analysis is per-device
+        rec["fits_16gb_hbm"] = bool(rec["per_device_gb"] < 16.0)
+        if verbose:
+            print(f"[{arch}{tag} x {shape} x {mesh_name}] OK "
+                  f"t={t_compile:.0f}s per_dev={rec['per_device_gb']:.2f}GB "
+                  f"dom={roof.dominant} "
+                  f"comp={roof.compute_s*1e3:.2f}ms "
+                  f"mem={roof.memory_s*1e3:.2f}ms "
+                  f"coll={roof.collective_s*1e3:.2f}ms "
+                  f"useful={roof.useful_ratio:.2f}", flush=True)
+    except Exception as e:   # noqa: BLE001 — record the failure verbatim
+        rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+               "status": "error", "error": repr(e),
+               "traceback": traceback.format_exc()[-4000:]}
+        if verbose:
+            print(f"[{arch}{tag} x {shape} x {mesh_name}] FAILED: {e!r}",
+                  flush=True)
+    _save(path, rec)
+    return rec
+
+
+def _save(path, rec):
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1, default=float)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=list(configs.ARCHS))
+    ap.add_argument("--shape", default=None, choices=list(configs.SHAPES))
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    out_dir = args.out or os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                     "results", "dryrun"))
+    meshes = (["single", "multi"] if args.mesh == "both" else [args.mesh])
+    if args.all:
+        cells = [(a, s) for a, s, ok, _ in
+                 configs.all_cells(include_skipped=True)]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+    n_ok = n_fail = n_skip = 0
+    for mesh_name in meshes:
+        for arch, shape in cells:
+            # single-pod: full roofline fit (the §Roofline table is
+            # single-pod); multi-pod: compile-success + memory proof only
+            rec = run_cell(arch, shape, mesh_name, out_dir, force=args.force,
+                           fit=(mesh_name == "single"))
+            st = rec["status"]
+            n_ok += st == "ok"
+            n_fail += st == "error"
+            n_skip += st == "skipped"
+    print(f"dry-run: {n_ok} ok, {n_skip} skipped, {n_fail} failed")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

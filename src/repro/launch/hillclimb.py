@@ -1,0 +1,80 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+"""§Perf hillclimbing driver: re-lowers the three chosen cells with the
+perf-lever overrides and records each (hypothesis -> change -> before ->
+after) step next to the baselines in results/dryrun/.
+
+    PYTHONPATH=src python -m repro.launch.hillclimb
+"""
+import json              # noqa: E402
+
+from repro.launch.dryrun import RESULTS_DIR, run_cell   # noqa: E402
+
+OUT = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "..",
+                                   "..", "results", "dryrun"))
+
+# (arch, shape, tag, overrides, hypothesis)
+EXPERIMENTS = [
+    # ---- cell A: yi-34b decode_32k — most collective-bound ---------------
+    ("yi-34b", "decode_32k", "+tp",
+     {"perf_flags": ("tp_serve",)},
+     "H-A1: the 2.69s collective term is dominated by the per-token FSDP "
+     "all-gather of the 34B bf16 params (~64GB/step over ICI). TP-only "
+     "param sharding for serving (replicate over data, shard over model) "
+     "eliminates it; predict collective drops by >1.3s and memory drops "
+     "too (fewer gathered copies)."),
+    ("yi-34b", "decode_32k", "+tp+dq",
+     {"perf_flags": ("tp_serve", "decode_q")},
+     "H-A2: the remainder comes from GSPMD resharding the KV cache between "
+     "the ring insert (head_dim-sharded) and the attention einsum "
+     "(involuntary full rematerialization warning). Constraining q/k/v to "
+     "consistent head_dim sharding keeps the cache in place; predict the "
+     "remaining collective and the 0.8s memory term collapse toward the "
+     "4.3GB/dev cache read (~6ms)."),
+    # ---- cell B: hymba train_4k — worst roofline fraction ----------------
+    ("hymba-1.5b", "train_4k", "+ssd",
+     {"perf_flags": ("ssm_chunked",)},
+     "H-B1: 61.5s HBM term comes from the per-token SSM scan (T*L state "
+     "round-trips + per-step stacked saves in fwd+bwd). The chunk-parallel "
+     "SSD dual (128-token chunks as MXU matmuls) cuts state traffic by "
+     "~chunk_size; predict memory term drops >5x, compute roughly flat."),
+    ("hymba-1.5b", "train_4k", "+ssd+sp",
+     {"perf_flags": ("ssm_chunked", "sp")},
+     "H-B2: the residual-stream remat stacks (L x B_loc x T x D, plus the "
+     "XLA-hoisted f32 convert of the same stack) are replicated across the "
+     "model axis. Sequence-parallel activations shard T 16-way; predict "
+     "a further ~2-4x memory-term cut and per-device GB below 16."),
+    # ---- cell C: olmoe train_4k — the paper's grouped-GCONV case ---------
+    ("olmoe-1b-7b", "train_4k", "+sort",
+     {"perf_flags": ("moe_sort",)},
+     "H-C1: the dispatch builds a (K*N, E) = (8.4M, 64) one-hot cumsum "
+     "(~2GB of int traffic per layer, serialized); sort-based "
+     "position-in-expert is O(KN log KN). Predict the memory term drops "
+     "~20-30% and collective slightly (smaller resharded intermediates)."),
+    ("olmoe-1b-7b", "train_4k", "+sort+sp",
+     {"perf_flags": ("moe_sort", "sp")},
+     "H-C2: as H-B2 — sequence-parallel residual stream cuts the saved "
+     "stacks; predict memory term down another ~2x."),
+]
+
+
+def main():
+    results = []
+    for arch, shape, tag, ov, hyp in EXPERIMENTS:
+        print(f"\n### {arch} x {shape} {tag}\n{hyp}\n", flush=True)
+        rec = run_cell(arch, shape, "single", OUT, overrides=ov, tag=tag)
+        rec["hypothesis"] = hyp
+        rec["overrides"] = {k: list(v) if isinstance(v, tuple) else v
+                            for k, v in ov.items()}
+        path = os.path.join(OUT, f"{arch}{tag}__{shape}__single.json")
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1, default=float)
+        results.append(rec)
+    ok = sum(r["status"] == "ok" for r in results)
+    print(f"\nhillclimb: {ok}/{len(results)} ok")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Production mesh construction.
+
+Single pod: (16, 16) = 256 chips, axes ("data", "model").
+Multi-pod:  (2, 16, 16) = 512 chips, axes ("pod", "data", "model") — the
+"pod" axis is the cross-pod (DCN) data-parallel replica axis; "data" is
+in-pod FSDP/data parallel; "model" is tensor/expert parallel on ICI.
+
+A FUNCTION, not a module-level constant: importing this module must never
+touch jax device state (the dry-run sets XLA_FLAGS before first jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_data: int = 1, n_model: int = 1):
+    """Tiny mesh over however many (virtual) devices a test asked for."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+def dp_axes(mesh) -> tuple:
+    """The data-parallel axis bundle: ("pod","data") on multi-pod meshes."""
+    return (("pod", "data") if "pod" in mesh.axis_names else ("data",))

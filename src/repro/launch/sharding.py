@@ -1,0 +1,235 @@
+"""Sharding rules: params, optimizer state, batches, serve caches,
+activation constraints.
+
+Strategy (DESIGN.md §4):
+  * weights: 2-D sharded over ("data", "model") — "model" on the
+    tensor-parallel dimension (Megatron column/row split; experts for MoE),
+    "data" on the other large dimension (FSDP; gathered per layer inside the
+    scan). Replicated across "pod" (gradients all-reduce over DCN, optionally
+    int8-compressed).
+  * every rule is divisibility-GUARDED: an axis that does not divide evenly
+    falls back to replication for that dim (e.g. hymba's vocab=32001, yi's 8
+    KV heads vs model=16 — where heads don't divide, the head_dim axis takes
+    the "model" sharding instead).
+  * activations: batch over ("pod","data"); logits additionally over
+    "model" (vocab-parallel cross-entropy region); MoE dispatch over
+    "model" (expert parallelism).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.common import ModelConfig
+from .mesh import dp_axes
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        n = 1
+        for a in axis:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[axis]
+
+
+def guard(mesh: Mesh, spec: Tuple, shape: Tuple[int, ...]) -> P:
+    """Drop spec axes that don't divide the corresponding dim."""
+    out = []
+    for dim, axis in zip(shape, tuple(spec) + (None,) * len(shape)):
+        if axis is not None and dim % _axis_size(mesh, axis) == 0:
+            out.append(axis)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+# rules keyed by leaf name; "dp" placeholder = FSDP axis ("data"),
+# "tp" = tensor/expert-parallel axis ("model"). Entries are specs for the
+# *unstacked* trailing dims; stacked (L, ...) leaves get a leading None.
+_PARAM_RULES: Dict[str, Tuple] = {
+    # attention (dense, hymba, encdec incl. x_ prefixed)
+    "wq": ("dp", "tp"), "wk": ("dp", "tp"), "wv": ("dp", "tp"),
+    "wo": ("tp", "dp"),
+    "x_wq": ("dp", "tp"), "x_wk": ("dp", "tp"), "x_wv": ("dp", "tp"),
+    "x_wo": ("tp", "dp"),
+    # dense FFN
+    "w_gate": ("dp", "tp"), "w_up": ("dp", "tp"), "w_down": ("tp", "dp"),
+    "dense_w_gate": ("dp", "tp"), "dense_w_up": ("dp", "tp"),
+    "dense_w_down": ("tp", "dp"),
+    # MoE: experts over tp (expert parallelism), FSDP on d_model
+    "router": ("dp", None),
+    "e_gate": ("tp", "dp", None), "e_up": ("tp", "dp", None),
+    "e_down": ("tp", None, "dp"),
+    # rwkv6
+    "wr": ("dp", "tp"), "wg": ("dp", "tp"),
+    "ck": ("dp", "tp"), "cv": ("tp", "dp"), "cr": ("dp", "tp"),
+    "decay_A": ("dp", None), "decay_B": (None, "dp"),
+    # hymba ssm
+    "s_in": ("dp", "tp"), "s_gate": ("dp", "tp"),
+    "s_dt": ("tp", None), "s_B": ("tp", None), "s_C": ("tp", None),
+    # embeddings / head
+    "embed": ("tp", "dp"), "lm_head": ("dp", "tp"),
+}
+
+
+def _spec_for(name: str, shape, stacked: bool, mesh,
+              tp="model", dp="data") -> P:
+    rule = _PARAM_RULES.get(name)
+    if rule is None:
+        # norms, biases, scalars, mus: replicate
+        return P()
+    rule = tuple({"dp": dp, "tp": tp}.get(r, r) for r in rule)
+    if stacked:
+        rule = (None,) + rule
+    return guard(mesh, rule, shape)
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh, params_shape) -> Any:
+    """NamedSharding pytree matching the init() structure (built from
+    eval_shape, so nothing is allocated).
+
+    perf flag "tp_serve": drop the FSDP ("data") factor — params TP-only,
+    replicated over data. Kills the per-token FSDP all-gather in decode at
+    the price of d/16 instead of d/256 param residency (EXPERIMENTS §Perf).
+    """
+    dp = None if "tp_serve" in cfg.perf_flags else "data"
+
+    def one(path, leaf):
+        name = None
+        stacked = False
+        for p in reversed(path):
+            if hasattr(p, "key"):
+                name = str(p.key)
+                break
+        stacked = any(hasattr(p, "key") and "layers" in str(p.key)
+                      for p in path)
+        spec = _spec_for(name, leaf.shape, stacked, mesh, dp=dp)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def opt_shardings(cfg: ModelConfig, mesh: Mesh, opt_shape, p_sh) -> Any:
+    """m/v shard like params; step replicated."""
+    rep = NamedSharding(mesh, P())
+    return {"m": p_sh, "v": p_sh, "step": rep}
+
+
+def batch_shardings(cfg: ModelConfig, mesh: Mesh, batch_spec) -> Any:
+    dp = dp_axes(mesh)
+
+    def one(path, leaf):
+        spec = [dp] + [None] * (len(leaf.shape) - 1)
+        if leaf.shape[0] % _axis_size(mesh, dp) != 0:
+            spec[0] = None          # e.g. long_500k batch=1: replicate
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, batch_spec)
+
+
+def cache_shardings(cfg: ModelConfig, mesh: Mesh, cache_spec) -> Any:
+    """Serve caches: batch over dp; heads over model when divisible, else
+    head_dim over model (GQA with few KV heads)."""
+    dp = dp_axes(mesh)
+    tp_n = _axis_size(mesh, "model")
+
+    def one(path, leaf):
+        shape = leaf.shape
+        name = ""
+        for p in reversed(path):
+            if hasattr(p, "key"):
+                name = str(p.key)
+                break
+        if len(shape) == 0:
+            return NamedSharding(mesh, P())
+        spec = [None] * len(shape)
+        if name in ("k", "v", "xk", "xv") and len(shape) == 5:
+            # (L, B, S, Hkv, hd)
+            if shape[1] % _axis_size(mesh, dp) == 0:
+                spec[1] = dp
+            if "kv_seq_shard" in cfg.perf_flags and shape[2] % tp_n == 0:
+                # sequence-sharded KV cache: the ring insert becomes a
+                # local masked update per shard and the attention reduce
+                # psums tiny (B,H,1) vectors — no cache resharding at all
+                spec[2] = "model"
+            elif shape[3] % tp_n == 0:
+                spec[3] = "model"
+            elif shape[4] % tp_n == 0:
+                spec[4] = "model"
+        elif name == "wkv" and len(shape) == 5:
+            # (L, B, H, N, N)
+            if shape[1] % _axis_size(mesh, dp) == 0:
+                spec[1] = dp
+            if shape[2] % tp_n == 0:
+                spec[2] = "model"
+        elif name == "ssm" and len(shape) == 5:
+            # (L, B, H, hd, S)
+            if shape[1] % _axis_size(mesh, dp) == 0:
+                spec[1] = dp
+            if shape[2] % tp_n == 0:
+                spec[2] = "model"
+            elif shape[3] % tp_n == 0:
+                spec[3] = "model"
+        elif len(shape) >= 2:
+            if shape[1] % _axis_size(mesh, dp) == 0:
+                spec[1] = dp
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, cache_spec)
+
+
+def make_shard_fn(cfg: ModelConfig, mesh: Mesh) -> Callable:
+    """Activation constraint callback injected into the models."""
+    dp = dp_axes(mesh)
+    tp_n = _axis_size(mesh, "model")
+
+    def shard_fn(x, tag=None):
+        if mesh.empty:
+            return x
+        try:
+            shape = x.shape
+        except AttributeError:
+            return x
+        if tag == "logits" and x.ndim == 3:
+            v_ok = shape[2] % tp_n == 0
+            b_ok = shape[0] % _axis_size(mesh, dp) == 0
+            spec = P(dp if b_ok else None, None, "model" if v_ok else None)
+        elif tag == "act" and x.ndim == 3:
+            b_ok = shape[0] % _axis_size(mesh, dp) == 0
+            # perf flag "sp": sequence-parallel residual stream — the
+            # pointwise (norm/ffn) regions and the saved remat stacks shard
+            # T over "model"; GSPMD all-gathers entering attention.
+            t_sp = ("sp" in cfg.perf_flags and shape[1] % tp_n == 0)
+            spec = P(dp if b_ok else None, "model" if t_sp else None, None)
+        elif tag == "decode_qkv" and x.ndim == 4:
+            # consistent head_dim sharding through decode attention
+            b_ok = shape[0] % _axis_size(mesh, dp) == 0
+            d_ok = shape[3] % tp_n == 0
+            spec = P(dp if b_ok else None, None, None,
+                     "model" if d_ok else None)
+        elif tag in ("moe_dispatch", "moe_combine") and x.ndim == 3:
+            e_ok = shape[0] % tp_n == 0
+            spec = P("model" if e_ok else None, None, None)
+        elif tag == "attn_state" and x.ndim == 4:
+            # (B, H, Tq, hd) online-softmax accumulator
+            b_ok = shape[0] % _axis_size(mesh, dp) == 0
+            h_ok = shape[1] % tp_n == 0
+            spec = P(dp if b_ok else None, "model" if h_ok else None,
+                     None, None)
+        elif tag == "attn_vec" and x.ndim == 3:
+            b_ok = shape[0] % _axis_size(mesh, dp) == 0
+            h_ok = shape[1] % tp_n == 0
+            spec = P(dp if b_ok else None, "model" if h_ok else None, None)
+        else:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, spec))
+
+    return shard_fn

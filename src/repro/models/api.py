@@ -1,0 +1,99 @@
+"""Uniform model API over all families — what launch/train/serve/dryrun use.
+
+    model = build(cfg)
+    params = model.init(key)
+    loss   = model.loss_fn(params, batch, shard_fn)
+    logits, cache = model.decode_step(params, token, cache, shard_fn)
+    cache  = model.serve_state_init(batch, max_len)
+"""
+from __future__ import annotations
+
+import functools
+from types import SimpleNamespace
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import encdec, hymba, rwkv6, transformer
+from .common import ModelConfig, kv_cache_init
+
+_noshard = lambda x, tag=None: x
+
+
+def build(cfg: ModelConfig) -> SimpleNamespace:
+    if cfg.family in ("dense", "vlm", "moe"):
+        ffn_fn = None
+        if cfg.n_experts:
+            from .moe import moe_ffn
+            ffn_fn = moe_ffn
+
+        def loss_fn(params, batch, shard_fn=_noshard):
+            return transformer.loss_fn(cfg, params, batch, shard_fn,
+                                       ffn_fn=ffn_fn)
+
+        def decode_step(params, token, cache, shard_fn=_noshard):
+            return transformer.decode_step(cfg, params, token, cache,
+                                           shard_fn, ffn_fn=ffn_fn)
+
+        return SimpleNamespace(
+            cfg=cfg,
+            init=lambda key: transformer.init_params(cfg, key),
+            loss_fn=loss_fn,
+            forward=lambda params, tokens, **kw: transformer.forward(
+                cfg, params, tokens, ffn_fn=ffn_fn, **kw),
+            prefill=lambda params, tokens, **kw: transformer.prefill(
+                cfg, params, tokens, ffn_fn=ffn_fn, **kw),
+            decode_step=decode_step,
+            serve_state_init=lambda batch, max_len: kv_cache_init(
+                cfg, batch, max_len),
+        )
+
+    if cfg.family == "ssm":
+        return SimpleNamespace(
+            cfg=cfg,
+            init=lambda key: rwkv6.init_params(cfg, key),
+            loss_fn=lambda params, batch, shard_fn=_noshard:
+                rwkv6.loss_fn(cfg, params, batch, shard_fn),
+            forward=lambda params, tokens, **kw: rwkv6.forward(
+                cfg, params, tokens, **kw),
+            decode_step=lambda params, token, cache, shard_fn=_noshard:
+                rwkv6.decode_step(cfg, params, token, cache, shard_fn),
+            serve_state_init=lambda batch, max_len: rwkv6.init_state(
+                cfg, batch),
+        )
+
+    if cfg.family == "hybrid":
+        return SimpleNamespace(
+            cfg=cfg,
+            init=lambda key: hymba.init_params(cfg, key),
+            loss_fn=lambda params, batch, shard_fn=_noshard:
+                hymba.loss_fn(cfg, params, batch, shard_fn),
+            forward=lambda params, tokens, **kw: hymba.forward(
+                cfg, params, tokens, **kw),
+            decode_step=lambda params, token, cache, shard_fn=_noshard:
+                hymba.decode_step(cfg, params, token, cache, shard_fn),
+            serve_state_init=lambda batch, max_len: hymba.serve_state_init(
+                cfg, batch, max_len),
+        )
+
+    if cfg.family == "encdec":
+        return SimpleNamespace(
+            cfg=cfg,
+            init=lambda key: encdec.init_params(cfg, key),
+            loss_fn=lambda params, batch, shard_fn=_noshard:
+                encdec.loss_fn(cfg, params, batch, shard_fn),
+            encode=lambda params, src, **kw: encdec.encode(
+                cfg, params, src, **kw),
+            decode_step=lambda params, token, cache, shard_fn=_noshard:
+                encdec.decode_step(cfg, params, token, cache, shard_fn),
+            serve_state_init=lambda batch, max_len, src_len=None:
+                encdec.serve_state_init(cfg, batch, max_len,
+                                        src_len or max_len),
+        )
+
+    raise ValueError(f"unknown model family {cfg.family!r}")
+
+
+def param_count(params) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(params))

@@ -1,0 +1,342 @@
+"""Shared LM building blocks: config, norms, RoPE/M-RoPE, GQA attention
+(naive / chunked-flash / Pallas), KV caches, FFN, losses.
+
+Everything is a pure function over explicit param pytrees (stacked per-layer
+leaves scanned with ``jax.lax.scan`` — one layer's HLO regardless of depth,
+which keeps 60-layer dry-run compiles tractable on one CPU core and is also
+what a production framework wants for compile time).
+
+GCONV integration (DESIGN.md §3): each of these ops has a GCONV-chain
+decomposition in ``core.layers``; the implementations here are the *fused*
+execution paths the §4.3 optimizations produce (chain_norm == the fused
+FP1..FP4-style norm segment; chunked attention == the fused 5-GCONV
+attention segment), tested for equivalence against the chain interpreter.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+# ---------------------------------------------------------------------------
+# config
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                  # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0            # 0 => d_model // n_heads
+    norm: str = "rms"            # rms | layer
+    act: str = "silu"            # silu (=> SwiGLU) | gelu (=> plain MLP)
+    rope_theta: float = 10000.0
+    mrope_sections: Tuple[int, int, int] = ()   # M-RoPE (qwen2-vl)
+    tie_embeddings: bool = False
+    # attention variants
+    sliding_window: int = 0      # 0 => full causal
+    attn_impl: str = "chunked"   # naive | chunked | pallas
+    attn_chunk: int = 1024
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    moe_dense_ff: int = 0        # arctic-style parallel dense residual FFN
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01
+    # SSM / hybrid
+    ssm_state: int = 0
+    ssm_heads: int = 0           # rwkv/mamba head count (head size = d/h)
+    # enc-dec
+    n_enc_layers: int = 0        # family == encdec: encoder depth
+    # frontends (vlm/audio): inputs are precomputed embeddings, not ids
+    embed_inputs: bool = False
+    # training
+    dtype: str = "bfloat16"
+    remat: bool = True
+    remat_policy: str = "nothing"   # nothing | dots (save matmul outputs)
+    # perf hillclimb levers (EXPERIMENTS.md §Perf):
+    #   "sp"         sequence-parallel activations (shard T over "model")
+    #   "tp_serve"   serve params TP-only (no FSDP all-gather per token)
+    #   "decode_q"   consistent head_dim sharding through decode attention
+    #   "moe_sort"   sort-based MoE dispatch (replaces O(N*E) cumsum)
+    perf_flags: Tuple[str, ...] = ()
+    # dry-run cost-accounting knobs: XLA cost_analysis counts a while-loop
+    # body ONCE, so the dry-run compiles at 2-3 unroll factors and fits
+    # total = outside + trips * body (see launch/dryrun.py). These do not
+    # change semantics, only HLO structure.
+    layer_unroll: int = 1        # layer-stack scan
+    time_unroll: int = 1         # attention / wkv chunk scans
+    ssm_unroll: int = 1          # per-token ssm scans (hymba)
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.hd
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.hd
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+def cdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def remat_policy(cfg: ModelConfig):
+    import jax
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    return jax.checkpoint_policies.nothing_saveable
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+def dense_init(key, shape, dtype, scale: Optional[float] = None):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    s = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (s * jax.random.truncated_normal(key, -2, 2, shape,
+                                            jnp.float32)).astype(dtype)
+
+
+def stacked_init(key, n: int, shape, dtype, scale=None):
+    return dense_init(key, (n,) + tuple(shape), dtype, scale)
+
+
+# ---------------------------------------------------------------------------
+# norms (fused chain segment; kernels.chain_norm on TPU)
+# ---------------------------------------------------------------------------
+def norm(x, gamma, beta=None, *, kind: str = "rms", eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "layer":
+        xf = xf - xf.mean(-1, keepdims=True)
+    y = xf * jax.lax.rsqrt((xf * xf).mean(-1, keepdims=True) + eps)
+    y = y * gamma.astype(jnp.float32)
+    if beta is not None:
+        y = y + beta.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE / M-RoPE
+# ---------------------------------------------------------------------------
+def rope_freqs(hd: int, theta: float):
+    return theta ** (-jnp.arange(0, hd // 2, dtype=jnp.float32) / (hd // 2))
+
+
+def apply_rope(x, positions, theta: float,
+               mrope_sections: Tuple[int, ...] = ()):
+    """x: (B, T, H, hd); positions: (B, T) int or (B, 3, T) for M-RoPE."""
+    B, T, H, hd = x.shape
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    if mrope_sections:
+        # Qwen2-VL M-RoPE: frequency slots split into (t, h, w) sections,
+        # each rotated by its own position stream.
+        assert positions.ndim == 3 and positions.shape[1] == 3
+        sec = mrope_sections
+        assert sum(sec) == hd // 2, (sec, hd)
+        pos_parts = []
+        start = 0
+        for i, s in enumerate(sec):
+            pos_parts.append(
+                jnp.broadcast_to(positions[:, i, :, None].astype(jnp.float32),
+                                 (B, T, s)))
+            start += s
+        pos = jnp.concatenate(pos_parts, axis=-1)       # (B, T, hd/2)
+        ang = pos * freqs[None, None, :]
+    else:
+        ang = positions[..., None].astype(jnp.float32) * freqs  # (B,T,hd/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention (the fused 5-GCONV chain segment, three execution paths)
+# ---------------------------------------------------------------------------
+def _repeat_kv(k, n_rep: int):
+    if n_rep == 1:
+        return k
+    B, T, Hkv, hd = k.shape
+    return jnp.repeat(k, n_rep, axis=2)
+
+
+def attention_naive(q, k, v, *, causal: bool, q_offset=0,
+                    sliding_window: int = 0):
+    """q: (B,Tq,H,hd); k/v: (B,Tk,H,hd). Reference path (small shapes)."""
+    B, Tq, H, hd = q.shape
+    Tk = k.shape[1]
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * hd ** -0.5
+    q_ids = q_offset + jnp.arange(Tq)[:, None]
+    k_ids = jnp.arange(Tk)[None, :]
+    mask = jnp.ones((Tq, Tk), bool)
+    if causal:
+        mask &= q_ids >= k_ids
+    if sliding_window:
+        mask &= q_ids - k_ids < sliding_window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+def safe_unroll(n_trips: int, u: int) -> int:
+    """Unroll factor that divides the trip count (else 1)."""
+    return u if (u > 1 and n_trips % u == 0) else 1
+
+
+def attention_chunked(q, k, v, *, causal: bool, q_offset=0,
+                      sliding_window: int = 0, chunk: int = 1024,
+                      unroll: int = 1, shard_fn=None):
+    """Online-softmax over key chunks in pure JAX (lax.scan) — the fused
+    attention chain segment without materializing (Tq, Tk). This is the
+    dry-run/roofline path: HLO memory reflects O(Tq*chunk), not O(Tq*Tk)."""
+    B, Tq, H, hd = q.shape
+    Tk = k.shape[1]
+    n_ch = -(-Tk // chunk)
+    Tkp = n_ch * chunk
+    if Tkp != Tk:
+        k = jnp.pad(k, ((0, 0), (0, Tkp - Tk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, Tkp - Tk), (0, 0), (0, 0)))
+    kc = k.reshape(B, n_ch, chunk, H, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_ch, chunk, H, hd).transpose(1, 0, 2, 3, 4)
+    qf = q.astype(jnp.float32) * hd ** -0.5
+    q_ids = q_offset + jnp.arange(Tq)[:, None]
+
+    def step(carry, inp):
+        acc, m_prev, l_prev = carry
+        ci, kci, vci = inp
+        s = jnp.einsum("bqhd,bkhd->bhqk", qf, kci.astype(jnp.float32))
+        k_ids = ci * chunk + jnp.arange(chunk)[None, :]
+        mask = k_ids < Tk
+        if causal:
+            mask = mask & (q_ids >= k_ids)
+        if sliding_window:
+            mask = mask & (q_ids - k_ids < sliding_window)
+        s = jnp.where(mask[None, None], s, -1e30)
+        m_cur = jnp.maximum(m_prev, s.max(-1))
+        p = jnp.exp(s - m_cur[..., None])
+        alpha = jnp.exp(m_prev - m_cur)
+        l_cur = l_prev * alpha + p.sum(-1)
+        acc = (acc * alpha[..., None]
+               + jnp.einsum("bhqk,bkhd->bhqd", p, vci.astype(jnp.float32)))
+        return (acc, m_cur, l_cur), None
+
+    init = (jnp.zeros((B, H, Tq, hd), jnp.float32),
+            jnp.full((B, H, Tq), -1e30, jnp.float32),
+            jnp.zeros((B, H, Tq), jnp.float32))
+    if shard_fn is not None:
+        # the f32 online-softmax carries are the big live tensors of the
+        # chunk sweep: constrain them or GSPMD replicates them per device
+        init = (shard_fn(init[0], "attn_state"),
+                shard_fn(init[1], "attn_vec"),
+                shard_fn(init[2], "attn_vec"))
+    (acc, m, l), _ = jax.lax.scan(
+        step, init, (jnp.arange(n_ch), kc, vc),
+        unroll=safe_unroll(n_ch, unroll))
+    o = acc / jnp.maximum(l, 1e-30)[..., None]
+    return o.transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+def attention(cfg: ModelConfig, q, k, v, *, causal=True, q_offset=0,
+              shard_fn=None):
+    """GQA attention dispatch. q: (B,T,H,hd); k/v: (B,Tk,Hkv,hd)."""
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    k = _repeat_kv(k, n_rep)
+    v = _repeat_kv(v, n_rep)
+    if cfg.attn_impl == "pallas":
+        from repro.kernels import ops as kops
+        B, T, H, hd = q.shape
+        o = jax.vmap(lambda qi, ki, vi: kops.attention(
+            qi, ki, vi, causal=causal, q_offset=q_offset))(
+                q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                v.transpose(0, 2, 1, 3))
+        return o.transpose(0, 2, 1, 3)
+    if cfg.attn_impl == "chunked":
+        return attention_chunked(
+            q, k, v, causal=causal, q_offset=q_offset,
+            sliding_window=cfg.sliding_window, chunk=cfg.attn_chunk,
+            unroll=cfg.time_unroll, shard_fn=shard_fn)
+    return attention_naive(q, k, v, causal=causal, q_offset=q_offset,
+                           sliding_window=cfg.sliding_window)
+
+
+# ---------------------------------------------------------------------------
+# FFN
+# ---------------------------------------------------------------------------
+def ffn(cfg: ModelConfig, p: Dict[str, Any], x):
+    """SwiGLU (silu) or plain gelu MLP; weights may carry a gate or not."""
+    if cfg.act == "silu":
+        g = jnp.einsum("btd,df->btf", x, p["w_gate"].astype(x.dtype))
+        u = jnp.einsum("btd,df->btf", x, p["w_up"].astype(x.dtype))
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    else:
+        u = jnp.einsum("btd,df->btf", x, p["w_up"].astype(x.dtype))
+        h = jax.nn.gelu(u.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("btf,fd->btd", h, p["w_down"].astype(x.dtype))
+
+
+def ffn_param_shapes(cfg: ModelConfig, d_ff: Optional[int] = None):
+    f = d_ff or cfg.d_ff
+    shapes = {"w_up": (cfg.d_model, f), "w_down": (f, cfg.d_model)}
+    if cfg.act == "silu":
+        shapes["w_gate"] = (cfg.d_model, f)
+    return shapes
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+def softmax_xent(logits, labels, ignore_id: int = -1):
+    """logits: (B,T,V) any dtype; labels: (B,T) int. Mean over valid."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(lf, axis=-1)
+    ll = jnp.take_along_axis(
+        lf, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    valid = (labels != ignore_id).astype(jnp.float32)
+    return (nll * valid).sum() / jnp.maximum(valid.sum(), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# KV cache
+# ---------------------------------------------------------------------------
+def kv_cache_init(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
+    """Stacked-over-layers KV cache. Sliding-window models allocate only the
+    window (ring buffer)."""
+    L = cfg.n_layers if cfg.family != "encdec" else cfg.n_layers
+    size = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    dt = dtype or cdtype(cfg)
+    shape = (L, batch, size, cfg.n_kv_heads, cfg.hd)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt),
+            "pos": jnp.zeros((), jnp.int32)}
+
+
+def kv_cache_append_layer(cache_k, cache_v, pos, k_new, v_new,
+                          sliding_window: int = 0):
+    """Insert (B, 1, Hkv, hd) at position pos (ring-buffered if windowed)."""
+    size = cache_k.shape[1]
+    idx = (pos % size) if sliding_window else jnp.minimum(pos, size - 1)
+    ck = jax.lax.dynamic_update_slice_in_dim(cache_k, k_new, idx, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache_v, v_new, idx, axis=1)
+    return ck, cv

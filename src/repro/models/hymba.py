@@ -1,0 +1,288 @@
+"""Hymba — hybrid-head architecture: attention heads and SSM (Mamba-style)
+heads run **in parallel** on the same input, their normalized outputs fused
+(arXiv:2411.13676). Attention uses a sliding window (sub-quadratic => the
+long_500k cell runs for this arch); the SSM path carries (heads x d_head x
+ssm_state) recurrent state => O(1) decode.
+
+Simplifications vs. the released checkpoint (recorded in DESIGN.md
+§Arch-applicability): no meta-tokens, no cross-layer KV sharing; every layer
+is SWA+SSM parallel (the released model mixes 3 full-attention layers in).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import (ModelConfig, apply_rope, attention, cdtype, dense_init,
+                     ffn, ffn_param_shapes, norm, softmax_xent)
+from .transformer import decode_attention
+
+_noshard = lambda x, tag=None: x
+
+
+def layer_param_shapes(cfg: ModelConfig) -> Dict[str, Tuple[int, ...]]:
+    D, Q, KV, F, S = (cfg.d_model, cfg.q_dim, cfg.kv_dim, cfg.d_ff,
+                      cfg.ssm_state)
+    H = cfg.n_heads
+    return {
+        "ln1": (D,), "ln2": (D,),
+        # attention heads
+        "wq": (D, Q), "wk": (D, KV), "wv": (D, KV),
+        # ssm heads (Mamba2-style, scalar-ish data-dependent transition)
+        "s_in": (D, Q),                 # x -> per-head inner stream
+        "s_gate": (D, Q),
+        "s_dt": (Q, H),                 # per-head step size
+        "s_B": (Q, S), "s_C": (Q, S),   # state in/out projections
+        "s_A": (H,),                    # per-head log-decay base
+        "s_D": (Q,),                    # skip
+        # fusion + output
+        "beta_attn": (D,), "beta_ssm": (D,),
+        "wo": (Q, D),
+        **ffn_param_shapes(cfg),
+    }
+
+
+def init_params(cfg: ModelConfig, key) -> Dict[str, Any]:
+    dt = cdtype(cfg)
+    L = cfg.n_layers
+    layers = {}
+    for i, (name, shape) in enumerate(sorted(layer_param_shapes(cfg).items())):
+        sub = jax.random.fold_in(key, i)
+        if name.startswith(("ln", "beta")):
+            layers[name] = jnp.ones((L,) + shape, jnp.float32)
+        elif name == "s_A":
+            layers[name] = jnp.log(
+                jnp.broadcast_to(jnp.arange(1, cfg.n_heads + 1, dtype=jnp.float32),
+                                 (L, cfg.n_heads)))
+        elif name == "s_D":
+            layers[name] = jnp.ones((L,) + shape, jnp.float32)
+        else:
+            layers[name] = dense_init(sub, (L,) + shape, dt)
+    k1, k2 = jax.random.split(key)
+    return {
+        "embed": dense_init(k1, (cfg.vocab, cfg.d_model), dt, scale=1.0),
+        "final_ln": jnp.ones((cfg.d_model,), jnp.float32),
+        "lm_head": dense_init(k2, (cfg.d_model, cfg.vocab), dt),
+        "layers": layers,
+    }
+
+
+def ssm_heads(cfg: ModelConfig, p, x, state):
+    """Selective-SSM head path. x: (B,T,D); state: (B,H,hd,S).
+    h_t = exp(-dt_t * A) h_{t-1} + dt_t * (x_t  B_t^T);  y = h C_t + D x.
+
+    Two execution paths (tested equal):
+      * token scan (reference + decode),
+      * perf flag "ssm_chunked": the SSD/linear-attention dual — within a
+        chunk, y = tril(exp(cum_t - cum_s) * (C_t . B_s)) @ (dt*x): MXU
+        matmuls instead of a length-T sequential chain; the (hd x S) state
+        carries across chunks. Every decay exponent is a difference
+        cum_t - cum_s <= 0, so the form is overflow-safe by construction.
+    """
+    B, T, D = x.shape
+    H, hd, S = cfg.n_heads, cfg.hd, cfg.ssm_state
+    xi = jnp.einsum("btd,dq->btq", x, p["s_in"].astype(x.dtype))
+    gate = jnp.einsum("btd,dq->btq", x, p["s_gate"].astype(x.dtype))
+    dt = jax.nn.softplus(jnp.einsum(
+        "btq,qh->bth", xi.astype(jnp.float32),
+        p["s_dt"].astype(jnp.float32)))                        # (B,T,H)
+    Bm = jnp.einsum("btq,qs->bts", xi.astype(jnp.float32),
+                    p["s_B"].astype(jnp.float32))              # (B,T,S)
+    Cm = jnp.einsum("btq,qs->bts", xi.astype(jnp.float32),
+                    p["s_C"].astype(jnp.float32))
+    A = jnp.exp(p["s_A"].astype(jnp.float32))                  # (H,)
+    logd = -dt * A[None, None]                                 # (B,T,H) <= 0
+    xh = xi.astype(jnp.float32).reshape(B, T, H, hd)
+
+    chunk = 128
+    if "ssm_chunked" in cfg.perf_flags and T > 1 and T % chunk == 0:
+        y, state = _ssm_chunked(xh, dt, Bm, Cm, logd, state, chunk,
+                                cfg.ssm_unroll)
+    else:
+        decay = jnp.exp(logd)
+
+        def step(h, inp):
+            d_t, x_t, b_t, c_t, dt_t = inp  # (B,H) (B,H,hd) (B,S)x2 (B,H)
+            upd = jnp.einsum("bhn,bs->bhns", x_t * dt_t[..., None], b_t)
+            h = d_t[..., None, None] * h + upd
+            y = jnp.einsum("bhns,bs->bhn", h, c_t)
+            return h, y
+
+        xs = (decay.transpose(1, 0, 2), xh.transpose(1, 0, 2, 3),
+              Bm.transpose(1, 0, 2), Cm.transpose(1, 0, 2),
+              dt.transpose(1, 0, 2))
+        from .common import safe_unroll
+        state, ys = jax.lax.scan(step, state, xs,
+                                 unroll=safe_unroll(T, cfg.ssm_unroll))
+        y = ys.transpose(1, 0, 2, 3)
+    y = y.reshape(B, T, H * hd)
+    y = y + p["s_D"].astype(jnp.float32) * xi.astype(jnp.float32)
+    y = y * jax.nn.silu(gate.astype(jnp.float32))
+    return y, state
+
+
+def _ssm_chunked(xh, dt, Bm, Cm, logd, state, chunk: int, unroll: int):
+    """Chunk-parallel SSD form. xh: (B,T,H,hd); dt/logd: (B,T,H);
+    Bm/Cm: (B,T,S); state: (B,H,hd,S). Returns (y (B,T,H,hd), state)."""
+    from .common import safe_unroll
+
+    B, T, H, hd = xh.shape
+    nc = T // chunk
+
+    def resh(a):
+        return a.reshape((B, nc, chunk) + a.shape[2:]).transpose(
+            (1, 0, 2) + tuple(range(3, a.ndim + 1)))
+
+    xc, dtc, bc, cc, ldc = map(resh, (xh, dt, Bm, Cm, logd))
+
+    def per_chunk(h, inp):
+        x_, dt_, b_, c_, ld_ = inp        # (B,c,H,hd) (B,c,H) (B,c,S) ...
+        cum = jnp.cumsum(ld_, axis=1)     # (B,c,H), <= 0, decreasing
+        # inter-chunk: y_t += exp(cum_t) * (h . C_t)
+        y = (jnp.exp(cum)[..., None]
+             * jnp.einsum("bhns,bcs->bchn", h, c_))
+        # intra-chunk: score[t,s] = exp(cum_t - cum_s) * (C_t . B_s), s<=t
+        # (mask BEFORE exp: the s>t deltas are positive and would overflow)
+        delta = cum[:, :, None, :] - cum[:, None, :, :]        # (B,t,s,H)
+        tri = jnp.tril(jnp.ones((chunk, chunk), jnp.bool_))
+        delta = jnp.where(tri[None, :, :, None], delta, -jnp.inf)
+        cb = jnp.einsum("bts,bus->btu", c_, b_)                # (B,t,s)
+        score = jnp.exp(delta) * cb[..., None]                 # (B,t,s,H)
+        y = y + jnp.einsum("btuh,buhn->bthn", score,
+                           x_ * dt_[..., None])
+        # state: h' = exp(cum_last) h + sum_s exp(cum_last - cum_s) upd_s
+        k_dec = jnp.exp(cum[:, -1:, :] - cum)                  # (B,c,H)
+        h = (jnp.exp(cum[:, -1])[:, :, None, None] * h
+             + jnp.einsum("bchn,bcs->bhns",
+                          x_ * (dt_ * k_dec)[..., None], b_))
+        return h, y
+
+    state, ys = jax.lax.scan(per_chunk, state, (xc, dtc, bc, cc, ldc),
+                             unroll=safe_unroll(nc, unroll))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, T, H, hd)
+    return y, state
+
+
+def _fuse(cfg, p, attn_out, ssm_out):
+    """Hymba head fusion: per-channel normalized average with learned betas."""
+    def nrm(z):
+        zf = z.astype(jnp.float32)
+        return zf * jax.lax.rsqrt((zf * zf).mean(-1, keepdims=True) + 1e-6)
+
+    return 0.5 * (nrm(attn_out) * p["beta_attn"].astype(jnp.float32)
+                  + nrm(ssm_out) * p["beta_ssm"].astype(jnp.float32))
+
+
+def block(cfg: ModelConfig, p, x, positions, state, shard_fn=_noshard):
+    B, T, D = x.shape
+    h = norm(x, p["ln1"], kind="rms")
+    # attention path (sliding window)
+    q = jnp.einsum("btd,dq->btq", h, p["wq"].astype(x.dtype))
+    k = jnp.einsum("btd,dq->btq", h, p["wk"].astype(x.dtype))
+    v = jnp.einsum("btd,dq->btq", h, p["wv"].astype(x.dtype))
+    q = apply_rope(q.reshape(B, T, cfg.n_heads, cfg.hd), positions,
+                   cfg.rope_theta)
+    k = apply_rope(k.reshape(B, T, cfg.n_kv_heads, cfg.hd), positions,
+                   cfg.rope_theta)
+    v = v.reshape(B, T, cfg.n_kv_heads, cfg.hd)
+    attn_out = attention(cfg, q, k, v, causal=True,
+                         shard_fn=shard_fn).reshape(B, T, cfg.q_dim)
+    # ssm path (parallel, same input)
+    ssm_out, new_state = ssm_heads(cfg, p, h, state)
+    fused = _fuse(cfg, p, attn_out, ssm_out).astype(x.dtype)
+    x = x + jnp.einsum("btq,qd->btd", fused, p["wo"].astype(x.dtype))
+    x = shard_fn(x, "act")
+    h2 = norm(x, p["ln2"], kind="rms")
+    x = x + ffn(cfg, p, h2)
+    return shard_fn(x, "act"), new_state
+
+
+def init_state(cfg: ModelConfig, batch: int):
+    return jnp.zeros((cfg.n_layers, batch, cfg.n_heads, cfg.hd,
+                      cfg.ssm_state), jnp.float32)
+
+
+def forward(cfg: ModelConfig, params, tokens, shard_fn=_noshard):
+    B, T = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+    x = params["embed"][tokens].astype(cdtype(cfg))
+    state = init_state(cfg, B)
+
+    blk = functools.partial(block, cfg, shard_fn=shard_fn)
+    if cfg.remat:
+        from .common import remat_policy
+        blk = jax.checkpoint(blk, policy=remat_policy(cfg))
+
+    def scan_body(x, layer_in):
+        p_layer, st = layer_in
+        x, st2 = blk(p_layer, x, positions, st)
+        return x, st2
+
+    from .common import safe_unroll
+    x, _ = jax.lax.scan(scan_body, x, (params["layers"], state),
+                        unroll=safe_unroll(cfg.n_layers, cfg.layer_unroll))
+    x = norm(x, params["final_ln"], kind="rms")
+    logits = jnp.einsum("btd,dv->btv", x, params["lm_head"].astype(x.dtype))
+    return shard_fn(logits, "logits")
+
+
+def loss_fn(cfg: ModelConfig, params, batch, shard_fn=_noshard):
+    logits = forward(cfg, params, batch["tokens"], shard_fn=shard_fn)
+    return softmax_xent(logits, batch["labels"])
+
+
+# ---------------------------------------------------------------------------
+# serving: windowed KV cache + SSM state
+# ---------------------------------------------------------------------------
+def serve_state_init(cfg: ModelConfig, batch: int, max_len: int):
+    win = min(cfg.sliding_window or max_len, max_len)
+    dt = cdtype(cfg)
+    return {
+        "k": jnp.zeros((cfg.n_layers, batch, win, cfg.n_kv_heads, cfg.hd), dt),
+        "v": jnp.zeros((cfg.n_layers, batch, win, cfg.n_kv_heads, cfg.hd), dt),
+        "ssm": init_state(cfg, batch),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def decode_step(cfg: ModelConfig, params, token, cache, shard_fn=_noshard):
+    from .common import kv_cache_append_layer
+
+    B = token.shape[0]
+    pos = cache["pos"]
+    positions = jnp.broadcast_to(pos[None, None], (B, 1))
+    x = params["embed"][token].astype(cdtype(cfg))
+
+    def scan_body(x, layer_in):
+        p, ck, cv, st = layer_in
+        h = norm(x, p["ln1"], kind="rms")
+        q = jnp.einsum("btd,dq->btq", h, p["wq"].astype(x.dtype))
+        k = jnp.einsum("btd,dq->btq", h, p["wk"].astype(x.dtype))
+        v = jnp.einsum("btd,dq->btq", h, p["wv"].astype(x.dtype))
+        q = apply_rope(q.reshape(B, 1, cfg.n_heads, cfg.hd), positions,
+                       cfg.rope_theta)
+        k = apply_rope(k.reshape(B, 1, cfg.n_kv_heads, cfg.hd), positions,
+                       cfg.rope_theta)
+        v = v.reshape(B, 1, cfg.n_kv_heads, cfg.hd)
+        ck, cv = kv_cache_append_layer(ck, cv, pos, k, v, cfg.sliding_window)
+        attn_out = decode_attention(cfg, q, ck, cv, pos).reshape(B, 1,
+                                                                 cfg.q_dim)
+        ssm_out, st2 = ssm_heads(cfg, p, h, st)
+        fused = _fuse(cfg, p, attn_out, ssm_out).astype(x.dtype)
+        x = x + jnp.einsum("btq,qd->btd", fused, p["wo"].astype(x.dtype))
+        h2 = norm(x, p["ln2"], kind="rms")
+        x = x + ffn(cfg, p, h2)
+        return x, (ck, cv, st2)
+
+    from .common import safe_unroll
+    x, (ck, cv, st) = jax.lax.scan(
+        scan_body, x, (params["layers"], cache["k"], cache["v"],
+                       cache["ssm"]),
+        unroll=safe_unroll(cfg.n_layers, cfg.layer_unroll))
+    x = norm(x, params["final_ln"], kind="rms")
+    logits = jnp.einsum("btd,dv->btv", x, params["lm_head"].astype(x.dtype))
+    return shard_fn(logits, "logits"), {
+        "k": ck, "v": cv, "ssm": st, "pos": pos + 1}

@@ -1,0 +1,138 @@
+"""LM transformer block as a GCONV Chain (DESIGN.md §3).
+
+This is the paper's thesis applied to the assigned architectures: every op
+in a modern decoder block lowers to the GCONV vocabulary —
+
+    rmsnorm      -> reduce-GCONV + broadcast-GCONV   (Table-2 pattern)
+    qkv/out/ffn  -> FC-pattern GCONVs (kernel covers the input)
+    attention    -> the 5-GCONV segment (scores, softmax chain, values)
+    swiglu       -> two FCs + silu post + elementwise-mul GCONV
+    MoE experts  -> ONE grouped GCONV with Ng = n_experts
+
+The chain is used for (a) Table-1-style heterogeneity analysis of the LM
+archs, (b) Algorithm-1 mapping / cost-model studies on the TPU spec, and
+(c) interpreter-vs-model equivalence tests at smoke scale (RoPE and causal
+masking are omitted here — they are ``pre`` operators in chain terms and do
+not change any loop structure; the equivalence test disables them on the
+model side too).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+from repro.core import layers as L
+from repro.core.chain import Chain
+from repro.core.gconv import DimSpec, GConv, Op
+from repro.models.common import ModelConfig
+
+
+def block_chain(cfg: ModelConfig, batch: int, seq: int,
+                name: str = "lm_block") -> Chain:
+    """One pre-norm decoder block (no RoPE / causal mask; MHA form)."""
+    B, T, D = batch, seq, cfg.d_model
+    H, hd = cfg.n_heads, cfg.hd
+    c = Chain(f"{name}[{cfg.name}]")
+    x = c.add_input("x", (B, T, D))
+
+    h = L.rms_norm(c, x, name="ln1")
+    q = L.linear(c, h, out_f=cfg.q_dim, name="wq")
+    k = L.linear(c, h, out_f=cfg.q_dim, name="wk")   # MHA view for the chain
+    v = L.linear(c, h, out_f=cfg.q_dim, name="wv")
+    # (B,T,H*hd) -> (B,T,H,hd) -> (B,H,T,hd) -> insert singleton axis
+    qv = L.view(c, q, (B, H, T, 1, hd), pre_shape=(B, T, H, hd),
+                perm=(0, 2, 1, 3), name="q5")
+    kv = L.view(c, k, (B, H, 1, T, hd), pre_shape=(B, T, H, hd),
+                perm=(0, 2, 1, 3), name="k5")
+    vv = L.view(c, v, (B, H, 1, T, hd), pre_shape=(B, T, H, hd),
+                perm=(0, 2, 1, 3), name="v5")
+    s = L.attention_scores(c, qv, kv, scale=hd ** -0.5, name="scores")
+    pr = L.softmax(c, s, axis=3, name="probs")
+    o = L.attention_values(c, pr, vv, name="attnv")      # (B,H,T,1,hd)
+    of = L.view(c, o, (B, T, H * hd), perm=(0, 2, 1, 3, 4), name="oflat")
+    wo = L.linear(c, of, out_f=D, name="wo")
+    r1 = L.add_tensors(c, wo, x, name="res1", layer="residual")
+
+    h2 = L.rms_norm(c, r1, name="ln2")
+    if cfg.n_experts:
+        y = _moe_chain(c, cfg, h2, B, T)
+    else:
+        g = L.linear(c, h2, out_f=cfg.d_ff, name="w_gate")
+        gs = L.activation(c, g, "silu", name="silu")
+        u = L.linear(c, h2, out_f=cfg.d_ff, name="w_up")
+        gu = L.mul_tensors(c, gs, u, name="swiglu")
+        y = L.linear(c, gu, out_f=D, name="w_down")
+    out = L.add_tensors(c, y, r1, name="res2", layer="residual")
+    c.mark_output(out)
+    return c
+
+
+def _moe_chain(c: Chain, cfg: ModelConfig, h2: str, B: int, T: int) -> str:
+    """Capacity-dispatch MoE as chain nodes: the expert FFN is ONE grouped
+    GCONV with Ng = n_experts (the paper's group parameter, literally)."""
+    from repro.core.chain import Movement
+
+    D, E, F = cfg.d_model, cfg.n_experts, cfg.d_ff
+    N = B * T
+    C = max(8, int(cfg.capacity_factor * cfg.top_k * N / E))
+    router = L.linear(c, h2, out_f=E, name="router")
+    L.softmax(c, router, axis=-1, name="router_probs")
+    # dispatch: runtime-dependent gather (chain models it as movement)
+    flat = L.view(c, h2, (N, D), name="tok_flat")
+    disp = c.add(Movement(name="dispatch", input=flat,
+                          out_shape=(E, C, D), gather=True),
+                 layer="moe_dispatch", traditional=False)
+    w_g = c.add_param("experts.gate", (E, D * F, 1))
+    w_u = c.add_param("experts.up", (E, D * F, 1))
+    w_d = c.add_param("experts.down", (E, F * D, 1))
+    gate = c.add(GConv(name="e_gate",
+                       dims=(DimSpec("E", ng=E),
+                             DimSpec("C", nop=F, nks=D),
+                             DimSpec("Dd", nopc=C)),
+                 input=_ecd_to_edc(c, disp, E, C, D, "disp_t"),
+                 kernel=w_g, main="mul", reduce="add",
+                 post=(Op("silu"),)),
+                 layer="moe_expert", traditional=True)
+    up = c.add(GConv(name="e_up",
+                     dims=(DimSpec("E", ng=E),
+                           DimSpec("C", nop=F, nks=D),
+                           DimSpec("Dd", nopc=C)),
+                     input=_ecd_to_edc(c, disp, E, C, D, "disp_t2"),
+                     kernel=w_u, main="mul", reduce="add"),
+               layer="moe_expert", traditional=True)
+    hidden = L.mul_tensors(c, gate, up, name="e_swiglu", layer="moe_expert")
+    down = c.add(GConv(name="e_down",
+                       dims=(DimSpec("E", ng=E),
+                             DimSpec("F", nop=D, nks=F),
+                             DimSpec("Cc", nopc=C)),
+                       input=_efc_view(c, hidden, E, F, C),
+                       kernel=w_d, main="mul", reduce="add"),
+                 layer="moe_expert", traditional=True)
+    comb = c.add(Movement(name="combine", input=down, out_shape=(B, T, D),
+                          gather=True),
+                 layer="moe_combine", traditional=False)
+    return comb
+
+
+def _ecd_to_edc(c, disp, E, C, D, name):
+    return L.view(c, disp, (E, D, C), perm=(0, 2, 1), name=name)
+
+
+def _efc_view(c, hidden, E, F, C):
+    # hidden: (E, F, C) already in e_gate/e_up output layout (g, op, opc)
+    return hidden
+
+
+def chain_stats_table(batch: int = 4, seq: int = 128):
+    """Table-1-style heterogeneity stats for the LM archs (per block)."""
+    from repro import configs
+
+    rows = []
+    for arch in ("tinyllama-1.1b", "yi-34b", "olmoe-1b-7b"):
+        cfg = configs.get(arch)
+        ch = block_chain(cfg, batch, seq)
+        st = ch.stats()
+        rows.append(dict(arch=arch, gconvs=st["n_gconv"],
+                         macs=st["macs"],
+                         mxu_eligible=sum(1 for g in ch.gconv_nodes()
+                                          if g.is_mxu_eligible)))
+    return rows

@@ -1,0 +1,134 @@
+"""Mixture-of-Experts FFN (olmoe 64e/top-8, arctic 128e/top-2+dense).
+
+The paper's flagship GCONV fit (DESIGN.md §3): experts are literally the
+``Ng`` group parameter of a grouped GCONV — expert FFN compute is the grouped
+matmul kernel's native workload, and the dispatch/combine edges are chain
+data movement.
+
+Dispatch is gather-based with static capacity (GShard-style, but with a
+token-index table instead of a one-hot dispatch tensor, so HLO compute is
+E*C*D*F — the MODEL_FLOPS of the active experts — rather than the dense
+N*E*C mask einsum):
+
+  1. router top-k + renormalized gates,
+  2. per-expert token table (E, C) via a position-in-expert cumsum
+     (capacity-dropped tokens contribute nothing),
+  3. gather -> grouped FFN (einsum or the Pallas grouped kernel) -> weighted
+     scatter-add back.
+
+Aux load-balance loss per Fedus et al.; both MoE archs use it.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, cdtype, dense_init, ffn, ffn_param_shapes
+
+_noshard = lambda x, tag=None: x
+
+
+def moe_layer_param_shapes(cfg: ModelConfig) -> Dict[str, Tuple[int, ...]]:
+    D, E, F = cfg.d_model, cfg.n_experts, cfg.d_ff
+    shapes = {
+        "router": (D, E),
+        "e_gate": (E, D, F),
+        "e_up": (E, D, F),
+        "e_down": (E, F, D),
+    }
+    if cfg.moe_dense_ff:
+        for k, s in ffn_param_shapes(cfg, cfg.moe_dense_ff).items():
+            shapes[f"dense_{k}"] = s
+    return shapes
+
+
+def capacity(cfg: ModelConfig, n_tokens: int) -> int:
+    c = int(cfg.capacity_factor * cfg.top_k * n_tokens / cfg.n_experts)
+    return max(8, -(-c // 8) * 8)
+
+
+def moe_ffn(cfg: ModelConfig, p: Dict[str, Any], x, shard_fn=_noshard):
+    """x: (B, T, D) -> (y, aux_loss)."""
+    B, T, D = x.shape
+    N = B * T
+    E, K = cfg.n_experts, cfg.top_k
+    C = capacity(cfg, N)
+    xf = x.reshape(N, D)
+
+    logits = jnp.einsum("nd,de->ne", xf.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)          # (N, K)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # aux load-balance loss (Switch/GShard): E * sum_e f_e * P_e
+    me = probs.mean(axis=0)                                   # (E,)
+    ce = jnp.zeros((E,), jnp.float32).at[expert_idx.reshape(-1)].add(
+        1.0 / (N * K))
+    aux = cfg.router_aux_coef * E * jnp.sum(me * ce)
+
+    flat_expert = expert_idx.T.reshape(-1)                    # (K*N,)
+    if "moe_sort" in cfg.perf_flags:
+        # sort-based position-in-expert: O(KN log KN) instead of the
+        # O(KN*E) one-hot cumsum — §Perf hillclimb for the MoE cells
+        order = jnp.argsort(flat_expert)
+        sorted_e = flat_expert[order]
+        first = jnp.searchsorted(sorted_e, sorted_e, side="left")
+        pos_sorted = jnp.arange(sorted_e.shape[0]) - first
+        pos = jnp.zeros_like(pos_sorted).at[order].set(pos_sorted)
+    else:
+        # position-in-expert via one-hot cumsum over (K*N, E) (GShard-style)
+        onehot = jax.nn.one_hot(flat_expert, E, dtype=jnp.int32)
+        pos_in_e = jnp.cumsum(onehot, axis=0) * onehot        # rank within e
+        pos = (pos_in_e.sum(-1) - 1)                          # (K*N,)
+    keep = pos < C
+    # token table: (E, C) -> flat token index (N); dropped slots point at
+    # token 0 with zero combine weight
+    token_ids = jnp.tile(jnp.arange(N), K)
+    slot = jnp.where(keep, pos, C)        # dropped -> out of bounds -> "drop"
+    table = jnp.zeros((E, C), jnp.int32)
+    table = table.at[flat_expert, slot].set(token_ids, mode="drop")
+    gates_flat = gate_vals.T.reshape(-1)
+    gate_table = jnp.zeros((E, C), jnp.float32)
+    gate_table = gate_table.at[flat_expert, slot].set(
+        gates_flat, mode="drop")
+
+    xg = xf[table]                                            # (E, C, D)
+    xg = shard_fn(xg, "moe_dispatch")
+    # grouped GCONV: Ng=E groups of (C x D) @ (D x F)
+    g = jnp.einsum("ecd,edf->ecf", xg, p["e_gate"].astype(xg.dtype))
+    u = jnp.einsum("ecd,edf->ecf", xg, p["e_up"].astype(xg.dtype))
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(xg.dtype) * u
+    ye = jnp.einsum("ecf,efd->ecd", h, p["e_down"].astype(xg.dtype))
+    ye = ye * gate_table[..., None].astype(ye.dtype)
+    ye = shard_fn(ye, "moe_combine")
+
+    if "moe_gather_combine" in cfg.perf_flags:
+        # combine by GATHERING each token's k expert outputs instead of
+        # scatter-adding into a replicated (N, D) buffer: the gather indexes
+        # the already-gated ye by (expert, slot) per (k, token); dropped
+        # tokens read slot C-1 of their expert with gate 0 via the gate
+        # gathered alongside (ye already carries the gate weighting, and
+        # dropped slots hold some other token's value — so gather the raw
+        # expert output and re-apply this token's gate, zeroed when dropped)
+        h_raw = jnp.einsum("ecf,efd->ecd", h, p["e_down"].astype(h.dtype))
+        h_raw = shard_fn(h_raw, "moe_combine")
+        slot_c = jnp.minimum(slot, C - 1).reshape(K, N)
+        exp_c = flat_expert.reshape(K, N)
+        picked = h_raw[exp_c, slot_c]                     # (K, N, D)
+        g = jnp.where(keep, gates_flat, 0.0).reshape(K, N)
+        y = jnp.einsum("kn,knd->nd", g, picked.astype(jnp.float32))
+        y = y.astype(ye.dtype)
+    else:
+        y = jnp.zeros((N, D), ye.dtype).at[table.reshape(-1)].add(
+            ye.reshape(E * C, D))
+    # constrain the combined output back to the token sharding immediately
+    y = shard_fn(y.reshape(B, T, D), "act")
+    if cfg.moe_dense_ff:
+        dense_p = {k[len("dense_"):]: v for k, v in p.items()
+                   if k.startswith("dense_")}
+        y = y + ffn(cfg, dense_p, x)
+    return y, aux

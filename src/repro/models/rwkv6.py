@@ -1,0 +1,265 @@
+"""RWKV6 "Finch" — attention-free RNN with data-dependent decay.
+
+Per head (size N): state S in R^{N x N};
+    y_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+with the *data-dependent* per-channel decay (the Finch contribution)
+    w_t = exp(-exp(w0 + tanh(x_t A) B)).
+
+Two equivalent execution paths, tested against each other:
+  * ``wkv_scan``    — token-level lax.scan (the semantic reference; also the
+    decode step with T=1),
+  * ``wkv_chunked`` — chunk-parallel form (cumulative log-decays inside a
+    chunk, state carried across chunks) — the TPU-friendly path: MXU matmuls
+    of (chunk x N) blocks instead of a length-T sequential chain.
+
+GCONV note (DESIGN.md §6): the projections and channel-mix are ordinary
+GCONVs; the recurrence has data-dependent kernel parameters, outside the
+paper's static-chain model — documented as the technique's limit.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, cdtype, dense_init, norm, softmax_xent
+
+_noshard = lambda x, tag=None: x
+LORA_R = 64
+
+
+def layer_param_shapes(cfg: ModelConfig) -> Dict[str, Tuple[int, ...]]:
+    D, F = cfg.d_model, cfg.d_ff
+    H = cfg.ssm_heads or (cfg.d_model // 64)
+    return {
+        "ln1": (D,), "ln2": (D,),
+        # time-mix token-shift interpolation factors (static part)
+        "mu_r": (D,), "mu_k": (D,), "mu_v": (D,), "mu_w": (D,), "mu_g": (D,),
+        "wr": (D, D), "wk": (D, D), "wv": (D, D), "wg": (D, D),
+        "wo": (D, D),
+        # data-dependent decay LoRA: w_t = exp(-exp(w0 + tanh(x A) B))
+        "w0": (D,), "decay_A": (D, LORA_R), "decay_B": (LORA_R, D),
+        "u": (D,),                       # per-channel bonus
+        "gn": (D,),                      # per-head group-norm gain
+        # channel mix
+        "mu_ck": (D,), "mu_cr": (D,),
+        "ck": (D, F), "cv": (F, D), "cr": (D, D),
+    }
+
+
+def init_params(cfg: ModelConfig, key) -> Dict[str, Any]:
+    dt = cdtype(cfg)
+    L = cfg.n_layers
+    layers = {}
+    for i, (name, shape) in enumerate(sorted(layer_param_shapes(cfg).items())):
+        sub = jax.random.fold_in(key, i)
+        if name.startswith(("ln", "gn")):
+            layers[name] = jnp.ones((L,) + shape, jnp.float32)
+        elif name.startswith("mu_"):
+            layers[name] = 0.5 * jnp.ones((L,) + shape, jnp.float32)
+        elif name == "w0":
+            layers[name] = jnp.full((L,) + shape, -1.0, jnp.float32)
+        elif name == "u":
+            layers[name] = jnp.zeros((L,) + shape, jnp.float32)
+        else:
+            layers[name] = dense_init(sub, (L,) + shape, dt)
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "embed": dense_init(k1, (cfg.vocab, cfg.d_model), dt, scale=1.0),
+        "final_ln": jnp.ones((cfg.d_model,), jnp.float32),
+        "lm_head": dense_init(k2, (cfg.d_model, cfg.vocab), dt),
+        "layers": layers,
+    }
+
+
+# ---------------------------------------------------------------------------
+# WKV recurrence
+# ---------------------------------------------------------------------------
+def wkv_scan(r, k, v, w, u, state):
+    """Reference/decode path. r,k,v,w: (B,T,H,N); u: (H,N);
+    state: (B,H,N,N) [key x value]. Returns (y, state)."""
+    B, T, H, N = r.shape
+
+    def step(S, inp):
+        rt, kt, vt, wt = inp                       # (B,H,N)
+        kv = kt[..., :, None] * vt[..., None, :]   # (B,H,N,N)
+        y = jnp.einsum("bhn,bhnm->bhm", rt, S + u[None, :, :, None] * kv)
+        S = wt[..., :, None] * S + kv
+        return S, y
+
+    xs = tuple(a.transpose(1, 0, 2, 3) for a in (r, k, v, w))
+    state, ys = jax.lax.scan(step, state, xs)
+    return ys.transpose(1, 0, 2, 3), state        # (B,T,H,N)
+
+
+def wkv_chunked(r, k, v, w, u, state, chunk: int = 64, unroll: int = 1):
+    """Chunk-parallel WKV: within a chunk, O(T*N) cumulative decays + two
+    (T x N) matmuls; across chunks, a scan over the (N x N) state."""
+    B, T, H, N = r.shape
+    assert T % chunk == 0, (T, chunk)
+    nc = T // chunk
+    rs = r.reshape(B, nc, chunk, H, N).transpose(1, 0, 2, 3, 4)
+    ks = k.reshape(B, nc, chunk, H, N).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(B, nc, chunk, H, N).transpose(1, 0, 2, 3, 4)
+    ws = w.reshape(B, nc, chunk, H, N).transpose(1, 0, 2, 3, 4)
+
+    def per_chunk(S, inp):
+        rc, kc, vc, wc = inp                       # (B,chunk,H,N)
+        logw = jnp.log(jnp.maximum(wc, 1e-20))
+        cum = jnp.cumsum(logw, axis=1)             # prod_{s<=t} w_s
+        # inter-chunk: y_t += (r_t * prod_{s<t} w_s) @ S
+        r_dec = rc * jnp.exp(cum - logw)           # prod_{s<t}
+        y = jnp.einsum("bthn,bhnm->bthm", r_dec, S)
+        # intra-chunk: y_t += sum_{s<t} (r_t * W(s,t)) . k_s v_s + u bonus
+        # W(s,t) = prod_{s<u<t} w_u = exp(cum_{t-1} - cum_s)
+        a = rc * jnp.exp(cum - logw)               # (B,t,H,N)
+        b = kc * jnp.exp(-cum)                     # (B,s,H,N)
+        att = jnp.einsum("bthn,bshn->bhts", a, b)
+        tri = jnp.tril(jnp.ones((chunk, chunk)), -1)
+        att = att * tri[None, None]
+        y = y + jnp.einsum("bhts,bshn->bthn", att, vc)
+        y = y + (jnp.einsum("bthn,bthn->bth", rc, u[None, None] * kc)
+                 [..., None] * vc)
+        # state update: S' = diag(prod_all w) S + sum_s diag(prod_{u>s}) k v
+        k_dec = kc * jnp.exp(cum[:, -1:] - cum)
+        S = (jnp.exp(cum[:, -1])[..., None] * S
+             + jnp.einsum("bshn,bshm->bhnm", k_dec, vc))
+        return S, y
+
+    from .common import safe_unroll
+    state, ys = jax.lax.scan(per_chunk, state, (rs, ks, vs, ws),
+                             unroll=safe_unroll(nc, unroll))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, T, H, N)
+    return y, state
+
+
+def _ddlerp(x, x_prev, mu):
+    return x + (x_prev - x) * mu.astype(x.dtype)
+
+
+def time_mix(cfg: ModelConfig, p, x, x_prev, wkv_state, *, chunked: bool):
+    """x: (B,T,D); x_prev: (B,1,D) last token of previous segment.
+    Returns (y, last_x, new_state)."""
+    B, T, D = x.shape
+    H = cfg.ssm_heads or (D // 64)
+    N = D // H
+    xs = jnp.concatenate([x_prev, x[:, :-1]], axis=1)     # token shift
+    xr = _ddlerp(x, xs, p["mu_r"])
+    xk = _ddlerp(x, xs, p["mu_k"])
+    xv = _ddlerp(x, xs, p["mu_v"])
+    xw = _ddlerp(x, xs, p["mu_w"])
+    xg = _ddlerp(x, xs, p["mu_g"])
+    r = jnp.einsum("btd,de->bte", xr, p["wr"].astype(x.dtype))
+    k = jnp.einsum("btd,de->bte", xk, p["wk"].astype(x.dtype))
+    v = jnp.einsum("btd,de->bte", xv, p["wv"].astype(x.dtype))
+    g = jnp.einsum("btd,de->bte", xg, p["wg"].astype(x.dtype))
+    # data-dependent decay (Finch): w = exp(-exp(w0 + tanh(x A) B)).
+    # The log-decay is clamped to [-2.5, -1e-4] so the chunked form's
+    # exp(-cumsum) stays inside f32 range (standard practice in RWKV
+    # kernels; the scan path uses the same clamp for exact equivalence).
+    lora = jnp.einsum(
+        "btr,rd->btd",
+        jnp.tanh(jnp.einsum("btd,dr->btr", xw.astype(jnp.float32),
+                            p["decay_A"].astype(jnp.float32))),
+        p["decay_B"].astype(jnp.float32))
+    log_w = jnp.clip(-jnp.exp(p["w0"].astype(jnp.float32) + lora),
+                     -2.5, -1e-4)
+    w = jnp.exp(log_w)                                 # (B,T,D) in (0,1)
+
+    shp = (B, T, H, N)
+    rh, kh, vh = (a.astype(jnp.float32).reshape(shp) for a in (r, k, v))
+    wh = w.reshape(shp)
+    uh = p["u"].astype(jnp.float32).reshape(H, N)
+    if chunked and T % 32 == 0 and T > 1:
+        y, state = wkv_chunked(rh, kh, vh, wh, uh, wkv_state, chunk=32,
+                               unroll=cfg.time_unroll)
+    else:
+        y, state = wkv_scan(rh, kh, vh, wh, uh, wkv_state)
+    # per-head group norm + silu(g) gate
+    y = y.reshape(B, T, H, N)
+    y = y * jax.lax.rsqrt((y * y).mean(-1, keepdims=True) + 1e-5)
+    y = (y.reshape(B, T, D) * p["gn"].astype(jnp.float32)
+         * jax.nn.silu(g.astype(jnp.float32)))
+    out = jnp.einsum("btd,de->bte", y.astype(x.dtype),
+                     p["wo"].astype(x.dtype))
+    return out, x[:, -1:], state
+
+
+def channel_mix(cfg: ModelConfig, p, x, x_prev):
+    xs = jnp.concatenate([x_prev, x[:, :-1]], axis=1)
+    xk = _ddlerp(x, xs, p["mu_ck"])
+    xr = _ddlerp(x, xs, p["mu_cr"])
+    kk = jnp.einsum("btd,df->btf", xk, p["ck"].astype(x.dtype))
+    kk = jnp.square(jax.nn.relu(kk.astype(jnp.float32))).astype(x.dtype)
+    out = jnp.einsum("btf,fd->btd", kk, p["cv"].astype(x.dtype))
+    rr = jax.nn.sigmoid(jnp.einsum(
+        "btd,de->bte", xr, p["cr"].astype(x.dtype)).astype(jnp.float32))
+    return (rr * out.astype(jnp.float32)).astype(x.dtype), x[:, -1:]
+
+
+def block(cfg: ModelConfig, p, x, states, *, chunked: bool,
+          shard_fn=_noshard):
+    """states: dict(wkv (B,H,N,N), tm_x (B,1,D), cm_x (B,1,D))."""
+    h = norm(x, p["ln1"], kind="rms")
+    y, tm_x, wkv = time_mix(cfg, p, h, states["tm_x"], states["wkv"],
+                            chunked=chunked)
+    x = shard_fn(x + y, "act")
+    h2 = norm(x, p["ln2"], kind="rms")
+    y2, cm_x = channel_mix(cfg, p, h2, states["cm_x"])
+    x = shard_fn(x + y2, "act")
+    return x, {"wkv": wkv, "tm_x": tm_x, "cm_x": cm_x}
+
+
+def init_state(cfg: ModelConfig, batch: int):
+    D = cfg.d_model
+    H = cfg.ssm_heads or (D // 64)
+    N = D // H
+    return {
+        "wkv": jnp.zeros((cfg.n_layers, batch, H, N, N), jnp.float32),
+        "tm_x": jnp.zeros((cfg.n_layers, batch, 1, D), cdtype(cfg)),
+        "cm_x": jnp.zeros((cfg.n_layers, batch, 1, D), cdtype(cfg)),
+    }
+
+
+def forward(cfg: ModelConfig, params, tokens, state=None, *,
+            chunked: bool = True, shard_fn=_noshard):
+    """Returns (logits, new_state)."""
+    B, T = tokens.shape
+    x = params["embed"][tokens].astype(cdtype(cfg))
+    if state is None:
+        state = init_state(cfg, B)
+
+    blk = functools.partial(block, cfg, chunked=chunked, shard_fn=shard_fn)
+    if cfg.remat and T > 1:
+        from .common import remat_policy
+        blk = jax.checkpoint(blk, policy=remat_policy(cfg))
+
+    def scan_body(x, layer_in):
+        p_layer, st = layer_in
+        x, st2 = blk(p_layer, x, st)
+        return x, st2
+
+    from .common import safe_unroll
+    x, new_state = jax.lax.scan(
+        scan_body, x, (params["layers"], state),
+        unroll=safe_unroll(cfg.n_layers, cfg.layer_unroll))
+    x = norm(x, params["final_ln"], kind="rms")
+    logits = jnp.einsum("btd,dv->btv", x,
+                        params["lm_head"].astype(x.dtype))
+    return shard_fn(logits, "logits"), new_state
+
+
+def loss_fn(cfg: ModelConfig, params, batch, shard_fn=_noshard):
+    logits, _ = forward(cfg, params, batch["tokens"], shard_fn=shard_fn)
+    return softmax_xent(logits, batch["labels"])
+
+
+def decode_step(cfg: ModelConfig, params, token, state, shard_fn=_noshard):
+    """token: (B,1). State-carried decode — O(1) in context length (the
+    long_500k cell's whole point)."""
+    logits, state = forward(cfg, params, token, state, chunked=False,
+                            shard_fn=shard_fn)
+    return logits, state

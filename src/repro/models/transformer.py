@@ -1,0 +1,296 @@
+"""Dense decoder-only transformer family (tinyllama / yi / starcoder2 /
+phi3 / qwen2-vl backbone).
+
+Pure-function model: ``init_params`` builds a stacked-per-layer pytree,
+``forward`` scans one block over the stack (compact HLO), ``decode_step``
+runs one token against a KV cache. GQA + RoPE/M-RoPE + SwiGLU-or-GELU FFN,
+optional sliding window. MoE subclasses override the FFN (see moe.py).
+
+``shard_fn(x, tag)`` is an injection point for activation sharding
+constraints; the launcher supplies it (models stay mesh-agnostic).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import (ModelConfig, apply_rope, attention, attention_naive,
+                     cdtype, dense_init, ffn, ffn_param_shapes, kv_cache_init,
+                     norm, softmax_xent, stacked_init)
+from .common import safe_unroll as _safe_unroll
+
+Params = Dict[str, Any]
+_noshard = lambda x, tag=None: x
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+def layer_param_shapes(cfg: ModelConfig) -> Dict[str, Tuple[int, ...]]:
+    D, Q, KV = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    shapes = {
+        "ln1": (D,), "ln2": (D,),
+        "wq": (D, Q), "wk": (D, KV), "wv": (D, KV), "wo": (Q, D),
+    }
+    if cfg.norm == "layer":
+        shapes["ln1_b"] = (D,)
+        shapes["ln2_b"] = (D,)
+    if cfg.n_experts:
+        from .moe import moe_layer_param_shapes
+        shapes.update(moe_layer_param_shapes(cfg))
+    else:
+        shapes.update(ffn_param_shapes(cfg))
+    return shapes
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    keys = jax.random.split(key, 8)
+    dt = cdtype(cfg)
+    L = cfg.n_layers
+    layers = {}
+    for i, (name, shape) in enumerate(sorted(layer_param_shapes(cfg).items())):
+        sub = jax.random.fold_in(keys[0], i)
+        if name.startswith("ln"):
+            init = jnp.ones if not name.endswith("_b") else jnp.zeros
+            layers[name] = init((L,) + shape, jnp.float32)
+        else:
+            layers[name] = stacked_init(sub, L, shape, dt)
+    params = {
+        "embed": dense_init(keys[1], (cfg.vocab, cfg.d_model), dt, scale=1.0),
+        "final_ln": jnp.ones((cfg.d_model,), jnp.float32),
+        "layers": layers,
+    }
+    if cfg.norm == "layer":
+        params["final_ln_b"] = jnp.zeros((cfg.d_model,), jnp.float32)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(keys[2], (cfg.d_model, cfg.vocab), dt)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+def _norm(cfg, x, g, b=None):
+    return norm(x, g, b, kind=cfg.norm)
+
+
+def _qkv(cfg: ModelConfig, p, x, positions):
+    B, T, D = x.shape
+    q = jnp.einsum("btd,dq->btq", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("btd,dq->btq", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("btd,dq->btq", x, p["wv"].astype(x.dtype))
+    q = q.reshape(B, T, cfg.n_heads, cfg.hd)
+    k = k.reshape(B, T, cfg.n_kv_heads, cfg.hd)
+    v = v.reshape(B, T, cfg.n_kv_heads, cfg.hd)
+    q = apply_rope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+    k = apply_rope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+    return q, k, v
+
+
+def block(cfg: ModelConfig, p, x, positions, shard_fn=_noshard,
+          ffn_fn: Optional[Callable] = None):
+    """One decoder block (pre-norm). Returns (x, aux_loss)."""
+    h = _norm(cfg, x, p["ln1"], p.get("ln1_b"))
+    q, k, v = _qkv(cfg, p, h, positions)
+    o = attention(cfg, q, k, v, causal=True, shard_fn=shard_fn)
+    o = o.reshape(*x.shape[:2], cfg.q_dim)
+    x = x + jnp.einsum("btq,qd->btd", o, p["wo"].astype(x.dtype))
+    x = shard_fn(x, "act")
+    h2 = _norm(cfg, x, p["ln2"], p.get("ln2_b"))
+    if ffn_fn is None:
+        y, aux = ffn(cfg, p, h2), 0.0
+    else:
+        y, aux = ffn_fn(cfg, p, h2, shard_fn)
+    x = x + y
+    return shard_fn(x, "act"), aux
+
+
+def _default_positions(cfg: ModelConfig, B: int, T: int):
+    pos = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+    if cfg.mrope_sections:
+        # text-only stream: all three M-RoPE position channels coincide
+        pos = jnp.broadcast_to(pos[:, None], (B, 3, T))
+    return pos
+
+
+def embed_tokens(cfg: ModelConfig, params, tokens):
+    return params["embed"][tokens].astype(cdtype(cfg))
+
+
+def apply_embed_overlay(x, overlay, mask):
+    """VLM/audio frontends: replace masked positions with precomputed
+    modality embeddings (the stubbed frontend output)."""
+    return jnp.where(mask[..., None], overlay.astype(x.dtype), x)
+
+
+def forward(cfg: ModelConfig, params: Params, tokens, positions=None,
+            shard_fn=_noshard, embed_overlay=None, overlay_mask=None,
+            ffn_fn: Optional[Callable] = None):
+    """Full-sequence forward -> (logits, aux_loss)."""
+    B, T = tokens.shape[:2]
+    if positions is None:
+        positions = _default_positions(cfg, B, T)
+    x = embed_tokens(cfg, params, tokens)
+    if embed_overlay is not None:
+        x = apply_embed_overlay(x, embed_overlay, overlay_mask)
+    x = shard_fn(x, "act")
+
+    blk = functools.partial(block, cfg, shard_fn=shard_fn, ffn_fn=ffn_fn)
+    if cfg.remat:
+        from .common import remat_policy
+        blk = jax.checkpoint(blk, policy=remat_policy(cfg))
+
+    def scan_body(carry, p_layer):
+        x, aux = carry
+        x, a = blk(p_layer, x, positions)
+        return (x, aux + a), None
+
+    (x, aux), _ = jax.lax.scan(
+        scan_body, (x, 0.0), params["layers"],
+        unroll=_safe_unroll(cfg.n_layers, cfg.layer_unroll))
+    x = norm(x, params["final_ln"], params.get("final_ln_b"), kind=cfg.norm)
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"]).astype(x.dtype)
+    logits = jnp.einsum("btd,dv->btv", x, head)
+    return shard_fn(logits, "logits"), aux
+
+
+def loss_fn(cfg: ModelConfig, params: Params, batch, shard_fn=_noshard,
+            ffn_fn=None):
+    logits, aux = forward(
+        cfg, params, batch["tokens"], batch.get("positions"),
+        shard_fn=shard_fn, embed_overlay=batch.get("embed_overlay"),
+        overlay_mask=batch.get("overlay_mask"), ffn_fn=ffn_fn)
+    return softmax_xent(logits, batch["labels"]) + aux
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode with KV cache
+# ---------------------------------------------------------------------------
+def decode_attention(cfg: ModelConfig, q, cache_k, cache_v, pos,
+                     shard_fn=None):
+    """q: (B,1,H,hd); cache: (B,S,Hkv,hd); pos = tokens already in cache
+    (the new token's index). Ring-buffered caches attend every slot once
+    full; before that, slots beyond pos are masked."""
+    B, S = cache_k.shape[:2]
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    if "gqa_norepeat" in cfg.perf_flags and n_rep > 1:
+        # grouped form: never materialize the n_rep-times-repeated cache
+        # (the repeat multiplies decode HBM traffic by n_rep — §Perf H-A4)
+        T1 = q.shape[1]
+        qg = q.reshape(B, T1, cfg.n_kv_heads, n_rep, cfg.hd)
+        s = jnp.einsum("bqgrd,bkgd->bgrqk", qg.astype(jnp.float32),
+                       cache_k.astype(jnp.float32)) * cfg.hd ** -0.5
+        k_ids = jnp.arange(S)[None, None, None, None, :]
+        valid = (k_ids <= pos) | (pos >= S)
+        s = jnp.where(valid, s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bgrqk,bkgd->bqgrd", p,
+                       cache_v.astype(jnp.float32))
+        return o.reshape(B, T1, cfg.n_heads, cfg.hd).astype(q.dtype)
+    k = jnp.repeat(cache_k, n_rep, axis=2)
+    v = jnp.repeat(cache_v, n_rep, axis=2)
+    if shard_fn is not None and "decode_q" in cfg.perf_flags:
+        # keep q/k/v consistently head_dim-sharded so the score contraction
+        # psums over "model" instead of resharding the whole cache per step
+        q = shard_fn(q, "decode_qkv")
+        k = shard_fn(k, "decode_qkv")
+        v = shard_fn(v, "decode_qkv")
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * cfg.hd ** -0.5
+    k_ids = jnp.arange(S)[None, None, None, :]
+    valid = (k_ids <= pos) | (pos >= S)
+    s = jnp.where(valid, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+def decode_step(cfg: ModelConfig, params: Params, token, cache,
+                shard_fn=_noshard, ffn_fn: Optional[Callable] = None):
+    """token: (B, 1) int; cache from kv_cache_init. Returns (logits, cache).
+
+    The dry-run's ``serve_step``: one new token against a seq_len-deep KV
+    cache (decode_32k / long_500k cells).
+    """
+    from .common import kv_cache_append_layer
+
+    B = token.shape[0]
+    pos = cache["pos"]
+    positions = jnp.broadcast_to(pos[None, None], (B, 1))
+    if cfg.mrope_sections:
+        positions = jnp.broadcast_to(pos[None, None, None], (B, 3, 1))
+    x = embed_tokens(cfg, params, token)
+
+    def scan_body(carry, layer_in):
+        x = carry
+        p_layer, ck, cv = layer_in
+        h = _norm(cfg, x, p_layer["ln1"], p_layer.get("ln1_b"))
+        q, k, v = _qkv(cfg, p_layer, h, positions)
+        ck, cv = kv_cache_append_layer(ck, cv, pos, k, v,
+                                       cfg.sliding_window)
+        o = decode_attention(cfg, q, ck, cv, pos, shard_fn=shard_fn)
+        o = o.reshape(B, 1, cfg.q_dim)
+        x = x + jnp.einsum("btq,qd->btd", o, p_layer["wo"].astype(x.dtype))
+        h2 = _norm(cfg, x, p_layer["ln2"], p_layer.get("ln2_b"))
+        if ffn_fn is None:
+            y = ffn(cfg, p_layer, h2)
+        else:
+            y, _ = ffn_fn(cfg, p_layer, h2, shard_fn)
+        return x + y, (ck, cv)
+
+    (x), (ck, cv) = jax.lax.scan(
+        scan_body, x, (params["layers"], cache["k"], cache["v"]),
+        unroll=_safe_unroll(cfg.n_layers, cfg.layer_unroll))
+    x = norm(x, params["final_ln"], params.get("final_ln_b"), kind=cfg.norm)
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"]).astype(x.dtype)
+    logits = jnp.einsum("btd,dv->btv", x, head)
+    new_cache = {"k": ck, "v": cv, "pos": pos + 1}
+    return shard_fn(logits, "logits"), new_cache
+
+
+def prefill(cfg: ModelConfig, params: Params, tokens, shard_fn=_noshard,
+            ffn_fn=None):
+    """Full-sequence forward that also returns the populated KV cache.
+    (Windowed models cache only the trailing window.)"""
+    from .common import kv_cache_init
+
+    B, T = tokens.shape
+    positions = _default_positions(cfg, B, T)
+    x = embed_tokens(cfg, params, tokens)
+    caches_k, caches_v = [], []
+
+    # prefill keeps the per-layer loop unscanned=False: scan with per-layer
+    # cache outputs stacked
+    def scan_body(x, p_layer):
+        h = _norm(cfg, x, p_layer["ln1"], p_layer.get("ln1_b"))
+        q, k, v = _qkv(cfg, p_layer, h, positions)
+        o = attention(cfg, q, k, v, causal=True, shard_fn=shard_fn)
+        o = o.reshape(B, T, cfg.q_dim)
+        x = x + jnp.einsum("btq,qd->btd", o, p_layer["wo"].astype(x.dtype))
+        h2 = _norm(cfg, x, p_layer["ln2"], p_layer.get("ln2_b"))
+        if ffn_fn is None:
+            y = ffn(cfg, p_layer, h2)
+        else:
+            y, _ = ffn_fn(cfg, p_layer, h2, shard_fn)
+        x = shard_fn(x + y, "act")
+        if cfg.sliding_window and cfg.sliding_window < T:
+            k = k[:, -cfg.sliding_window:]
+            v = v[:, -cfg.sliding_window:]
+        return x, (k, v)
+
+    x, (ck, cv) = jax.lax.scan(
+        scan_body, x, params["layers"],
+        unroll=_safe_unroll(cfg.n_layers, cfg.layer_unroll))
+    x = norm(x, params["final_ln"], params.get("final_ln_b"), kind=cfg.norm)
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"]).astype(x.dtype)
+    logits = jnp.einsum("bd,dv->bv", x[:, -1], head)
+    cache = {"k": ck, "v": cv,
+             "pos": jnp.asarray(min(T, cfg.sliding_window) if
+                                cfg.sliding_window else T, jnp.int32)}
+    return logits, cache

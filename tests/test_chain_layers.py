@@ -1,0 +1,268 @@
+"""Layer-decomposition correctness: every GCONV chain must match the plain
+JAX/XLA reference implementation of its layer (the paper's Table 2 / §3
+claims, checked numerically)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import layers as L
+from repro.core.chain import Chain
+from repro.core.gconv import DimSpec, GConv, Op
+from repro.core.interpreter import ChainExecutor
+
+jax.config.update("jax_enable_x64", False)
+
+
+def run_chain(chain, inputs, params=None, seed=0):
+    ex = ChainExecutor(chain)
+    p = ex.init_params(jax.random.PRNGKey(seed))
+    if params:
+        p.update(params)
+    return ex(inputs, p, keep_all=True), p
+
+
+def rand(key, *shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape)
+
+
+# ---------------------------------------------------------------------------
+# traditional layers
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("groups,stride,pad,k,H", [
+    (1, 1, 0, 3, 13), (1, 2, 1, 3, 13), (2, 1, 1, 3, 13), (8, 1, 0, 1, 13),
+    (1, 4, 0, 11, 15),   # AlexNet-conv1-like geometry (exact, Eq. 1)
+])
+def test_conv2d_matches_lax(groups, stride, pad, k, H):
+    B, C, W, OC = 2, 8, H, 16
+    chain = Chain("t")
+    x = chain.add_input("x", (B, C, H, W))
+    y = L.conv2d(chain, x, out_c=OC, k=k, stride=stride, pad=pad,
+                 groups=groups, bias=True)
+    env, p = run_chain(chain, {"x": rand(0, B, C, H, W)})
+    w = p[f"{y}.w"].reshape(OC, C // groups, k, k)
+    b = p[f"{y}.b"].reshape(OC)
+    ref = jax.lax.conv_general_dilated(
+        env["x"], w, (stride, stride), [(pad, pad), (pad, pad)],
+        feature_group_count=groups) + b[None, :, None, None]
+    np.testing.assert_allclose(env[y], ref, rtol=2e-5, atol=2e-5)
+
+
+def test_depthwise_conv():
+    B, C, H, W = 2, 6, 9, 9
+    chain = Chain("t")
+    x = chain.add_input("x", (B, C, H, W))
+    y = L.conv2d(chain, x, out_c=C, k=3, stride=1, pad=1, groups=C, bias=False)
+    assert chain.meta[y]["layer"] == "depthwise_conv"
+    assert not chain.meta[y]["traditional"]
+    env, p = run_chain(chain, {"x": rand(1, B, C, H, W)})
+    w = p[f"{y}.w"].reshape(C, 1, 3, 3)
+    ref = jax.lax.conv_general_dilated(
+        env["x"], w, (1, 1), [(1, 1), (1, 1)], feature_group_count=C)
+    np.testing.assert_allclose(env[y], ref, rtol=2e-5, atol=2e-5)
+
+
+def test_conv3d_matches_lax():
+    B, C, T, H, W = 1, 3, 8, 9, 9
+    chain = Chain("t")
+    x = chain.add_input("x", (B, C, T, H, W))
+    y = L.conv3d(chain, x, out_c=4, k=3, kt=3, pad=1, pad_t=1, bias=False)
+    env, p = run_chain(chain, {"x": rand(2, B, C, T, H, W)})
+    w = p[f"{y}.w"].reshape(4, C, 3, 3, 3)
+    ref = jax.lax.conv_general_dilated(
+        env["x"], w, (1, 1, 1), [(1, 1)] * 3,
+        dimension_numbers=("NCTHW", "OITHW", "NCTHW"))
+    np.testing.assert_allclose(env[y], ref, rtol=2e-5, atol=2e-5)
+
+
+def test_fc_and_linear():
+    B, C, F = 4, 10, 7
+    chain = Chain("t")
+    x = chain.add_input("x", (B, C))
+    y = L.fc(chain, x, out_f=F)
+    env, p = run_chain(chain, {"x": rand(3, B, C)})
+    ref = env["x"] @ p[f"{y}.w"].reshape(F, C).T + p[f"{y}.b"].reshape(F)
+    np.testing.assert_allclose(env[y], ref, rtol=2e-5, atol=2e-5)
+
+    chain2 = Chain("t2")
+    x2 = chain2.add_input("x", (2, 5, C))
+    y2 = L.linear(chain2, x2, out_f=F, bias=True)
+    env2, p2 = run_chain(chain2, {"x": rand(4, 2, 5, C)})
+    ref2 = jnp.einsum("btc,fc->btf", env2["x"],
+                      p2[f"{y2}.w"].reshape(F, C)) + p2[f"{y2}.b"].reshape(F)
+    np.testing.assert_allclose(env2[y2], ref2, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("mode", ["max", "avg"])
+def test_pool2d(mode):
+    B, C, H, W = 2, 3, 8, 8
+    chain = Chain("t")
+    x = chain.add_input("x", (B, C, H, W))
+    fn = L.maxpool2d if mode == "max" else L.avgpool2d
+    y = fn(chain, x, k=3, stride=2, pad=1)
+    env, _ = run_chain(chain, {"x": rand(5, B, C, H, W)})
+    if mode == "max":
+        ref = jax.lax.reduce_window(
+            env["x"], -jnp.inf, jax.lax.max, (1, 1, 3, 3), (1, 1, 2, 2),
+            [(0, 0), (0, 0), (1, 1), (1, 1)])
+    else:
+        ref = jax.lax.reduce_window(
+            env["x"], 0.0, jax.lax.add, (1, 1, 3, 3), (1, 1, 2, 2),
+            [(0, 0), (0, 0), (1, 1), (1, 1)]) / 9.0
+    np.testing.assert_allclose(env[y], ref, rtol=2e-5, atol=2e-5)
+
+
+def test_softmax_chain():
+    chain = Chain("t")
+    x = chain.add_input("x", (3, 5, 11))
+    y = L.softmax(chain, x, axis=-1)
+    env, _ = run_chain(chain, {"x": 3 * rand(6, 3, 5, 11)})
+    np.testing.assert_allclose(env[y], jax.nn.softmax(env["x"], axis=-1),
+                               rtol=2e-5, atol=2e-6)
+
+
+# ---------------------------------------------------------------------------
+# non-traditional layers (the paper's motivating cases)
+# ---------------------------------------------------------------------------
+def test_lrn_matches_formula():
+    B, C, H, W = 2, 16, 5, 5
+    n, alpha, beta, k = 5, 1e-4, 0.75, 2.0
+    chain = Chain("t")
+    x = chain.add_input("x", (B, C, H, W))
+    y = L.lrn(chain, x, n=n, alpha=alpha, beta=beta, k_const=k)
+    xv = rand(7, B, C, H, W)
+    env, _ = run_chain(chain, {"x": xv})
+    sq = xv * xv
+    pad = jnp.pad(sq, [(0, 0), (n // 2, n // 2), (0, 0), (0, 0)])
+    win = sum(pad[:, i:i + C] for i in range(n))
+    ref = xv * (k + alpha / n * win) ** (-beta)
+    np.testing.assert_allclose(env[y], ref, rtol=2e-5, atol=2e-6)
+
+
+@pytest.mark.parametrize("spatial", [False, True])
+def test_batchnorm_fp_table2(spatial):
+    B, C, H, W = 8, 4, 3, 3
+    eps = 1e-5
+    chain = Chain("t")
+    x = chain.add_input("x", (B, C, H, W))
+    y, fp = L.batch_norm_fp(chain, x, eps=eps, spatial=spatial)
+    xv = rand(8, B, C, H, W) * 2 + 1
+    env, _ = run_chain(chain, {"x": xv})
+    axes = (0, 2, 3) if spatial else (0,)
+    mu = xv.mean(axis=axes, keepdims=True)
+    var = ((xv - mu) ** 2).mean(axis=axes, keepdims=True)
+    ref = (xv - mu) / jnp.sqrt(var + eps)
+    np.testing.assert_allclose(env[y], ref, rtol=2e-4, atol=2e-5)
+    # intermediates match Table 2's columns too
+    np.testing.assert_allclose(env[fp["fp1"]], mu, rtol=2e-5, atol=2e-6)
+    np.testing.assert_allclose(env[fp["fp3"]], 1 / jnp.sqrt(var + eps),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_batchnorm_bp_matches_autodiff():
+    """BP1–BP6 must equal jax.grad of the FP formula (paper Eq. 5)."""
+    B, C, H, W = 8, 4, 3, 3
+    eps = 1e-5
+    chain = Chain("t")
+    x = chain.add_input("x", (B, C, H, W))
+    g = chain.add_input("gO", (B, C, H, W))
+    y, fp = L.batch_norm_fp(chain, x, eps=eps)
+    gi, _ = L.batch_norm_bp(chain, g, fp)
+    xv = rand(9, B, C, H, W) * 1.5
+    gv = rand(10, B, C, H, W)
+    env, _ = run_chain(chain, {"x": xv, "gO": gv})
+
+    def bn(x):
+        mu = x.mean(axis=0, keepdims=True)
+        var = ((x - mu) ** 2).mean(axis=0, keepdims=True)
+        return (x - mu) / jnp.sqrt(var + eps)
+
+    _, vjp = jax.vjp(bn, xv)
+    ref = vjp(gv)[0]
+    np.testing.assert_allclose(env[gi], ref, rtol=5e-3, atol=1e-5)
+
+
+def test_scale_and_residual_and_concat():
+    B, C, H, W = 2, 4, 3, 3
+    chain = Chain("t")
+    x = chain.add_input("x", (B, C, H, W))
+    s = L.scale_layer(chain, x)
+    r = L.add_tensors(chain, s, x)
+    c = L.concat(chain, [r, x], axis=1)
+    xv = rand(11, B, C, H, W)
+    env, p = run_chain(chain, {"x": xv})
+    ref_s = xv * p[f"{s}.gamma"] + p[f"{s}.beta"]
+    np.testing.assert_allclose(env[s], ref_s, rtol=2e-5, atol=2e-6)
+    np.testing.assert_allclose(env[r], ref_s + xv, rtol=2e-5, atol=2e-6)
+    assert env[c].shape == (B, 2 * C, H, W)
+
+
+def test_dropout_mask():
+    chain = Chain("t")
+    x = chain.add_input("x", (4, 6))
+    y = L.dropout(chain, x, rate=0.5)
+    xv = rand(12, 4, 6)
+    mask = (jax.random.uniform(jax.random.PRNGKey(1), (4, 6)) > 0.5)
+    env, _ = run_chain(chain, {"x": xv, f"{y}.mask": mask.astype(jnp.float32)})
+    np.testing.assert_allclose(env[y], xv * mask * 2.0, rtol=2e-5, atol=2e-6)
+
+
+# ---------------------------------------------------------------------------
+# LM-era layers
+# ---------------------------------------------------------------------------
+def test_rmsnorm():
+    B, T, C = 2, 5, 16
+    chain = Chain("t")
+    x = chain.add_input("x", (B, T, C))
+    y = L.rms_norm(chain, x)
+    xv = rand(13, B, T, C)
+    env, p = run_chain(chain, {"x": xv})
+    ref = xv / jnp.sqrt((xv ** 2).mean(-1, keepdims=True) + 1e-6)
+    ref = ref * p[f"{y}.gamma"]
+    np.testing.assert_allclose(env[y], ref, rtol=2e-5, atol=2e-6)
+
+
+def test_attention_segment():
+    """QK^T -> softmax -> PV as a 5-GCONV chain segment == jnp attention."""
+    B, H, T, D = 2, 3, 6, 8
+    chain = Chain("t")
+    qi = chain.add_input("q", (B, H, T, 1, D))
+    ki = chain.add_input("k", (B, H, 1, T, D))
+    vi = chain.add_input("v", (B, H, 1, T, D))
+    s = L.attention_scores(chain, qi, ki, scale=1.0 / np.sqrt(D))
+    pr = L.softmax(chain, s, axis=3)
+    o = L.attention_values(chain, pr, vi)
+    q = rand(14, B, H, T, D)
+    k = rand(15, B, H, T, D)
+    v = rand(16, B, H, T, D)
+    env, _ = run_chain(chain, {
+        "q": q[:, :, :, None, :], "k": k[:, :, None, :, :],
+        "v": v[:, :, None, :, :]})
+    att = jax.nn.softmax(jnp.einsum("bhqd,bhkd->bhqk", q, k) / np.sqrt(D), -1)
+    ref = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+    np.testing.assert_allclose(env[o][:, :, :, 0, :], ref,
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_movement_view():
+    chain = Chain("t")
+    x = chain.add_input("x", (2, 6, 4))
+    y = L.view(chain, x, (2, 3, 2, 4))
+    z = L.view(chain, y, (2, 2, 3, 4), perm=(0, 2, 1, 3))
+    xv = rand(17, 2, 6, 4)
+    env, _ = run_chain(chain, {"x": xv})
+    np.testing.assert_allclose(
+        env[z], xv.reshape(2, 3, 2, 4).transpose(0, 2, 1, 3))
+
+
+def test_chain_stats_traditional_split():
+    chain = Chain("t")
+    x = chain.add_input("x", (2, 4, 8, 8))
+    c = L.conv2d(chain, x, out_c=8, k=3, pad=1)
+    r = L.relu(chain, c)
+    b, _ = L.batch_norm_fp(chain, r)
+    st = chain.stats()
+    assert st["n_gconv"] == 6            # conv + relu + 4 BN GCONVs
+    assert st["traditional_macs"] > 0
+    assert st["nontraditional_macs"] > 0
+    assert st["macs"] == st["traditional_macs"] + st["nontraditional_macs"]

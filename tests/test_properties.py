@@ -1,0 +1,123 @@
+"""Hypothesis property tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import assume, given, settings, strategies as st
+
+from repro.core.chain import Chain
+from repro.core.fusion import fuse_chain
+from repro.core.gconv import DimSpec, GConv
+from repro.core.interpreter import ChainExecutor, eval_gconv
+from repro.core import layers as L
+
+dim_strategy = st.builds(
+    dict,
+    ng=st.integers(1, 3), nop=st.integers(1, 3), nopc=st.integers(1, 4),
+    nks=st.integers(1, 3), stride=st.integers(1, 2))
+
+
+@given(dim_strategy)
+@settings(max_examples=80, deadline=None)
+def test_eq1_shape_algebra(d):
+    """Eq. (1) (corrected): Nips reconstructs the input size; padding keeps
+    the identity; sizes stay positive."""
+    ds = DimSpec("A", **d)
+    assert ds.in_size == ds.ng * ((ds.nopc - 1) * ds.stride + ds.nks)
+    assert ds.out_size == ds.ng * ds.nop * ds.nopc
+    assert ds.k_size == ds.ng * ds.nop * ds.nks
+    if ds.nks > ds.stride and ds.nopc > 1:
+        assert ds.has_overlap_reuse
+
+
+@given(dim_strategy, dim_strategy, st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_gconv_matches_explicit_loop_semantics(d1, d2, seed):
+    """Interpreter == the paper's Fig.-4 nested loop, on random 2-D GCONVs."""
+    g = GConv(name="g",
+              dims=(DimSpec("A", **d1), DimSpec("B", **d2)),
+              input="x", kernel="k", main="mul", reduce="add")
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    x = jax.random.normal(k1, g.in_shape)
+    kk = jax.random.normal(k2, g.k_shape)
+    got = np.asarray(eval_gconv(g, x, kk))
+
+    # explicit loops (paper Fig. 4)
+    dA, dB = g.dims
+    want = np.zeros(g.out_shape, np.float32)
+    xv = np.asarray(x).reshape(dA.ng, dA.nips, dB.ng, dB.nips)
+    kv = np.asarray(kk).reshape(dA.ng, dA.nop, dA.nks, dB.ng, dB.nop, dB.nks)
+    for gA in range(dA.ng):
+        for opA in range(dA.nop):
+            for ocA in range(dA.nopc):
+                for ksA in range(dA.nks):
+                    for gB in range(dB.ng):
+                        for opB in range(dB.nop):
+                            for ocB in range(dB.nopc):
+                                for ksB in range(dB.nks):
+                                    ia = ksA + dA.stride * ocA
+                                    ib = ksB + dB.stride * ocB
+                                    want[gA * dA.nop * dA.nopc
+                                         + opA * dA.nopc + ocA,
+                                         gB * dB.nop * dB.nopc
+                                         + opB * dB.nopc + ocB] += (
+                                        xv[gA, ia, gB, ib]
+                                        * kv[gA, opA, ksA, gB, opB, ksB])
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+@given(st.integers(2, 6), st.integers(2, 8), st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_fusion_preserves_semantics_random_chain(c, hw, seed):
+    """Property: §4.3 fusion never changes chain numerics."""
+    chain = Chain("r")
+    x = chain.add_input("x", (2, c, hw, hw))
+    y = L.conv2d(chain, x, out_c=c, k=1, bias=False)
+    y, _ = L.batch_norm_fp(chain, y)
+    y = L.relu(chain, y)
+    y = L.scale_layer(chain, y)
+    chain.mark_output(y)
+    fused, rep = fuse_chain(chain)
+    ex0, ex1 = ChainExecutor(chain), ChainExecutor(fused)
+    params = ex0.init_params(jax.random.PRNGKey(seed))
+    xv = jax.random.normal(jax.random.PRNGKey(seed + 1), (2, c, hw, hw))
+    out0 = ex0({"x": xv}, params)[y]
+    out1 = ex1({"x": xv}, {k: v for k, v in params.items()
+                           if k in fused.params})[fused.outputs[0]]
+    np.testing.assert_allclose(out0, out1, rtol=1e-4, atol=1e-4)
+    # fusion is idempotent once it reaches a fixpoint
+    fused2, rep2 = fuse_chain(fused)
+    assert rep2.after_len == rep.after_len
+
+
+@given(st.integers(1, 3), st.integers(2, 5), st.integers(1, 3),
+       st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_softmax_chain_rows_sum_to_one(b, t, c, seed):
+    chain = Chain("s")
+    x = chain.add_input("x", (b, t, c + 1))
+    y = L.softmax(chain, x, axis=-1)
+    ex = ChainExecutor(chain)
+    xv = 3 * jax.random.normal(jax.random.PRNGKey(seed), (b, t, c + 1))
+    out = np.asarray(ex({"x": xv}, {})[y])
+    np.testing.assert_allclose(out.sum(-1), 1.0, rtol=1e-5)
+    assert (out >= 0).all()
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.integers(1, 3))
+@settings(max_examples=10, deadline=None)
+def test_adamw_step_invariants(seed, dim):
+    """Optimizer property: a step moves params opposite to the gradient for
+    fresh state (warmup>0, no decay), and never produces non-finite values."""
+    from repro.optim import adamw
+
+    cfg = adamw.OptConfig(peak_lr=1e-2, warmup_steps=1, total_steps=100,
+                          weight_decay=0.0, clip_norm=1e9)
+    w = jax.random.normal(jax.random.PRNGKey(seed), (dim, dim))
+    params = {"w": w}
+    g = {"w": jnp.ones_like(w)}
+    state = adamw.init_state(cfg, params)
+    new_p, state, _ = adamw.update(cfg, params, g, state)
+    assert np.isfinite(np.asarray(new_p["w"])).all()
+    assert (np.asarray(new_p["w"]) <= np.asarray(w) + 1e-9).all()

@@ -1,0 +1,216 @@
+"""Substrate tests: optimizer, data pipeline, checkpointing, fault-tolerant
+runtime (restart/replay, straggler flags, corruption recovery)."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.data.pipeline import DataConfig, Prefetcher, batches, host_slice
+from repro.optim import adamw
+from repro.optim.compress import dequantize, init_errors, quantize
+from repro.runtime.fault_tolerance import FaultTolerantLoop, StragglerMonitor
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+def test_adamw_reduces_quadratic_loss():
+    cfg = adamw.OptConfig(peak_lr=0.1, warmup_steps=5, total_steps=200,
+                          weight_decay=0.0, clip_norm=10.0)
+    params = {"w": jnp.ones((8, 8)), "b": jnp.zeros((8,))}
+    target = {"w": 0.3 * jnp.ones((8, 8)), "b": 0.5 * jnp.ones((8,))}
+    state = adamw.init_state(cfg, params)
+
+    def loss(p):
+        return sum(jnp.sum((p[k] - target[k]) ** 2) for k in p)
+
+    l0 = float(loss(params))
+    for _ in range(100):
+        g = jax.grad(loss)(params)
+        params, state, stats = adamw.update(cfg, params, g, state)
+    assert float(loss(params)) < 0.05 * l0
+    assert int(state["step"]) == 100
+
+
+def test_adamw_bf16_moments_and_schedule():
+    cfg = adamw.OptConfig(moment_dtype="bfloat16", warmup_steps=10,
+                          total_steps=100, peak_lr=1e-3)
+    params = {"w": jnp.ones((4, 4), jnp.bfloat16)}
+    state = adamw.init_state(cfg, params)
+    assert state["m"]["w"].dtype == jnp.bfloat16
+    # warmup is linear
+    assert float(adamw.schedule(cfg, jnp.asarray(5))) == pytest.approx(
+        0.5e-3, rel=1e-5)
+    # cosine tail ends at min_lr_ratio * peak
+    assert float(adamw.schedule(cfg, jnp.asarray(100))) == pytest.approx(
+        cfg.min_lr_ratio * cfg.peak_lr, rel=1e-4)
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=30, deadline=None)
+def test_int8_compression_error_feedback_bounded(seed):
+    """Property: with error feedback, the *cumulative* quantization error
+    stays bounded by one quantization step (it never accumulates)."""
+    g = np.asarray(jax.random.normal(jax.random.PRNGKey(seed), (64,)))
+    err = jnp.zeros((64,))
+    total_true = jnp.zeros((64,))
+    total_sent = jnp.zeros((64,))
+    for t in range(5):
+        q, scale, err = quantize(jnp.asarray(g) * (t + 1), err)
+        total_true = total_true + jnp.asarray(g) * (t + 1)
+        total_sent = total_sent + dequantize(q, scale)
+    resid = np.abs(np.asarray(total_true - total_sent))
+    step = float(scale)
+    assert resid.max() <= step * 1.01 + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+def test_pipeline_determinism_and_host_sharding():
+    cfg = DataConfig(vocab=100, seq_len=16, global_batch=8)
+    full = [next(batches(cfg, start_step=s)) for s in range(3)]
+    # restart at step 2 reproduces batch 2 exactly
+    again = next(batches(cfg, start_step=2))
+    np.testing.assert_array_equal(full[2]["tokens"], again["tokens"])
+    # two "hosts" see disjoint row slices that concatenate to the global
+    h0 = next(batches(cfg, start_step=1, process_index=0, process_count=2))
+    h1 = next(batches(cfg, start_step=1, process_index=1, process_count=2))
+    np.testing.assert_array_equal(
+        np.concatenate([h0["tokens"], h1["tokens"]]), full[1]["tokens"])
+    assert host_slice(8, 1, 2) == (4, 8)
+
+
+def test_pipeline_labels_are_shifted_tokens():
+    cfg = DataConfig(vocab=50, seq_len=8, global_batch=2)
+    b = next(batches(cfg))
+    assert b["tokens"].shape == (2, 8)
+    assert b["labels"].shape == (2, 8)
+
+
+def test_prefetcher():
+    cfg = DataConfig(vocab=10, seq_len=4, global_batch=2)
+    pf = Prefetcher(batches(cfg), depth=2)
+    b0 = next(pf)
+    b1 = next(pf)
+    assert b0["step"] == 0 and b1["step"] == 1
+    pf.close()
+
+
+def test_file_backed_reader(tmp_path):
+    path = tmp_path / "tokens.bin"
+    arr = np.arange(10000, dtype=np.uint16) % 97
+    arr.tofile(path)
+    cfg = DataConfig(vocab=97, seq_len=16, global_batch=4, path=str(path),
+                     dtype="int32")
+    b = next(batches(cfg))
+    assert b["tokens"].shape == (4, 16)
+    assert b["tokens"].max() < 97
+    # window contents come from the file (consecutive values mod 97)
+    row = b["tokens"][0]
+    diffs = np.diff(row.astype(int)) % 97
+    assert np.all(diffs == 1)
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+def _tree():
+    return {"params": {"w": jnp.arange(12, dtype=jnp.float32).reshape(3, 4)},
+            "opt": {"m": jnp.ones((3, 4)), "step": jnp.asarray(7)}}
+
+
+def test_checkpoint_roundtrip_and_rotation(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep_n=2, async_write=False)
+    tree = _tree()
+    for s in (10, 20, 30):
+        mgr.save(s, tree)
+    assert mgr.all_steps() == [20, 30]          # rotation keeps last 2
+    step, restored = mgr.restore(jax.tree.map(jnp.zeros_like, tree))
+    assert step == 30
+    np.testing.assert_array_equal(restored["params"]["w"],
+                                  tree["params"]["w"])
+
+
+def test_checkpoint_corruption_falls_back(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep_n=3, async_write=False)
+    tree = _tree()
+    mgr.save(1, tree)
+    mgr.save(2, tree)
+    # corrupt the newest checkpoint
+    victim = os.path.join(str(tmp_path), "step_2", "params__w.npy")
+    size = os.path.getsize(victim)
+    with open(victim, "r+b") as f:
+        f.seek(size - 8)                 # inside the payload region
+        f.write(b"\xff\xff\xff\xff")
+    step, restored = mgr.restore(jax.tree.map(jnp.zeros_like, tree))
+    assert step == 1                             # fell back past corruption
+    np.testing.assert_array_equal(restored["params"]["w"],
+                                  tree["params"]["w"])
+
+
+def test_checkpoint_async(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_write=True)
+    mgr.save(5, _tree())
+    mgr.wait()
+    assert mgr.latest_step() == 5
+
+
+# ---------------------------------------------------------------------------
+# fault-tolerant loop
+# ---------------------------------------------------------------------------
+def test_restart_replay_recovers_and_is_deterministic(tmp_path):
+    """Inject a failure mid-run; the loop must restore and converge to the
+    same final state as a clean run."""
+    def make_step():
+        def step_fn(state, step):
+            return {"x": state["x"] + step, "step": jnp.asarray(step + 1)}
+        return step_fn
+
+    clean_mgr = CheckpointManager(str(tmp_path / "clean"), async_write=False)
+    loop = FaultTolerantLoop(clean_mgr, ckpt_every=3, max_restarts=3)
+    clean = loop.run({"x": jnp.zeros(()), "step": jnp.asarray(0)},
+                     make_step(), n_steps=10)
+
+    boom = {"armed": True}
+
+    def fault(step):
+        if step == 7 and boom["armed"]:
+            boom["armed"] = False
+            raise RuntimeError("injected node failure")
+
+    f_mgr = CheckpointManager(str(tmp_path / "faulty"), async_write=False)
+    floop = FaultTolerantLoop(f_mgr, ckpt_every=3, max_restarts=3,
+                              fault_hook=fault)
+    faulty = floop.run({"x": jnp.zeros(()), "step": jnp.asarray(0)},
+                       make_step(), n_steps=10)
+    assert faulty["restarts"] == 1
+    assert faulty["final_step"] == clean["final_step"] == 10
+    _, s_clean = clean_mgr.restore({"x": jnp.zeros(()),
+                                    "step": jnp.asarray(0)})
+    _, s_faulty = f_mgr.restore({"x": jnp.zeros(()), "step": jnp.asarray(0)})
+    np.testing.assert_allclose(s_clean["x"], s_faulty["x"])
+
+
+def test_repeated_failure_escalates(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_write=False)
+
+    def always_fail(step):
+        raise RuntimeError("dead node")
+
+    loop = FaultTolerantLoop(mgr, ckpt_every=5, max_restarts=2,
+                             fault_hook=always_fail)
+    with pytest.raises(RuntimeError):
+        loop.run({"x": jnp.zeros(())}, lambda s, i: s, n_steps=3)
+
+
+def test_straggler_monitor():
+    m = StragglerMonitor(threshold=2.0)
+    assert not m.observe(1.0)
+    assert not m.observe(1.1)
+    assert m.observe(5.0)
+    assert m.flagged == 1
