@@ -6,6 +6,7 @@ paper's claims. All seven CNNs x five Table-4 accelerators.
 """
 from __future__ import annotations
 
+import os
 import time
 from typing import Dict, List, Tuple
 
@@ -217,6 +218,23 @@ def fig18_energy() -> Tuple[List[dict], dict]:
     return rows, {
         "gc_cip_vs_tip_mean": round(sum(edges) / len(edges), 2),
         "paper": "GC-CIP over TIP up to 3.4x, 2.1x on average"}
+
+
+# ---------------------------------------------------------------------------
+# cycle-level simulator cross-validation (repro.sim)
+# ---------------------------------------------------------------------------
+def sim_validation() -> Tuple[List[dict], dict]:
+    """Analytic model vs cycle-level simulator over the zoo (Table-4 subset).
+
+    Writes the per-node stall/utilization breakdown of every pair to
+    ``results/sim/<net>__<accel>.json``; the returned rows summarize the
+    divergence per (network, accelerator) pair.
+    """
+    from repro.sim.validate import cross_validate
+
+    out_dir = os.path.join(os.path.dirname(__file__), "..", "results", "sim")
+    return cross_validate(nets=NETS, accels=("ER", "TPU", "EP"),
+                          out_dir=out_dir)
 
 
 # ---------------------------------------------------------------------------

@@ -2,6 +2,14 @@
 microbenchmarks + the roofline table from the dry-run artifacts.
 
     PYTHONPATH=src python -m benchmarks.run [--only table1,fig14,...]
+                                            [--engine analytic|sim]
+
+Two evaluation engines cover the zoo x accelerator grid:
+  * ``analytic`` (default) — the paper's closed-form cost model
+    (Eqs. 6-10, repro.core.costmodel); runs every table/figure.
+  * ``sim`` — the cycle-level tiled simulator (repro.sim); runs the
+    analytic-vs-sim cross-validation and writes per-node
+    stall/utilization breakdowns to results/sim/.
 
 Prints ``name,us_per_call,derived`` CSV lines per benchmark plus a summary
 block comparing each reproduced number to the paper's claim.
@@ -13,6 +21,8 @@ import json
 import os
 import time
 
+# "simval" (the cycle-level sim sweep) is not in ALL: the default analytic
+# run stays pure closed-form; select it with --engine sim or --only simval.
 ALL = ("table1", "fig12", "fig13", "fig14", "fig15", "fusion", "fig18",
        "fig20", "kernels", "roofline")
 
@@ -123,8 +133,21 @@ def bench_roofline():
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--engine", choices=("analytic", "sim"),
+                    default="analytic",
+                    help="analytic: closed-form cost model over every "
+                         "table/figure; sim: cycle-level tiled simulator "
+                         "cross-validated against the analytic model")
     args = ap.parse_args()
-    want = args.only.split(",") if args.only else list(ALL)
+    if args.only:
+        want = args.only.split(",")
+        if args.engine == "sim" and set(want) != {"simval"}:
+            ap.error("--engine sim only runs the 'simval' benchmark; "
+                     "drop --only or use --only simval")
+    elif args.engine == "sim":
+        want = ["simval"]
+    else:
+        want = list(ALL)
 
     from benchmarks import paper_tables as pt
 
@@ -134,6 +157,7 @@ def main():
         "fig15": pt.fig15_code_density, "fusion": pt.fusion_gains,
         "fig18": pt.fig18_energy, "fig20": pt.fig20_wholelife,
         "kernels": bench_kernels, "roofline": bench_roofline,
+        "simval": pt.sim_validation,
     }
     results = {}
     for name in want:
@@ -141,9 +165,19 @@ def main():
     out = os.path.join(os.path.dirname(__file__), "..", "results",
                        "benchmarks.json")
     os.makedirs(os.path.dirname(out), exist_ok=True)
+    # merge into the existing artifact so partial runs (--only, --engine
+    # sim) update their entries without destroying the others
+    merged = {}
+    if os.path.exists(out):
+        try:
+            with open(out) as f:
+                merged = json.load(f)
+        except (OSError, ValueError):
+            merged = {}
+    merged.update({k: {"rows": v[0], "summary": v[1]}
+                   for k, v in results.items()})
     with open(out, "w") as f:
-        json.dump({k: {"rows": v[0], "summary": v[1]}
-                   for k, v in results.items()}, f, indent=1, default=str)
+        json.dump(merged, f, indent=1, default=str)
     print(f"\nwrote {os.path.abspath(out)}")
 
 

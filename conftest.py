@@ -2,3 +2,12 @@ import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "src"))
+# test-local helpers (e.g. the hypothesis degradation shim) import flat
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "tests"))
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: heavy end-to-end tests (subprocess launches, full-size "
+        "networks); deselect with -m 'not slow' for the fast smoke tier")

@@ -105,6 +105,27 @@ def _movement_node_cost(node, chain: Chain, spec: AcceleratorSpec,
                     energy=2 * elems * E_GB, traditional=traditional)
 
 
+def kernel_movement_scale(g: GConv,
+                          k_actual_elems: Optional[int]) -> float:
+    """Kernel-words adjustment shared by the analytic model and the
+    cycle-level simulator: no kernel parameters at all for main == 'none';
+    broadcast kernels (Table 2: FP1 as FP2's kernel, etc.) only move their
+    actual elements, not the full per-dim k_size product."""
+    if g.main == "none":
+        return 0.0
+    if k_actual_elems is not None and g.k_elems > 0:
+        return min(1.0, k_actual_elems / g.k_elems)
+    return 1.0
+
+
+def gconv_energy(g: GConv, movement: Dict[str, float],
+                 energy_overhead: float = 0.0) -> float:
+    """Movement-dominated node energy (relative units), shared by both
+    evaluation engines."""
+    return (g.macs * E_MAC + g.macs * E_LS
+            + sum(movement.values()) * E_GB) * (1.0 + energy_overhead)
+
+
 def _gconv_node_cost(g: GConv, spec: AcceleratorSpec,
                      load_width: Dict[str, int] = None,
                      im2col: bool = False,
@@ -113,12 +134,7 @@ def _gconv_node_cost(g: GConv, spec: AcceleratorSpec,
                      k_actual_elems: Optional[int] = None) -> NodeCost:
     m = mapping if mapping is not None else map_gconv(g, spec)
     mov = dict(m.movement())
-    if g.main == "none":
-        mov["K"] = 0.0                      # no kernel parameters at all
-    elif k_actual_elems is not None and g.k_elems > 0:
-        # broadcast kernels (Table 2: FP1 as FP2's kernel, etc.) only move
-        # their actual elements, not the full per-dim k_size product
-        mov["K"] = mov["K"] * min(1.0, k_actual_elems / g.k_elems)
+    mov["K"] = mov["K"] * kernel_movement_scale(g, k_actual_elems)
     if im2col:
         # TIP path: inputs replicated into matrix columns — overlap-reuse
         # becomes data replication (paper Fig. 1(c) / Table 1(b) col 1).
@@ -138,9 +154,7 @@ def _gconv_node_cost(g: GConv, spec: AcceleratorSpec,
         load[t] = mov[t] / bw * (MISALIGN_FACTOR if penalize else 1.0)
     cycles = m.cycles()
     latency = max(float(cycles), *load.values())
-    energy = (g.macs * E_MAC + g.macs * E_LS
-              + sum(mov.values()) * E_GB)
-    energy *= (1.0 + energy_overhead)
+    energy = gconv_energy(g, mov, energy_overhead)
     return NodeCost(name=g.name, kind="gconv", cycles=cycles,
                     load_cycles=max(load.values()), latency=latency,
                     movement=mov, energy=energy, mapping=m)
@@ -166,14 +180,21 @@ def _offload_node_cost(node, chain: Chain) -> NodeCost:
 # ---------------------------------------------------------------------------
 # GCONV Chain path
 # ---------------------------------------------------------------------------
-def gconv_chain_cost(chain: Chain, spec: AcceleratorSpec,
-                     consistent: bool = True,
-                     energy_overhead: float = 0.19) -> ChainCost:
-    """Every node auto-mapped on the full array (paper's GC-<accel>).
+def chain_mappings(chain: Chain, spec: AcceleratorSpec,
+                   consistent: bool = True,
+                   ) -> Tuple[Dict[str, Mapping], Dict[str, bool]]:
+    """Map every GCONV node (Algorithm 1) and resolve §4.3 producer/consumer
+    load-format alignment across the chain.
 
-    ``energy_overhead`` charges the GCONV augmentation (instruction buffers,
-    generalized main/reduce ALUs): +19 % power per paper Fig. 17.
+    Returns ``(mappings, aligned)``: the per-node mappings (after the
+    consistent-mapping loop exchange when ``consistent`` is set) and, per
+    node, whether its intermediate input loads run at full bus width or pay
+    the strided-access penalty. Shared between the analytic model below and
+    the cycle-level simulator (``repro.sim.engine``), which must charge the
+    exact same mappings to be comparable.
     """
+    from .mapping import consistent_load_width
+
     mappings: Dict[str, Mapping] = {}
     for name, node in chain.nodes.items():
         if isinstance(node, GConv):
@@ -191,11 +212,30 @@ def gconv_chain_cost(chain: Chain, spec: AcceleratorSpec,
             if consistent:
                 w = apply_loop_exchange(mappings[prod], mappings[name])
             else:
-                from .mapping import consistent_load_width
                 w = consistent_load_width(mappings[prod], mappings[name])
             aligned[name] = w > 1
         else:
             aligned[name] = True       # chain inputs stream from DRAM
+    return mappings, aligned
+
+
+def gconv_chain_cost(chain: Chain, spec: AcceleratorSpec,
+                     consistent: bool = True,
+                     energy_overhead: float = 0.19,
+                     precomputed: Optional[Tuple[Dict[str, Mapping],
+                                                 Dict[str, bool]]] = None,
+                     ) -> ChainCost:
+    """Every node auto-mapped on the full array (paper's GC-<accel>).
+
+    ``energy_overhead`` charges the GCONV augmentation (instruction buffers,
+    generalized main/reduce ALUs): +19 % power per paper Fig. 17.
+    ``precomputed`` takes a :func:`chain_mappings` result so callers scoring
+    the same chain with several engines share one mapping pass.
+    """
+    if precomputed is not None:
+        mappings, aligned = precomputed
+    else:
+        mappings, aligned = chain_mappings(chain, spec, consistent=consistent)
     nodes = []
     for name, node in chain.nodes.items():
         trad = chain.meta.get(name, {}).get("traditional", True)
@@ -299,23 +339,7 @@ def baseline_cost(chain: Chain, spec: AcceleratorSpec) -> ChainCost:
 
 def _natural_alignment(chain: Chain, spec: AcceleratorSpec):
     """Exchange-free producer/consumer format consistency per node."""
-    from .mapping import consistent_load_width
-
-    mappings = {}
-    for name, node in chain.nodes.items():
-        if isinstance(node, GConv):
-            mappings[name] = map_gconv(node, spec)
-    out = {}
-    for name, node in chain.nodes.items():
-        if not isinstance(node, GConv):
-            continue
-        prod = node.input
-        if prod in mappings:
-            out[name] = consistent_load_width(
-                mappings[prod], mappings[name]) > 1
-        else:
-            out[name] = True       # chain inputs stream from DRAM
-    return out
+    return chain_mappings(chain, spec, consistent=False)[1]
 
 
 def lip_utilization(cost: ChainCost) -> float:

@@ -24,7 +24,7 @@ buffer; the eliminated movement is returned for the Fig.-18-style benchmark.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
 from .chain import Chain, Concat, Movement
@@ -41,6 +41,11 @@ class FusionReport:
     after_len: int
     fused: List[str]
     saved_elems: int
+    # surviving node -> the fusible nodes absorbed into it (transitively).
+    # The cycle-level simulator (repro.sim) uses these groups: members stream
+    # tile-by-tile through their host's pre/post operators and never make a
+    # global-buffer round trip.
+    groups: Dict[str, List[str]] = field(default_factory=dict)
 
     @property
     def length_reduction(self) -> float:
@@ -77,6 +82,14 @@ def fuse_chain(chain: Chain) -> Tuple[Chain, FusionReport]:
     saved = 0
     order = list(chain.nodes)
     positions = {n: i for i, n in enumerate(order)}
+    groups: Dict[str, List[str]] = {}
+
+    def absorb(host: str, name: str):
+        """Record that ``name`` (and anything already fused into it) now
+        rides on ``host``'s operator path."""
+        members = groups.get(name, [])
+        groups.setdefault(host, []).append(name)
+        groups[host].extend(members)
 
     changed = True
     while changed:
@@ -122,6 +135,8 @@ def fuse_chain(chain: Chain) -> Tuple[Chain, FusionReport]:
                     cn.input = producer  # type: ignore[union-attr]
                 del chain.nodes[name]
                 chain.meta.pop(name, None)
+                absorb(producer, name)
+                groups.pop(name, None)
                 fused_names.append(f"{name}->post({producer})")
                 saved += node.out_elems
                 changed = True
@@ -136,8 +151,10 @@ def fuse_chain(chain: Chain) -> Tuple[Chain, FusionReport]:
                     cn = chain.nodes[c]
                     cn.pre = unary + tuple(cn.pre)   # type: ignore
                     cn.input = node.input            # type: ignore
+                    absorb(c, name)
                 del chain.nodes[name]
                 chain.meta.pop(name, None)
+                groups.pop(name, None)
                 fused_names.append(f"{name}->pre({','.join(cons)})")
                 saved += node.out_elems
                 changed = True
@@ -146,4 +163,4 @@ def fuse_chain(chain: Chain) -> Tuple[Chain, FusionReport]:
             consumers = chain.consumers()
     chain.validate()
     return chain, FusionReport(before_len, len(chain.nodes),
-                               fused_names, saved)
+                               fused_names, saved, groups)

@@ -78,6 +78,35 @@ _AFFECTS = {"ks": ("I", "K"), "opc": ("I", "O"), "op": ("K", "O"),
             "g": ("I", "K", "O")}
 
 
+@dataclass(frozen=True)
+class TileStructure:
+    """Per-data-type resident-tile decomposition of a :class:`Mapping`.
+
+    This is the structure the cycle-level simulator (``repro.sim``) lowers
+    into an ordered tile trace. Every quantity follows :meth:`Mapping.movement`
+    / Eqs. (7)-(10) exactly, so trace aggregates reproduce the analytic
+    movement word-for-word:
+
+      * the node executes ``n_steps`` tile steps of ``compute_per_step``
+        cycles each (the temporal loops inside the innermost reuse pointer);
+      * data type ``d`` refills its buffers every ``strides[d]`` steps with
+        ``tile_words[d]`` words, ``reloads[d]`` times over the node, hence
+        ``tile_words[d] * reloads[d] == movement()[d]`` and
+        ``strides[d] * reloads[d] == n_steps``.
+
+    Strides form a divisibility chain (each is a product of a prefix of the
+    outer temporal factors), which the trace scheduler exploits to aggregate
+    arbitrarily long traces without enumeration.
+    """
+
+    pointers: Dict[str, int]       # per-dtype reuse pointer into ``temporal``
+    tile_words: Dict[str, int]     # words per refill (I/K) or drain (O)
+    reloads: Dict[str, int]        # refills/drains over the whole node
+    strides: Dict[str, int]        # tile steps between consecutive refills
+    n_steps: int                   # total tile steps of the node
+    compute_per_step: int          # cycles per tile step
+
+
 @dataclass
 class Mapping:
     gconv: GConv
@@ -127,18 +156,46 @@ class Mapping:
         return ptr
 
     def movement(self) -> Dict[str, int]:
-        """Paper Eqs. (7)-(10): GB<->array words moved per data type."""
-        out = {}
+        """Paper Eqs. (7)-(10): GB<->array words moved per data type.
+
+        Derived from :meth:`tile_structure` so the analytic totals and the
+        cycle-level simulator's tile trace share one source of truth."""
+        ts = self.tile_structure()
+        return {d: ts.reloads[d] * ts.tile_words[d]              # Eq. (10)
+                for d in ("I", "K", "O")}
+
+    def tile_structure(self) -> TileStructure:
+        """Lower the temporal nest into the per-dtype tile structure used by
+        the cycle-level simulator (``repro.sim.schedule``).
+
+        The tile-step boundary is the innermost reuse pointer across the
+        three data types: everything inside it is one tile's compute;
+        everything outside it is the ordered tile iteration space.
+        """
         sp_tiles = tile_sizes(self.spatial, self.gconv)
+        ptrs: Dict[str, int] = {}
+        words: Dict[str, int] = {}
+        reloads: Dict[str, int] = {}
         for dtype in ("I", "K", "O"):
             ptr = self.pointer(dtype)
-            inside = [t for t in self.temporal[: ptr + 1]]
-            in_tile = tile_sizes(inside, self.gconv)[dtype]      # per PE
-            reloads = 1
+            in_tile = tile_sizes(self.temporal[: ptr + 1], self.gconv)[dtype]
+            r = 1
             for e in self.temporal[ptr + 1:]:
-                reloads *= e.factor                              # Eq. (8)
-            out[dtype] = reloads * sp_tiles[dtype] * in_tile     # Eq. (10)
-        return out
+                r *= e.factor                            # Eq. (8)
+            ptrs[dtype] = ptr
+            words[dtype] = sp_tiles[dtype] * in_tile     # Eq. (10) per refill
+            reloads[dtype] = r
+        pmin = min(ptrs.values())
+        n_steps = 1
+        for e in self.temporal[pmin + 1:]:
+            n_steps *= e.factor
+        compute = 1
+        for e in self.temporal[: pmin + 1]:
+            compute *= e.factor
+        strides = {d: n_steps // reloads[d] for d in reloads}
+        return TileStructure(pointers=ptrs, tile_words=words,
+                             reloads=reloads, strides=strides,
+                             n_steps=n_steps, compute_per_step=compute)
 
     def load_cycles(self, load_width: Dict[str, int] = None) -> Dict[str, float]:
         mov = self.movement()

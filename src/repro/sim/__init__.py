@@ -1,0 +1,35 @@
+"""Cycle-level tiled accelerator simulator (MPNA-style instrument).
+
+The analytic cost model (:mod:`repro.core.costmodel`, paper Eqs. (6)-(10))
+scores a whole node at once and therefore cannot see tile-granularity
+effects: double-buffering stalls, load/compute overlap breakdowns at tile
+boundaries, drain bubbles and contention between the input/kernel/output
+streams. This package is the standard instrument for exactly those effects —
+a tick-driven, tile-by-tile simulator that executes a mapped GCONV chain on
+an :class:`~repro.core.accelerators.AcceleratorSpec` and reports per-node and
+per-chain cycle/energy/stall/utilization breakdowns in the same units as the
+analytic model, so the two can be cross-validated
+(:mod:`repro.sim.validate`).
+
+Layering:
+
+  * :mod:`repro.sim.schedule` — lower a :class:`~repro.core.mapping.Mapping`
+    into an ordered tile trace (per-tile word counts, MAC slots, refill and
+    drain events), run-length aggregated via the trace's congruence
+    structure so arbitrarily long traces stay O(1);
+  * :mod:`repro.sim.buffers` — double-buffered I/K/O stream models charging
+    GB-bandwidth-limited fill/drain cycles with per-buffer stall accounting;
+  * :mod:`repro.sim.engine` — per-node tick loop overlapping next-tile loads
+    and previous-tile drains with current-tile compute, plus chain-level
+    handoff that respects operation-fusion groups;
+  * :mod:`repro.sim.stats` — the result dataclasses;
+  * :mod:`repro.sim.validate` — analytic-vs-sim cross-check over the CNN zoo
+    and the Table-4 accelerator configurations.
+"""
+from .engine import simulate_chain, simulate_node
+from .schedule import TileSchedule, TileStep
+from .stats import ChainSimStats, NodeSimStats
+from .validate import cross_validate
+
+__all__ = ["simulate_chain", "simulate_node", "TileSchedule", "TileStep",
+           "ChainSimStats", "NodeSimStats", "cross_validate"]

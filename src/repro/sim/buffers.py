@@ -1,0 +1,70 @@
+"""Double-buffered GB<->array stream models (ibuf/kbuf/obuf).
+
+Each :class:`BufferPort` is one data-type stream between the global buffer
+and the PE array: the input buffer (I) and kernel buffer (K) fill before a
+tile computes, the output buffer (O) drains after it completes. All three
+are double-buffered — the engine overlaps the *next* tile's fills and the
+*previous* tile's drain with the current tile's compute and charges a stall
+only for the exposed remainder.
+
+Transfer cycles are GB-bandwidth-limited (``spec.gb_bandwidth``, words per
+cycle, per data type — matching the analytic model's per-type ports). A
+format-inconsistent input stream (§4.3: the producer's store format does not
+match this consumer's parallel-load format and no loop exchange fixed it)
+pays ``MISALIGN_FACTOR`` on its scratchpad fill path, exactly as the
+analytic model charges it; accelerators that stream from the GB without
+input scratchpads (``ls == 1``) don't care about formats.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict
+
+from repro.core.accelerators import AcceleratorSpec
+from repro.core.costmodel import MISALIGN_FACTOR
+
+
+@dataclass
+class BufferPort:
+    """One double-buffered data stream with per-buffer accounting."""
+
+    dtype: str                   # "I" | "K" | "O"
+    bandwidth: float             # GB<->array words/cycle for this stream
+    misalign: float = 1.0        # §4.3 strided-access penalty multiplier
+    words: float = 0.0           # total words moved through this stream
+    transfers: int = 0           # refills (I/K) or drains (O)
+    busy_cycles: float = 0.0     # cycles the stream was transferring
+    stall_cycles: float = 0.0    # exposed cycles the array waited on it
+
+    def transfer_cycles(self, words: float) -> float:
+        if words <= 0:
+            return 0.0
+        return words / self.bandwidth * self.misalign
+
+    def record_transfer(self, words: float, n: int = 1):
+        if words <= 0 or n <= 0:
+            return
+        self.words += words * n
+        self.transfers += n
+        self.busy_cycles += self.transfer_cycles(words) * n
+
+    def record_stall(self, cycles: float, n: int = 1):
+        if cycles > 0 and n > 0:
+            self.stall_cycles += cycles * n
+
+
+def make_ports(spec: AcceleratorSpec, aligned: bool = True,
+               ) -> Dict[str, BufferPort]:
+    """The three streams of one node. ``aligned`` is the §4.3 load-format
+    flag from :func:`repro.core.costmodel.chain_mappings`; the penalty only
+    applies to the input scratchpad fill path (ls > 1), as in the analytic
+    model."""
+    ports = {}
+    for dtype in ("I", "K", "O"):
+        bw = max(1, spec.gb_bandwidth.get(dtype, 1))
+        misalign = 1.0
+        if dtype == "I" and not aligned and spec.ls.get("I", 1) > 1:
+            misalign = MISALIGN_FACTOR
+        ports[dtype] = BufferPort(dtype=dtype, bandwidth=bw,
+                                  misalign=misalign)
+    return ports

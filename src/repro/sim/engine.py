@@ -1,0 +1,189 @@
+"""Per-node tick loop and chain-level simulation.
+
+A node runs tile by tile: while tile t computes, the double-buffered input
+and kernel streams prefetch tile t+1 and the output stream writes back the
+window that closed at t-1 (``repro.sim.schedule`` provides that
+double-buffer-aligned trace). A tile step therefore costs
+
+    max(compute_per_step, exposed overlapped traffic)
+
+— the per-tile analogue of the analytic model's per-*node*
+``max(compute, load)`` (Eq. 6 vs Eqs. 7-10). The difference between the two
+is exactly what this simulator exists to measure: the first-tile fill, the
+last-window drain, and every step where one stream's tile transfer exceeds
+one tile's compute even though the *node-total* load would have fit under
+the node-total compute.
+
+Contention models:
+  * ``"ports"`` (default) — each data type owns its GB port
+    (``spec.gb_bandwidth`` is per type), streams transfer in parallel and a
+    step waits on the slowest one; matches the analytic model's assumption.
+  * ``"shared"`` — the three streams serialize on one bus (their cycles
+    add), exposing I/K/O contention the analytic model cannot see.
+
+Chain level: operation-fusion groups (``fuse_chain``) stream through their
+host node's operators with no GB round trip — they are simulated as part of
+the host (the fused chain simply no longer contains them). At unfused
+producer->consumer handoffs the consumer's first-tile fill overlaps the
+producer's exposed drain (both move through the GB, back to back), credited
+as ``handoff_overlap_cycles``.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+from repro.core.accelerators import AcceleratorSpec
+from repro.core.chain import Chain, Concat, Movement
+from repro.core.costmodel import (chain_mappings, gconv_energy,
+                                  kernel_movement_scale, _k_elems,
+                                  _movement_node_cost)
+from repro.core.fusion import fuse_chain
+from repro.core.gconv import GConv
+from repro.core.mapping import Mapping
+
+from .buffers import make_ports
+from .schedule import TileSchedule
+from .stats import ChainSimStats, NodeSimStats
+
+
+def simulate_node(g: GConv, spec: AcceleratorSpec,
+                  mapping: Optional[Mapping] = None,
+                  aligned: bool = True,
+                  k_actual_elems: Optional[int] = None,
+                  energy_overhead: float = 0.19,
+                  contention: str = "ports") -> NodeSimStats:
+    """Tick through one mapped GCONV node tile by tile."""
+    if contention not in ("ports", "shared"):
+        raise ValueError(f"unknown contention model {contention!r}")
+    if mapping is None:
+        from repro.core.mapping import map_gconv
+        mapping = map_gconv(g, spec)
+    sched = TileSchedule(g, mapping,
+                         k_scale=kernel_movement_scale(g, k_actual_elems))
+    ports = make_ports(spec, aligned=aligned)
+    C = float(sched.compute_per_step)
+
+    def overlap_cost(traffic: Dict[str, float]) -> Tuple[float, Dict[str, float]]:
+        cycles = {d: ports[d].transfer_cycles(w) for d, w in traffic.items()}
+        if contention == "shared":
+            return sum(cycles.values()), cycles
+        return max(cycles.values(), default=0.0), cycles
+
+    def charge_exposed(per: Dict[str, float], over: float, exposed: float,
+                       count: int = 1):
+        """Attribute an exposed wait to the responsible stream(s): the
+        binding (slowest) stream under per-type ports, prorated by bus share
+        under a shared bus. Keeps sum(stalls) == total - compute exactly."""
+        if exposed <= 0 or over <= 0 or not per:
+            return
+        if contention == "shared":
+            for d, cyc in per.items():
+                ports[d].record_stall(exposed * cyc / over, count)
+        else:
+            bind = max(per, key=lambda d: per[d])
+            ports[bind].record_stall(exposed, count)
+
+    first_fill, segments, final_drain = sched.overlap_segments()
+
+    # --- prologue: nothing computes while the first tile lands -------------
+    fill_cost, fill_per = overlap_cost(first_fill)
+    for d, w in first_fill.items():
+        ports[d].record_transfer(w)
+    charge_exposed(fill_per, fill_cost, fill_cost)
+    total = fill_cost
+
+    # --- steady state: compute overlaps prefetch + write-back --------------
+    for seg in segments:
+        traffic = dict(seg.prefetch)
+        traffic.update(seg.writeback)
+        over, per = overlap_cost(traffic)
+        step_cost = max(C, over)
+        total += step_cost * seg.count
+        for d, w in seg.prefetch.items():
+            ports[d].record_transfer(w, seg.count)
+        for d, w in seg.writeback.items():
+            ports[d].record_transfer(w, seg.count)
+        charge_exposed(per, over, step_cost - C, seg.count)
+
+    # --- epilogue: the last output window drains with nothing to hide it ---
+    drain_cost, drain_per = overlap_cost(final_drain)
+    for d, w in final_drain.items():
+        ports[d].record_transfer(w)
+    charge_exposed(drain_per, drain_cost, drain_cost)
+    total += drain_cost
+
+    movement = sched.total_words()
+    energy = gconv_energy(g, movement, energy_overhead)
+    return NodeSimStats(
+        name=g.name, kind="gconv", tiles=sched.n_steps,
+        compute_cycles=float(sched.total_compute_cycles()),
+        total_cycles=total, fill_cycles=fill_cost, drain_cycles=drain_cost,
+        stalls={d: p.stall_cycles for d, p in ports.items()},
+        buffers=ports, movement=movement, energy=energy,
+        aligned=aligned, mapping=mapping)
+
+
+def _simulate_movement(node, chain: Chain,
+                       spec: AcceleratorSpec) -> NodeSimStats:
+    """Concat/Movement pseudo-nodes: pure GB traffic, no array compute —
+    delegated to the analytic model's cost so the two engines stay in exact
+    parity on movement nodes."""
+    nc = _movement_node_cost(node, chain, spec, traditional=True)
+    # the array idles for the full transfer: book it as I/O stall time so
+    # compute + stalls == total holds chain-wide, not just on gconv nodes
+    return NodeSimStats(name=node.name, kind="movement",
+                        total_cycles=nc.latency, fill_cycles=nc.latency,
+                        stalls={"I": nc.latency / 2, "O": nc.latency / 2},
+                        movement={k: float(v) for k, v in nc.movement.items()},
+                        energy=nc.energy)
+
+
+def simulate_chain(chain: Chain, spec: AcceleratorSpec,
+                   fuse: bool = True, consistent: bool = True,
+                   energy_overhead: float = 0.19,
+                   contention: str = "ports",
+                   precomputed: Optional[Tuple[Dict[str, Mapping],
+                                               Dict[str, bool]]] = None,
+                   ) -> ChainSimStats:
+    """Simulate a whole GCONV chain (the paper's GC-<accel> system mode:
+    §4.3 fusion + consistent mapping, every node on the full array).
+
+    ``precomputed`` takes a :func:`repro.core.costmodel.chain_mappings`
+    result (only meaningful with ``fuse=False`` on an already-fused chain)
+    so analytic and sim engines charge structurally identical mappings."""
+    groups: Dict[str, list] = {}
+    if fuse:
+        chain, report = fuse_chain(chain)
+        groups = report.groups
+    if precomputed is not None and not fuse:
+        mappings, aligned = precomputed
+    else:
+        mappings, aligned = chain_mappings(chain, spec, consistent=consistent)
+
+    nodes = []
+    prev_name: Optional[str] = None
+    prev_stats: Optional[NodeSimStats] = None
+    handoff = 0.0
+    for name, node in chain.nodes.items():
+        if isinstance(node, (Concat, Movement)):
+            ns = _simulate_movement(node, chain, spec)
+        else:
+            ns = simulate_node(node, spec, mapping=mappings[name],
+                               aligned=aligned.get(name, True),
+                               k_actual_elems=_k_elems(chain, node),
+                               energy_overhead=energy_overhead,
+                               contention=contention)
+        # handoff: a consumer scheduled right after its producer starts
+        # filling its first tile while the producer's last window drains.
+        # Only possible with per-type ports — on a shared bus the drain and
+        # the fill serialize by definition, so no credit.
+        if (contention == "ports" and prev_stats is not None
+                and isinstance(node, GConv)
+                and node.input == prev_name
+                and prev_stats.kind == "gconv"):
+            handoff += min(prev_stats.drain_cycles, ns.fill_cycles)
+        nodes.append(ns)
+        prev_name, prev_stats = name, ns
+    return ChainSimStats(chain_name=chain.name, accel=spec.name, nodes=nodes,
+                         fused_groups=groups,
+                         handoff_overlap_cycles=handoff)

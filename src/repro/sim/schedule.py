@@ -1,0 +1,243 @@
+"""Lower a Mapping into an ordered tile trace.
+
+A mapped GCONV executes as ``n_steps`` tile steps (the temporal loops outside
+the innermost scratchpad reuse pointer); each step computes
+``compute_per_step`` cycles on the array while the buffers refill/drain at
+their own cadence: data type ``d`` refills ``tile_words[d]`` words every
+``strides[d]`` steps (see :meth:`repro.core.mapping.Mapping.tile_structure`).
+Aggregate trace totals equal the analytic movement (Eqs. (7)-(10)) exactly.
+
+Two views of the same trace:
+
+  * :meth:`TileSchedule.steps` — the explicit ordered trace, one
+    :class:`TileStep` per tile step, with that step's refills (window start)
+    and drains (window end). Feasible only for short traces; used by tests
+    and inspection.
+  * :meth:`TileSchedule.overlap_segments` — the double-buffer-aligned trace
+    the engine consumes: per step, the words prefetched for the *next* tile
+    and written back from the *previous* one. Identical steps are aggregated
+    by exact congruence counting (the refill cadences form a divisibility
+    chain, so the step classes are residue classes and their populations
+    close-form), keeping million-tile traces O(1).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict, FrozenSet, Iterator, List, Optional, Tuple
+
+from repro.core.gconv import GConv
+from repro.core.mapping import Mapping, TileStructure
+
+DTYPES = ("I", "K", "O")
+
+
+@dataclass(frozen=True)
+class TileStep:
+    """One tile step of the natural (un-overlapped) trace."""
+
+    index: int                    # position in [0, n_steps)
+    compute_cycles: int           # array-busy cycles of this step
+    mac_slots: int                # PE slots issued (>= effectual MACs)
+    loads: Dict[str, float]       # words refilled before this step (I/K/O-in)
+    drains: Dict[str, float]      # words drained after this step completes
+
+
+@dataclass(frozen=True)
+class OverlapSegment:
+    """``count`` consecutive identical steps of the double-buffered trace:
+    while each computes, ``prefetch`` words stream in for the next tile and
+    ``writeback`` words of the previous output window stream out."""
+
+    count: int
+    prefetch: Dict[str, float]    # {"I": words, "K": words}
+    writeback: Dict[str, float]   # {"O": words}
+
+
+# ---------------------------------------------------------------------------
+# congruence arithmetic: the refill pattern of a nested loop trace
+# ---------------------------------------------------------------------------
+def _congruence_count(lo: int, hi: int, r: int, m: int) -> int:
+    """#{t in [lo, hi] : t = r (mod m)}."""
+    if lo > hi:
+        return 0
+    return (hi - r) // m - (lo - 1 - r) // m
+
+
+def _merge_congruence(c1: Optional[Tuple[int, int]],
+                      c2: Tuple[int, int]) -> Optional[Tuple[int, int]]:
+    """Intersect two congruences (r, m) via CRT; None when incompatible."""
+    if c1 is None:
+        return None
+    r1, m1 = c1
+    r2, m2 = c2
+    g = math.gcd(m1, m2)
+    if (r2 - r1) % g:
+        return None
+    lcm = m1 // g * m2
+    m2g = m2 // g
+    if m2g == 1:
+        x = r1
+    else:
+        k = ((r2 - r1) // g * pow(m1 // g, -1, m2g)) % m2g
+        x = r1 + k * m1
+    return (x % lcm, lcm)
+
+
+def _event_counts(conds: Dict[str, Tuple[int, int]], lo: int, hi: int,
+                  ) -> Dict[FrozenSet[str], int]:
+    """Exact population of every event-subset class over t in [lo, hi].
+
+    ``conds`` maps an event key to its congruence (residue, modulus). The
+    returned dict gives, for each subset S of keys, the number of steps where
+    *exactly* the events in S fire (inclusion-exclusion over the 'at least S'
+    counts). Subsets with zero population are omitted; the empty frozenset
+    holds the event-free steps.
+    """
+    keys = list(conds)
+    at_least: Dict[FrozenSet[str], int] = {}
+    for bits in range(1 << len(keys)):
+        subset = frozenset(k for i, k in enumerate(keys) if bits >> i & 1)
+        merged: Optional[Tuple[int, int]] = (0, 1)
+        for k in subset:
+            merged = _merge_congruence(merged, conds[k])
+        at_least[subset] = (_congruence_count(lo, hi, *merged)
+                            if merged is not None else 0)
+    exact: Dict[FrozenSet[str], int] = {}
+    for subset in at_least:
+        n = 0
+        for sup in at_least:
+            if subset <= sup:
+                n += (-1) ** (len(sup) - len(subset)) * at_least[sup]
+        if n:
+            exact[subset] = n
+    return exact
+
+
+# ---------------------------------------------------------------------------
+# the schedule
+# ---------------------------------------------------------------------------
+class TileSchedule:
+    """The ordered tile trace of one mapped GCONV node.
+
+    ``k_scale`` scales kernel words per refill for broadcast kernels (Table
+    2: e.g. FP1's output serving as FP2's kernel moves only its actual
+    elements) and is 0 for ``main == 'none'`` nodes — mirroring the analytic
+    model's movement adjustments so totals stay comparable.
+    """
+
+    def __init__(self, gconv: GConv, mapping: Mapping, k_scale: float = 1.0):
+        assert mapping.gconv is gconv or mapping.gconv.name == gconv.name
+        self.gconv = gconv
+        self.mapping = mapping
+        self.structure: TileStructure = mapping.tile_structure()
+        self.k_scale = k_scale
+        ts = self.structure
+        self.n_steps: int = ts.n_steps
+        self.compute_per_step: int = ts.compute_per_step
+        spatial_slots = 1
+        for e in mapping.spatial:
+            spatial_slots *= e.factor
+        self.mac_slots_per_step: int = ts.compute_per_step * spatial_slots
+        self.tile_words: Dict[str, float] = {
+            "I": float(ts.tile_words["I"]),
+            "K": float(ts.tile_words["K"]) * k_scale,
+            "O": float(ts.tile_words["O"]),
+        }
+        self.strides: Dict[str, int] = dict(ts.strides)
+
+    # -- aggregate invariants ------------------------------------------------
+    def total_words(self) -> Dict[str, float]:
+        """Equals ``mapping.movement()`` (with the kernel scaling applied)."""
+        return {d: self.tile_words[d] * self.structure.reloads[d]
+                for d in DTYPES}
+
+    def total_compute_cycles(self) -> int:
+        """>= Eq. (6) cycles (ceil-split temporal loops can over-cover)."""
+        return self.compute_per_step * self.n_steps
+
+    def total_mac_slots(self) -> int:
+        return self.mac_slots_per_step * self.n_steps
+
+    # -- explicit ordered trace ---------------------------------------------
+    def steps(self, limit: Optional[int] = 1 << 20) -> Iterator[TileStep]:
+        """Enumerate the trace tile by tile (window-start refills,
+        window-end drains). Guarded by ``limit`` — use the aggregated
+        :meth:`overlap_segments` for long traces."""
+        if limit is not None and self.n_steps > limit:
+            raise ValueError(
+                f"{self.gconv.name}: {self.n_steps} tile steps exceed the "
+                f"explicit-trace limit {limit}; use overlap_segments()")
+        s = self.strides
+        w = self.tile_words
+        for t in range(self.n_steps):
+            loads = {d: w[d] for d in ("I", "K") if t % s[d] == 0 and w[d] > 0}
+            drains = ({"O": w["O"]}
+                      if (t + 1) % s["O"] == 0 and w["O"] > 0 else {})
+            yield TileStep(index=t, compute_cycles=self.compute_per_step,
+                           mac_slots=self.mac_slots_per_step,
+                           loads=loads, drains=drains)
+
+    # -- double-buffer-aligned aggregated trace ------------------------------
+    def overlap_segments(self) -> Tuple[Dict[str, float],
+                                        List[OverlapSegment],
+                                        Dict[str, float]]:
+        """Return ``(first_fill, segments, final_drain)``.
+
+        ``first_fill`` are the words that must land before step 0 computes;
+        each :class:`OverlapSegment` then covers steps whose overlapped
+        traffic is identical: the prefetch for step t+1 (due when t+1 starts
+        a new I/K window) and the write-back of the output window that closed
+        at step t-1 (due when t starts a new O window). ``final_drain`` is
+        the last output window, exposed after the trace ends.
+
+        Ordering: segments are emitted first-occurrence-first — step 0, then
+        the interior residue classes (by first firing step), then the last
+        step. Within a class every step is identical, so order inside is
+        immaterial to any cost the engine can charge.
+        """
+        T = self.n_steps
+        w = self.tile_words
+        s = self.strides
+        first_fill = {d: w[d] for d in ("I", "K") if w[d] > 0}
+        final_drain = {"O": w["O"]} if w["O"] > 0 else {}
+
+        def seg(count: int, pre_i: bool, pre_k: bool, wb_o: bool,
+                ) -> OverlapSegment:
+            prefetch = {}
+            if pre_i and w["I"] > 0:
+                prefetch["I"] = w["I"]
+            if pre_k and w["K"] > 0:
+                prefetch["K"] = w["K"]
+            writeback = {"O": w["O"]} if wb_o and w["O"] > 0 else {}
+            return OverlapSegment(count=count, prefetch=prefetch,
+                                  writeback=writeback)
+
+        if T == 1:
+            return first_fill, [seg(1, False, False, False)], final_drain
+
+        segments: List[OverlapSegment] = []
+        # step 0: prefetch for step 1; the first O window cannot have closed
+        segments.append(seg(1, 1 % s["I"] == 0, 1 % s["K"] == 0, False))
+        if T >= 3:
+            # interior steps t in [1, T-2]:
+            #   prefetch_d  <=> (t+1) % s_d == 0   <=> t = s_d - 1 (mod s_d)
+            #   writeback_O <=> t % s_O == 0 (window ended at t-1)
+            conds = {"I": ((s["I"] - 1) % s["I"], s["I"]),
+                     "K": ((s["K"] - 1) % s["K"], s["K"]),
+                     "O": (0, s["O"])}
+            classes = _event_counts(conds, 1, T - 2)
+            first_at = {}
+            for subset in classes:
+                merged: Optional[Tuple[int, int]] = (0, 1)
+                for k in subset:
+                    merged = _merge_congruence(merged, conds[k])
+                first_at[subset] = merged[0] if merged else T
+            for subset in sorted(classes, key=lambda ss: (first_at[ss],
+                                                          sorted(ss))):
+                segments.append(seg(classes[subset], "I" in subset,
+                                    "K" in subset, "O" in subset))
+        # last step: nothing left to prefetch; possibly a window closed at T-2
+        segments.append(seg(1, False, False,
+                            (T - 1) % s["O"] == 0 and T - 1 > 0))
+        return first_fill, segments, final_drain

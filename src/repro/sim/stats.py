@@ -1,0 +1,105 @@
+"""Result dataclasses for the cycle-level simulator.
+
+Cycle counts are accelerator cycles; energy is in the same relative units as
+:mod:`repro.core.costmodel` (one local-scratchpad access = 1.0, Eyeriss
+convention), so sim and analytic numbers are directly comparable.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from repro.core.mapping import Mapping
+
+from .buffers import BufferPort
+
+
+@dataclass
+class NodeSimStats:
+    name: str
+    kind: str                          # "gconv" | "movement"
+    tiles: int = 0                     # tile steps executed
+    compute_cycles: float = 0.0        # array-busy cycles (>= Eq. 6)
+    total_cycles: float = 0.0          # compute + exposed fill/stall/drain
+    fill_cycles: float = 0.0           # un-hidable first-tile fill
+    drain_cycles: float = 0.0          # un-hidable last-window drain
+    stalls: Dict[str, float] = field(default_factory=dict)  # per buffer
+    buffers: Dict[str, BufferPort] = field(default_factory=dict)
+    movement: Dict[str, float] = field(default_factory=dict)
+    energy: float = 0.0
+    aligned: bool = True
+    mapping: Optional[Mapping] = None
+
+    @property
+    def stall_cycles(self) -> float:
+        return sum(self.stalls.values())
+
+    @property
+    def utilization(self) -> float:
+        """Array-busy fraction of the node's wall-clock cycles."""
+        if self.total_cycles <= 0:
+            return 1.0 if self.kind == "gconv" else 0.0
+        return self.compute_cycles / self.total_cycles
+
+    def summary(self) -> dict:
+        return dict(name=self.name, kind=self.kind, tiles=self.tiles,
+                    cycles=self.total_cycles,
+                    compute_cycles=self.compute_cycles,
+                    fill_cycles=round(self.fill_cycles, 1),
+                    drain_cycles=round(self.drain_cycles, 1),
+                    stall_cycles=round(self.stall_cycles, 1),
+                    stalls={d: round(v, 1) for d, v in self.stalls.items()},
+                    utilization=round(self.utilization, 4),
+                    movement=self.movement, energy=self.energy)
+
+
+@dataclass
+class ChainSimStats:
+    chain_name: str
+    accel: str
+    nodes: List[NodeSimStats]
+    # surviving host -> fused-in members streaming through its operators
+    # (no GB round trip); from repro.core.fusion.FusionReport.groups
+    fused_groups: Dict[str, List[str]] = field(default_factory=dict)
+    # producer-drain/consumer-fill overlap credited at node handoffs
+    handoff_overlap_cycles: float = 0.0
+
+    @property
+    def total_cycles(self) -> float:
+        return (sum(n.total_cycles for n in self.nodes)
+                - self.handoff_overlap_cycles)
+
+    @property
+    def compute_cycles(self) -> float:
+        return sum(n.compute_cycles for n in self.nodes)
+
+    @property
+    def stall_cycles(self) -> float:
+        # handoff-hidden cycles come out of per-node fill/drain stalls, so
+        # they are no longer exposed waiting at chain level; subtracting
+        # them here keeps compute + stalls == total_cycles exactly
+        return (sum(n.stall_cycles for n in self.nodes)
+                - self.handoff_overlap_cycles)
+
+    @property
+    def movement_words(self) -> float:
+        return sum(sum(n.movement.values()) for n in self.nodes)
+
+    @property
+    def energy(self) -> float:
+        return sum(n.energy for n in self.nodes)
+
+    @property
+    def utilization(self) -> float:
+        total = self.total_cycles
+        return self.compute_cycles / total if total > 0 else 1.0
+
+    def summary(self) -> dict:
+        return dict(chain=self.chain_name, accel=self.accel, mode="sim",
+                    cycles=self.total_cycles,
+                    compute_cycles=self.compute_cycles,
+                    stall_cycles=round(self.stall_cycles, 1),
+                    utilization=round(self.utilization, 4),
+                    movement=self.movement_words, energy=self.energy,
+                    fused_groups=len(self.fused_groups),
+                    handoff_overlap=round(self.handoff_overlap_cycles, 1))

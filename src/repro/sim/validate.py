@@ -1,0 +1,124 @@
+"""Analytic-model vs cycle-level-simulator cross-validation.
+
+Runs both evaluation engines over the CNN zoo x the Table-4 accelerator
+configurations and reports their divergence. The simulator is a strict
+refinement of the analytic model — same mappings (Algorithm 1 + §4.3
+consistent mapping), same fusion, same movement totals, same energy units —
+so three invariants must hold for every (network, accelerator) pair:
+
+  * ``sim cycles >= analytic compute cycles`` (Eq. 6 is a lower bound: the
+    sim adds fills, drains and per-tile stalls on top of array-busy time);
+  * ``sim movement == analytic movement`` (Eqs. 7-10 word-for-word);
+  * ``sim energy == analytic energy`` (movement-dominated, same constants).
+
+The interesting number is ``cycles_ratio`` — how much latency the
+tile-granularity effects add on top of the analytic ``max(compute, load)``
+estimate. Pairs where it is large are exactly where the paper's headline
+speedups would need a cycle-accurate caveat.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import List, Optional, Sequence, Tuple
+
+from repro.core import accelerators as acc
+from repro.core.costmodel import chain_mappings, gconv_chain_cost
+from repro.core.fusion import fuse_chain
+
+from .engine import simulate_chain
+
+DEFAULT_ACCELS = ("ER", "TPU", "EP")
+
+
+def validate_pair(chain, spec, fuse: bool = True, consistent: bool = True,
+                  contention: str = "ports",
+                  fusion_report=None) -> Tuple[dict, "object"]:
+    """One (chain, accelerator) cross-check; returns (row, ChainSimStats).
+
+    Pass ``fuse=False`` with an already-fused chain (and its
+    ``fusion_report``) to share one fusion pass across accelerators —
+    fusion is accelerator-independent."""
+    if fuse:
+        fused, report = fuse_chain(chain)
+    else:
+        fused, report = chain, fusion_report
+    # both engines score the same fused chain and charge the exact same
+    # mappings (fused and mapped once, here): parity by construction
+    pre = chain_mappings(fused, spec, consistent=consistent)
+    analytic = gconv_chain_cost(fused, spec, consistent=consistent,
+                                precomputed=pre)
+    sim = simulate_chain(fused, spec, fuse=False, consistent=consistent,
+                         contention=contention, precomputed=pre)
+    if report is not None:
+        sim.fused_groups = report.groups
+    worst = max((n for n in sim.nodes if n.kind == "gconv"),
+                key=lambda n: n.stall_cycles, default=None)
+    row = dict(
+        net=chain.name, accel=spec.name,
+        sim_cycles=round(sim.total_cycles, 1),
+        analytic_latency=round(analytic.latency, 1),
+        analytic_compute=round(analytic.compute_cycles, 1),
+        cycles_ratio=round(sim.total_cycles / max(analytic.latency, 1e-12),
+                           4),
+        above_compute_bound=bool(
+            sim.total_cycles >= analytic.compute_cycles * (1 - 1e-9)),
+        stall_frac=round(sim.stall_cycles / max(sim.total_cycles, 1e-12), 4),
+        utilization=round(sim.utilization, 4),
+        energy_drift=round(abs(sim.energy / max(analytic.energy, 1e-12) - 1),
+                           6),
+        movement_drift=round(
+            abs(sim.movement_words / max(analytic.movement_words, 1e-12) - 1),
+            6),
+        top_stall_node=(worst.name if worst is not None else None),
+    )
+    return row, sim
+
+
+def cross_validate(nets: Optional[Sequence[str]] = None,
+                   accels: Sequence[str] = DEFAULT_ACCELS,
+                   fuse: bool = True, consistent: bool = True,
+                   contention: str = "ports",
+                   out_dir: Optional[str] = None,
+                   ) -> Tuple[List[dict], dict]:
+    """Zoo x accelerators sweep; returns (rows, summary) in the benchmark
+    harness convention. When ``out_dir`` is given, writes one JSON per pair
+    with the full per-node stall/utilization breakdown."""
+    from repro.models import cnn
+
+    nets = tuple(nets) if nets else tuple(cnn.ZOO)
+    rows: List[dict] = []
+    for net in nets:
+        chain = cnn.build(net)
+        # fusion is accelerator-independent: fuse once per network
+        if fuse:
+            chain, report = fuse_chain(chain)
+        else:
+            report = None
+        for name in accels:
+            spec = acc.get(name)
+            row, sim = validate_pair(chain, spec, fuse=False,
+                                     consistent=consistent,
+                                     contention=contention,
+                                     fusion_report=report)
+            rows.append(row)
+            if out_dir:
+                os.makedirs(out_dir, exist_ok=True)
+                detail = dict(net=net, accel=name, chain=sim.summary(),
+                              nodes=[n.summary() for n in sim.nodes],
+                              fused_groups=sim.fused_groups)
+                path = os.path.join(out_dir, f"{net}__{name}.json")
+                with open(path, "w") as f:
+                    json.dump(detail, f, indent=1, default=str)
+    ratios = [r["cycles_ratio"] for r in rows]
+    summary = dict(
+        pairs=len(rows),
+        all_above_compute_bound=all(r["above_compute_bound"] for r in rows),
+        max_cycles_ratio=round(max(ratios), 4),
+        mean_cycles_ratio=round(sum(ratios) / len(ratios), 4),
+        max_energy_drift=max(r["energy_drift"] for r in rows),
+        max_movement_drift=max(r["movement_drift"] for r in rows),
+        mean_stall_frac=round(sum(r["stall_frac"] for r in rows) / len(rows),
+                              4),
+    )
+    return rows, summary

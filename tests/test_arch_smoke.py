@@ -11,6 +11,7 @@ from repro.models.api import param_count
 
 
 @pytest.mark.parametrize("arch", configs.ARCHS)
+@pytest.mark.slow
 def test_train_step_smoke(arch):
     cfg = configs.get(arch, smoke=True)
     model = api.build(cfg)

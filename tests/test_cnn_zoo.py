@@ -12,6 +12,7 @@ from repro.models import cnn
 
 
 @pytest.mark.parametrize("name", list(cnn.ZOO))
+@pytest.mark.slow
 def test_reduced_chain_executes(name):
     chain = cnn.build(name, reduced=True, batch=2)
     ex = ChainExecutor(chain)
@@ -55,6 +56,7 @@ def test_fusion_on_real_networks(name):
     assert 0.05 < rep.length_reduction <= 0.7
 
 
+@pytest.mark.slow
 def test_training_block_chain_executes():
     chain = cnn.training_block_chain(batch=4, ch=8, hw=8)
     ex = ChainExecutor(chain)

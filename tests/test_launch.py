@@ -52,6 +52,7 @@ def test_guard_drops_nondivisible_axes():
         P("model", "data")
 
 
+@pytest.mark.slow
 def test_train_smoke_loss_falls(tmp_path):
     from repro.launch.train import train
 
@@ -65,6 +66,7 @@ def test_train_smoke_loss_falls(tmp_path):
     assert last < first, (first, last)
 
 
+@pytest.mark.slow
 def test_train_survives_injected_failure(tmp_path):
     from repro.launch.train import train
 
@@ -81,6 +83,7 @@ def test_train_survives_injected_failure(tmp_path):
     assert report["final_step"] == 20
 
 
+@pytest.mark.slow
 def test_serve_continuous_batching():
     from repro.launch.serve import Request, Server
 
@@ -110,6 +113,7 @@ def test_collective_parser():
     assert out["reduce-scatter"] == 32 * 32 * 4
 
 
+@pytest.mark.slow
 def test_dryrun_smoke_cell_subprocess():
     """End-to-end dry-run of one small cell in a subprocess (own XLA_FLAGS),
     asserting the JSON record has the roofline terms."""

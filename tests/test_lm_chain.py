@@ -3,12 +3,14 @@ a plain-jnp transformer block (no RoPE/causal mask on either side)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro import configs
 from repro.core.interpreter import ChainExecutor
 from repro.models import lm_chain
 
 
+@pytest.mark.slow
 def test_lm_block_chain_matches_jnp_reference():
     cfg = configs.get("tinyllama-1.1b", smoke=True)
     B, T, D = 2, 8, cfg.d_model

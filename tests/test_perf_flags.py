@@ -57,6 +57,7 @@ def test_hymba_ssd_matches_scan_and_grad():
     assert np.isfinite(np.asarray(g)).all()
 
 
+@pytest.mark.slow
 def test_perf_flag_train_step_still_learns():
     """A full train step with all train-side levers on remains finite."""
     from repro.launch.train import train

@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import assume, given, settings, strategies as st
+from _hypothesis_compat import assume, given, settings, st
 
 from repro.core.chain import Chain
 from repro.core.fusion import fuse_chain

@@ -1,0 +1,271 @@
+"""Cycle-level simulator (repro.sim): schedule invariants, closed-form vs
+explicit trace agreement, bandwidth monotonicity, analytic cross-validation.
+"""
+import dataclasses
+
+import pytest
+
+from repro.core import accelerators as acc
+from repro.core import layers as L
+from repro.core.chain import Chain
+from repro.core.costmodel import MISALIGN_FACTOR, gconv_chain_cost
+from repro.core.fusion import fuse_chain
+from repro.core.gconv import DimSpec, GConv
+from repro.core.mapping import map_gconv, tile_sizes
+from repro.sim.engine import simulate_chain, simulate_node
+from repro.sim.schedule import TileSchedule
+from repro.sim.validate import validate_pair
+
+SPECS = [acc.eyeriss(), acc.tpu_like(), acc.eager_pruning(), acc.nlr(),
+         acc.dnnweaver()]
+
+
+def small_gconvs():
+    return [
+        GConv("conv", (DimSpec("C", ng=2, nop=8),
+                       DimSpec("H", nopc=14, nks=3),
+                       DimSpec("W", nopc=14, nks=3)),
+              input="x", kernel="k"),
+        GConv("strided", (DimSpec("B", ng=4),
+                          DimSpec("C", nop=16, nks=8),
+                          DimSpec("H", nopc=9, nks=5, stride=2)),
+              input="x", kernel="k"),
+        GConv("grouped", (DimSpec("A", ng=3, nop=5, nopc=7, nks=2),),
+              input="x", kernel="k"),
+        GConv("fc_like", (DimSpec("C", nop=64, nks=32),
+                          DimSpec("T", ng=6, nopc=4)),
+              input="x", kernel="k"),
+    ]
+
+
+def conv_chain():
+    chain = Chain("c")
+    x = chain.add_input("x", (4, 16, 28, 28))
+    a = L.conv2d(chain, x, out_c=32, k=3, pad=1, bias=False)
+    r = L.relu(chain, a)
+    b = L.conv2d(chain, r, out_c=32, k=3, pad=1, bias=False)
+    chain.mark_output(b)
+    return chain
+
+
+# ---------------------------------------------------------------------------
+# schedule invariants
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("spec", SPECS, ids=lambda s: s.name)
+def test_tile_totals_match_node_totals(spec):
+    """Per-tile word totals equal the node's analytic movement exactly, and
+    tile MAC slots cover the node's effectual MACs."""
+    for g in small_gconvs():
+        m = map_gconv(g, spec)
+        sched = TileSchedule(g, m)
+        mov = m.movement()
+        tot = sched.total_words()
+        for d in ("I", "K", "O"):
+            assert tot[d] == pytest.approx(mov[d]), (g.name, d)
+        assert sched.total_compute_cycles() >= m.cycles()
+        assert sched.total_mac_slots() >= g.macs
+        # ceil-splitting never over-issues by more than ~2x per covered loop
+        assert sched.total_mac_slots() <= 16 * g.macs
+        ts = sched.structure
+        for d in ("I", "K", "O"):
+            assert ts.strides[d] * ts.reloads[d] == ts.n_steps
+
+
+@pytest.mark.parametrize("spec", SPECS, ids=lambda s: s.name)
+def test_resident_tiles_fit_scratchpads(spec):
+    """The scratchpad-resident region behind each reuse pointer fits the
+    per-PE capacity (sliding input entries stream and are exempt)."""
+    for g in small_gconvs():
+        m = map_gconv(g, spec)
+        ts = m.tile_structure()
+        for d in ("I", "K", "O"):
+            ptr = ts.pointers[d]
+            if ptr < 0:
+                continue
+            inside = [e for e in m.temporal[: ptr + 1]
+                      if not (e.sliding and d == "I")]
+            assert tile_sizes(inside, g)[d] <= spec.ls[d], (g.name, d)
+
+
+def test_explicit_trace_ordering():
+    g = small_gconvs()[0]
+    spec = acc.eyeriss()
+    sched = TileSchedule(g, map_gconv(g, spec))
+    steps = list(sched.steps())
+    assert len(steps) == sched.n_steps
+    assert [s.index for s in steps] == list(range(sched.n_steps))
+    # every step computes; step 0 fills both in-streams; O drains on
+    # window boundaries only
+    assert steps[0].loads.get("I", 0) > 0
+    assert steps[0].loads.get("K", 0) > 0
+    s_o = sched.strides["O"]
+    for s in steps:
+        assert s.compute_cycles == sched.compute_per_step
+        assert ("O" in s.drains) == ((s.index + 1) % s_o == 0)
+
+
+# ---------------------------------------------------------------------------
+# engine: closed-form aggregation == explicit tile-by-tile reference
+# ---------------------------------------------------------------------------
+def _reference_double_buffer(g, spec, mapping, aligned=True):
+    """Naive per-tile double-buffer timing loop over the explicit trace."""
+    sched = TileSchedule(g, mapping)
+    steps = list(sched.steps())
+
+    def cyc(d, w):
+        bw = max(1, spec.gb_bandwidth.get(d, 1))
+        pen = (MISALIGN_FACTOR
+               if d == "I" and not aligned and spec.ls.get("I", 1) > 1
+               else 1.0)
+        return w / bw * pen
+
+    total = max((cyc(d, w) for d, w in steps[0].loads.items()), default=0.0)
+    for t, stp in enumerate(steps):
+        prefetch = 0.0
+        if t + 1 < len(steps):
+            prefetch = max((cyc(d, w)
+                            for d, w in steps[t + 1].loads.items()),
+                           default=0.0)
+        writeback = 0.0
+        if t > 0 and steps[t - 1].drains:
+            writeback = max(cyc(d, w)
+                            for d, w in steps[t - 1].drains.items())
+        total += max(stp.compute_cycles, prefetch, writeback)
+    total += max((cyc(d, w) for d, w in steps[-1].drains.items()),
+                 default=0.0)
+    return total
+
+
+@pytest.mark.parametrize("spec", SPECS, ids=lambda s: s.name)
+@pytest.mark.parametrize("aligned", [True, False])
+def test_closed_form_equals_explicit_reference(spec, aligned):
+    for g in small_gconvs():
+        m = map_gconv(g, spec)
+        if TileSchedule(g, m).n_steps > 200_000:
+            continue
+        ref = _reference_double_buffer(g, spec, m, aligned=aligned)
+        got = simulate_node(g, spec, mapping=map_gconv(g, spec),
+                            aligned=aligned).total_cycles
+        assert got == pytest.approx(ref, rel=1e-9), (g.name, spec.name)
+
+
+def test_stall_accounting_is_exhaustive():
+    """fill + drain + stalls account for every non-compute cycle."""
+    for g in small_gconvs():
+        for spec in SPECS:
+            ns = simulate_node(g, spec, mapping=map_gconv(g, spec))
+            assert ns.stall_cycles == pytest.approx(
+                ns.total_cycles - ns.compute_cycles, rel=1e-9, abs=1e-6)
+            assert ns.utilization <= 1.0 + 1e-9
+
+
+def test_chain_stall_accounting_is_exhaustive():
+    """compute + exposed stalls == total at chain level too (handoff-hidden
+    cycles leave both the total and the stall count; movement pseudo-nodes
+    book their transfer as stall time)."""
+    chain = Chain("c")
+    x = chain.add_input("x", (4, 16, 8, 8))
+    a = L.conv2d(chain, x, out_c=8, k=3, pad=1, bias=False)
+    v = L.view(chain, a, (4, 8 * 8 * 8))          # Movement pseudo-node
+    f = L.fc(chain, v, out_f=16)
+    chain.mark_output(f)
+    for spec in SPECS:
+        cs = simulate_chain(chain, spec)
+        assert any(n.kind == "movement" for n in cs.nodes)
+        assert cs.stall_cycles == pytest.approx(
+            cs.total_cycles - cs.compute_cycles, rel=1e-9, abs=1e-6)
+        assert cs.utilization <= 1.0 + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# stall monotonicity in GB bandwidth
+# ---------------------------------------------------------------------------
+def _with_bandwidth_scale(spec, factor):
+    return dataclasses.replace(
+        spec, gb_bandwidth={k: max(1, int(v * factor))
+                            for k, v in spec.gb_bandwidth.items()})
+
+
+@pytest.mark.parametrize("spec", SPECS, ids=lambda s: s.name)
+def test_sim_cycles_monotone_in_bandwidth(spec):
+    for g in small_gconvs():
+        totals = []
+        for factor in (0.5, 1, 2, 4):
+            s = _with_bandwidth_scale(spec, factor)
+            totals.append(simulate_node(g, s, mapping=map_gconv(g, s))
+                          .total_cycles)
+        for slower, faster in zip(totals, totals[1:]):
+            assert faster <= slower * (1 + 1e-9), (g.name, totals)
+
+
+# ---------------------------------------------------------------------------
+# analytic cross-validation
+# ---------------------------------------------------------------------------
+def test_sim_node_at_least_analytic_latency():
+    """Per node, tile-granularity timing can only add to the analytic
+    max(compute, load): Σ_t max(a_t, b_t) >= max(Σa, Σb)."""
+    chain = conv_chain()
+    fused = fuse_chain(chain)[0]
+    for spec in SPECS:
+        analytic = gconv_chain_cost(fused, spec)
+        sim = simulate_chain(fused, spec, fuse=False)
+        for ns, nc in zip(sim.nodes, analytic.nodes):
+            assert ns.name == nc.name
+            assert ns.total_cycles >= nc.latency - 1e-6, (spec.name, ns.name)
+
+
+def test_sim_energy_and_movement_match_analytic():
+    """Same mappings, same movement equations, same energy constants:
+    the two engines must agree exactly on words and energy."""
+    chain = conv_chain()
+    fused = fuse_chain(chain)[0]
+    for spec in SPECS:
+        analytic = gconv_chain_cost(fused, spec)
+        sim = simulate_chain(fused, spec, fuse=False)
+        assert sim.movement_words == pytest.approx(analytic.movement_words,
+                                                   rel=1e-9)
+        assert sim.energy == pytest.approx(analytic.energy, rel=1e-9)
+
+
+def test_shared_bus_contention_never_faster():
+    chain = conv_chain()
+    for spec in (acc.eyeriss(), acc.tpu_like()):
+        ports = simulate_chain(chain, spec, contention="ports").total_cycles
+        shared = simulate_chain(chain, spec, contention="shared").total_cycles
+        assert shared >= ports - 1e-6
+
+
+def test_fusion_groups_reported():
+    sim = simulate_chain(conv_chain(), acc.eyeriss(), fuse=True)
+    members = [m for ms in sim.fused_groups.values() for m in ms]
+    assert any("relu" in m for m in members)
+    # fused members are gone from the simulated node list
+    names = {n.name for n in sim.nodes}
+    assert not any(m in names for m in members)
+
+
+def test_validate_pair_small_network():
+    from repro.models import cnn
+
+    chain = cnn.build("AN")
+    for spec in (acc.eyeriss(), acc.tpu_like()):
+        row, sim = validate_pair(chain, spec)
+        assert row["above_compute_bound"]
+        assert row["energy_drift"] < 1e-6
+        assert row["movement_drift"] < 1e-6
+        assert 1.0 <= row["cycles_ratio"] < 4.0, row
+        assert any(n.kind == "gconv" and n.stall_cycles >= 0
+                   for n in sim.nodes)
+
+
+@pytest.mark.slow
+def test_zoo_cross_validation_agreement():
+    """Fig.-14-grade sweep: the sim stays above the analytic compute lower
+    bound and within a stated factor of the analytic latency on the zoo."""
+    from repro.sim.validate import cross_validate
+
+    rows, summary = cross_validate(accels=("ER", "TPU", "EP"))
+    assert summary["all_above_compute_bound"]
+    assert summary["max_energy_drift"] < 1e-6
+    assert summary["max_movement_drift"] < 1e-6
+    assert summary["max_cycles_ratio"] < 3.0
