@@ -1,0 +1,109 @@
+"""Interpreter-vs-compiled execution benchmarks (the perf trajectory).
+
+``exec``       — per-zoo-network wall time: the eager oracle interpreter
+                 (``core.interpreter.ChainExecutor``) vs the compiled engine
+                 (``repro.exec``), steady-state (post-warmup), plus the
+                 allclose divergence between the two. Seeds the
+                 ``results/benchmarks.json`` perf trajectory.
+``exec_micro`` — one smoke network, run by the FAST CI tier;
+                 ``benchmarks.run`` exits nonzero if the compiled engine is
+                 not faster than the interpreter.
+"""
+from __future__ import annotations
+
+import time
+
+
+def _bench_pair(chain, inputs, params, iters=3):
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.interpreter import ChainExecutor
+    from repro.exec import compile_chain
+
+    ex = ChainExecutor(chain)
+    eng = compile_chain(chain)
+
+    t0 = time.perf_counter()
+    got = jax.block_until_ready(eng(inputs, params))
+    compile_s = time.perf_counter() - t0
+    ref = jax.block_until_ready(ex(inputs, params))       # eager warmup
+    err = 0.0
+    for o in ref:
+        err = max(err, float(jnp.max(jnp.abs(
+            jnp.asarray(got[o], jnp.float32)
+            - jnp.asarray(ref[o], jnp.float32)))))
+
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(ex(inputs, params))
+    oracle_us = (time.perf_counter() - t0) / iters * 1e6
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(eng(inputs, params))
+    compiled_us = (time.perf_counter() - t0) / iters * 1e6
+    speedup = oracle_us / max(compiled_us, 1e-9)
+    return dict(
+        oracle_us=round(oracle_us),
+        compiled_us=round(compiled_us, 1),
+        speedup=round(speedup, 1),
+        _speedup_raw=speedup,        # unrounded, for gates; stripped below
+        compile_us=round(compile_s * 1e6),
+        max_err=round(err, 6),
+        backends=eng.backend_histogram(),
+    )
+
+
+def _zoo_case(name, batch=2):
+    import jax
+
+    from repro.core.interpreter import init_chain_params
+    from repro.models import cnn
+
+    chain = cnn.build(name, reduced=True, batch=batch)
+    params = init_chain_params(chain, jax.random.PRNGKey(0))
+    return chain, cnn.random_inputs(chain), params
+
+
+def exec_speedup():
+    """Fig.-style interpreter-vs-compiled sweep over the seven zoo CNNs."""
+    import numpy as np
+
+    from repro.models import cnn
+
+    rows = []
+    for name in cnn.ZOO:
+        chain, inputs, params = _zoo_case(name)
+        r = _bench_pair(chain, inputs, params)
+        r["net"] = name
+        rows.append(r)
+    # gates use the unrounded ratios (rounding 1.04 -> 1.0 must not fail CI)
+    speedups = [r.pop("_speedup_raw") for r in rows]
+    geomean = float(np.exp(np.mean(np.log(np.maximum(speedups, 1e-9)))))
+    summary = dict(
+        networks=len(rows),
+        geomean_speedup=round(geomean, 1),
+        min_speedup=round(min(speedups), 1),
+        all_faster=bool(min(speedups) > 1.0),
+        worst_err=max(r["max_err"] for r in rows),
+        target="geomean >= 3x over the oracle interpreter at test scale",
+        met=bool(geomean >= 3.0),
+    )
+    return rows, summary
+
+
+def exec_micro():
+    """FAST-tier smoke: one network; fails CI when compiled is slower."""
+    chain, inputs, params = _zoo_case("MN", batch=1)
+    r = _bench_pair(chain, inputs, params)
+    r["net"] = "MN"
+    raw = r.pop("_speedup_raw")
+    summary = dict(
+        speedup=r["speedup"],
+        max_err=r["max_err"],
+        # gate both speed (unrounded: 1.04 must pass) and correctness —
+        # the zoo differential tests are @slow and absent from FAST CI
+        compiled_faster=bool(raw > 1.0 and r["max_err"] <= 1e-3),
+    )
+    return [r], summary

@@ -23,8 +23,9 @@ import time
 
 # "simval" (the cycle-level sim sweep) is not in ALL: the default analytic
 # run stays pure closed-form; select it with --engine sim or --only simval.
+# "exec_micro" (the FAST-tier smoke) is likewise only run via --only.
 ALL = ("table1", "fig12", "fig13", "fig14", "fig15", "fusion", "fig18",
-       "fig20", "kernels", "roofline")
+       "fig20", "kernels", "roofline", "exec")
 
 
 def _run(name, fn):
@@ -149,6 +150,7 @@ def main():
     else:
         want = list(ALL)
 
+    from benchmarks import exec_bench
     from benchmarks import paper_tables as pt
 
     table = {
@@ -158,6 +160,7 @@ def main():
         "fig18": pt.fig18_energy, "fig20": pt.fig20_wholelife,
         "kernels": bench_kernels, "roofline": bench_roofline,
         "simval": pt.sim_validation,
+        "exec": exec_bench.exec_speedup, "exec_micro": exec_bench.exec_micro,
     }
     results = {}
     for name in want:
@@ -174,11 +177,21 @@ def main():
                 merged = json.load(f)
         except (OSError, ValueError):
             merged = {}
+    # exec_micro is the per-machine CI smoke gate: keep its wall times out
+    # of the committed perf-trajectory artifact (every FAST CI run would
+    # otherwise clobber the curated rows with laptop numbers)
     merged.update({k: {"rows": v[0], "summary": v[1]}
-                   for k, v in results.items()})
+                   for k, v in results.items() if k != "exec_micro"})
     with open(out, "w") as f:
         json.dump(merged, f, indent=1, default=str)
     print(f"\nwrote {os.path.abspath(out)}")
+
+    # CI gate (scripts/ci.sh FAST tier): the compiled engine must beat the
+    # oracle interpreter on the smoke network
+    if "exec_micro" in results and not results["exec_micro"][1].get(
+            "compiled_faster"):
+        raise SystemExit("exec_micro: compiled engine slower than the "
+                         "oracle interpreter")
 
 
 if __name__ == "__main__":

@@ -2,7 +2,10 @@
 # CI entry point.
 #
 #   ./scripts/ci.sh                 tier-1: full suite (the ROADMAP verify)
-#   FAST=1 ./scripts/ci.sh          smoke tier: skip @slow tests
+#   FAST=1 ./scripts/ci.sh          smoke tier: skip @slow tests, then run
+#                                   the compiled-engine smoke benchmark
+#                                   (fails if the compiled engine is slower
+#                                   than the oracle interpreter)
 #   CI_INSTALL=1 ./scripts/ci.sh    pip install -e '.[dev]' first (networked
 #                                   CI; the dev extras declare pytest and
 #                                   hypothesis — without them the property
@@ -22,4 +25,11 @@ if [ "${FAST:-0}" = "1" ]; then
 fi
 
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
-  exec python -m pytest -x -q ${marker_args[@]+"${marker_args[@]}"} "$@"
+  python -m pytest -x -q ${marker_args[@]+"${marker_args[@]}"} "$@"
+
+if [ "${FAST:-0}" = "1" ]; then
+  # compiled-path smoke benchmark: benchmarks.run exits nonzero when the
+  # compiled engine does not beat the interpreter on the smoke network
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m benchmarks.run --only exec_micro
+fi

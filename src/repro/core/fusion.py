@@ -44,7 +44,9 @@ class FusionReport:
     # surviving node -> the fusible nodes absorbed into it (transitively).
     # The cycle-level simulator (repro.sim) uses these groups: members stream
     # tile-by-tile through their host's pre/post operators and never make a
-    # global-buffer round trip.
+    # global-buffer round trip. The compiled execution engine (repro.exec)
+    # uses the same groups as its unit of dispatch: one group = one emitted
+    # step whose member operations run as fused pre/post sequences.
     groups: Dict[str, List[str]] = field(default_factory=dict)
 
     @property
@@ -52,8 +54,41 @@ class FusionReport:
         return 1.0 - self.after_len / max(1, self.before_len)
 
 
+@dataclass(frozen=True)
+class ExecGroup:
+    """One execution partition of a fused chain: the surviving ``host`` node
+    plus the fused nodes riding on its operator path. ``members`` is empty
+    for nodes nothing was fused into (singleton groups)."""
+
+    host: str
+    members: Tuple[str, ...] = ()
+
+    @property
+    def size(self) -> int:
+        return 1 + len(self.members)
+
+
+def execution_partitions(chain: Chain, report: FusionReport) -> List[ExecGroup]:
+    """Partition a *fused* chain into ordered execution groups.
+
+    Every surviving node of ``chain`` yields exactly one group, in chain
+    order; ``report.groups`` supplies the absorbed members. Note that
+    consumer-``pre`` fusion replicates a node into each consumer, so a
+    fused-away node may legitimately appear in several groups' members
+    (the paper's "FP2 can be processed as the pre of FP3 *and* FP4").
+    """
+    return [ExecGroup(host=name,
+                      members=tuple(report.groups.get(name, ())))
+            for name in chain.nodes]
+
+
 def _is_fusible(g: GConv) -> bool:
     if g.reduce != "none":
+        return False
+    if g.out_dtype is not None:
+        # the node is a quantization point: its intermediate's dtype is
+        # semantic, and riding on a neighbor's operator path would drop
+        # the cast (the pre/post vocabulary carries no dtype change)
         return False
     if any(d.nks > 1 or d.nop > 1 for d in g.dims):
         return False

@@ -26,6 +26,40 @@ from .chain import Chain, Concat, Movement
 from .gconv import DimSpec, GConv
 
 
+def init_chain_params(chain: Chain, key, scale: float = 0.1
+                      ) -> Dict[str, jnp.ndarray]:
+    """Random parameter pytree for a chain (shared by the oracle executor
+    and the compiled engine so both draw the identical values)."""
+    out = {}
+    for name, info in chain.params.items():
+        key, sub = jax.random.split(key)
+        out[name] = scale * jax.random.normal(sub, info.shape,
+                                              dtype=info.dtype)
+    return out
+
+
+def apply_movement(node: Movement, x: jnp.ndarray) -> jnp.ndarray:
+    """Movement semantics (reshape/transpose/flip + the deterministic
+    gather stand-in) — the single definition both engines execute.
+
+    Runtime-dependent selection (RoI boxes / NMS) is modeled as a
+    deterministic stand-in: cycle through the flattened source (movement
+    cost is what matters here)."""
+    if node.pre_shape is not None:
+        x = x.reshape(node.pre_shape)
+    if node.perm is not None:
+        x = jnp.transpose(x, node.perm)
+    for ax in node.flip:
+        x = jnp.flip(x, axis=ax)
+    if node.gather:
+        flat = x.reshape(-1)
+        n = node.out_elems
+        reps = -(-n // flat.size)
+        flat = jnp.tile(flat, reps)[:n]
+        return flat.reshape(node.out_shape)
+    return x.reshape(node.out_shape)
+
+
 def _window_axis(x: jnp.ndarray, axis: int, d: DimSpec, pad_val: float):
     """(…, Ng*Nips, …) -> (…, Ng, Nopc, Nks, …) at ``axis``."""
     x = jnp.moveaxis(x, axis, -1)
@@ -99,12 +133,7 @@ class ChainExecutor:
         self.chain = chain
 
     def init_params(self, key, scale: float = 0.1) -> Dict[str, jnp.ndarray]:
-        out = {}
-        for name, info in self.chain.params.items():
-            key, sub = jax.random.split(key)
-            out[name] = scale * jax.random.normal(
-                sub, info.shape, dtype=info.dtype)
-        return out
+        return init_chain_params(self.chain, key, scale)
 
     def __call__(self,
                  inputs: Mapping[str, jnp.ndarray],
@@ -131,24 +160,7 @@ class ChainExecutor:
                 env[name] = jnp.concatenate(
                     [env[r] for r in node.inputs], axis=node.axis)
             elif isinstance(node, Movement):
-                x = env[node.input]
-                if node.pre_shape is not None:
-                    x = x.reshape(node.pre_shape)
-                if node.perm is not None:
-                    x = jnp.transpose(x, node.perm)
-                for ax in node.flip:
-                    x = jnp.flip(x, axis=ax)
-                if node.gather:
-                    # runtime-dependent selection (RoI boxes / NMS) is
-                    # modeled as a deterministic stand-in: cycle through the
-                    # flattened source (movement cost is what matters here)
-                    flat = x.reshape(-1)
-                    n = node.out_elems
-                    reps = -(-n // flat.size)
-                    flat = jnp.tile(flat, reps)[:n]
-                    env[name] = flat.reshape(node.out_shape)
-                else:
-                    env[name] = x.reshape(node.out_shape)
+                env[name] = apply_movement(node, env[node.input])
             else:
                 k = env[node.kernel] if node.kernel is not None else None
                 env[name] = eval_gconv(node, env[node.input], k, lookup)

@@ -1,0 +1,27 @@
+"""Compiled GCONV-chain execution engine (the fast path).
+
+The oracle interpreter (``repro.core.interpreter``) materializes the full
+``(Ng, Nop, Nopc, Nks)`` expansion per node; this package compiles a chain
+once — §4.3 fusion-group partitioning, per-GCONV backend dispatch
+(grouped matmul / spatial conv / reductions / elementwise / fused
+segments), Movement and Concat as metadata — and executes it as a single
+jitted function.
+"""
+from .engine import CompiledChain, CompileOptions, compile_chain
+from .dispatch import dispatch_gconv, plan_chain
+from .lowering import classify_dim, dim_classes
+
+
+def execute_gconv(node, x, k=None, operands=None, backend: str = "jnp"):
+    """Execute ONE GCONV through the compiled-engine dispatch (testing
+    helper: the differential property tests compare this against
+    ``core.interpreter.eval_gconv``)."""
+    k_shape = tuple(k.shape) if k is not None else None
+    _tag, fn = dispatch_gconv(node, k_shape, backend=backend)
+    lookup = (lambda op: operands[op.operand]) if operands else None
+    return fn(x, k, lookup)
+
+
+__all__ = ["CompiledChain", "CompileOptions", "compile_chain",
+           "dispatch_gconv", "plan_chain", "classify_dim", "dim_classes",
+           "execute_gconv"]

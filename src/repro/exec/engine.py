@@ -1,0 +1,146 @@
+"""The compiled GCONV-chain execution engine.
+
+``compile_chain`` turns a :class:`~repro.core.chain.Chain` into a
+:class:`CompiledChain`: §4.3 fusion partitions the chain into fusion
+groups (``exec.partition``), each group is dispatched to its best backend
+(``exec.dispatch`` / ``exec.lowering``) and the whole program is emitted as
+ONE jitted function — Movement/Concat nodes lower to metadata-only
+reshape/transpose inside the same XLA program, so intermediates never make
+the per-node round trip the oracle interpreter pays for.
+
+The engine is differentially tested allclose against
+:class:`~repro.core.interpreter.ChainExecutor` on the full CNN zoo and the
+LM chain segments (tests/test_exec.py), and benchmarked against it per zoo
+network (``python -m benchmarks.run --only exec``).
+
+Usage mirrors the oracle::
+
+    eng = compile_chain(chain)
+    params = eng.init_params(jax.random.PRNGKey(0))
+    outs = eng(inputs, params)            # dict of chain outputs
+    eng.dispatch                          # node -> backend table
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Mapping, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core.chain import Chain
+from ..core.fusion import ExecGroup, FusionReport
+from .dispatch import Plan, plan_chain
+from .partition import partition_chain
+
+
+@dataclass(frozen=True)
+class CompileOptions:
+    fuse: bool = True            # run §4.3 operation fusion first
+    segments: bool = True        # recognize softmax/norm/attention segments
+    backend: str = "auto"        # auto | jnp | pallas
+    mxu_min: int = 128           # min K/N to prefer the Pallas matmul (auto)
+    jit: bool = True
+
+
+class CompiledChain:
+    """A chain compiled to one jitted function (plus introspection)."""
+
+    def __init__(self, source: Chain, chain: Chain, report: FusionReport,
+                 partitions: List[ExecGroup], plan: Plan,
+                 options: CompileOptions):
+        self.source = source
+        self.chain = chain                   # the fused chain actually run
+        self.fusion_report = report
+        self.partitions = partitions
+        self.steps = plan.steps
+        self.dispatch: Dict[str, str] = plan.dispatch
+        self.options = options
+        self._fns: Dict[bool, object] = {}
+
+    # -- parameter init (the oracle's own recipe, shared) ---------------
+    def init_params(self, key, scale: float = 0.1) -> Dict[str, jnp.ndarray]:
+        from ..core.interpreter import init_chain_params
+        return init_chain_params(self.chain, key, scale)
+
+    # -- execution ------------------------------------------------------
+    def _execute(self, inputs, params, keep_all: bool):
+        """``keep_all`` mirrors the oracle's contract (the whole
+        environment: inputs, params and every produced node) — except
+        that §4.3-fused members and segment-interior nodes do not exist
+        in the compiled program and therefore have no entry (that is the
+        point of fusing them; see ``dispatch`` for the ``fused:`` tags)."""
+        env: Dict[str, jnp.ndarray] = dict(inputs)
+        env.update(params)
+        for step in self.steps:
+            env[step.name] = step.run(env)
+        if keep_all:
+            return env
+        outs = self.chain.outputs or [list(self.chain.nodes)[-1]]
+        return {o: env[o] for o in outs}
+
+    def _fn(self, keep_all: bool):
+        fn = self._fns.get(keep_all)
+        if fn is None:
+            if self.options.jit:
+                fn = jax.jit(
+                    lambda inputs, params, _k=keep_all:
+                    self._execute(inputs, params, _k))
+            else:
+                fn = (lambda inputs, params, _k=keep_all:
+                      self._execute(inputs, params, _k))
+            self._fns[keep_all] = fn
+        return fn
+
+    def __call__(self,
+                 inputs: Mapping[str, jnp.ndarray],
+                 params: Optional[Mapping[str, jnp.ndarray]] = None,
+                 keep_all: bool = False) -> Dict[str, jnp.ndarray]:
+        params = params or {}
+        ins = {}
+        for name, info in self.chain.inputs.items():
+            if name not in inputs:
+                raise ValueError(f"missing chain input {name!r}")
+            arr = jnp.asarray(inputs[name])
+            if tuple(arr.shape) != info.shape:
+                raise ValueError(
+                    f"input {name!r}: got {arr.shape}, want {info.shape}")
+            ins[name] = arr
+        ps = {}
+        for name in self.chain.params:
+            if name not in params:
+                raise ValueError(f"missing chain param {name!r}")
+            ps[name] = jnp.asarray(params[name])
+        return dict(self._fn(keep_all)(ins, ps))
+
+    # -- introspection --------------------------------------------------
+    def backend_histogram(self) -> Dict[str, int]:
+        hist: Dict[str, int] = {}
+        for tag in self.dispatch.values():
+            key = tag.split(":")[0] if tag.startswith("fused") else tag
+            hist[key] = hist.get(key, 0) + 1
+        return hist
+
+    def pretty(self) -> str:
+        lines = [f"CompiledChain {self.chain.name!r}: "
+                 f"{len(self.steps)} steps from {len(self.source.nodes)} "
+                 f"nodes (fusion {self.fusion_report.before_len}->"
+                 f"{self.fusion_report.after_len})"]
+        for name, tag in self.dispatch.items():
+            lines.append(f"  {name}: {tag}")
+        return "\n".join(lines)
+
+
+def compile_chain(chain: Chain, **options) -> CompiledChain:
+    """Compile a chain for execution. See :class:`CompileOptions`."""
+    opts = CompileOptions(**options)
+    chain.validate()
+    fused, report, parts = partition_chain(chain, fuse=opts.fuse)
+    plan = plan_chain(fused, backend=opts.backend, mxu_min=opts.mxu_min,
+                      segments=opts.segments)
+    # §4.3-fused nodes no longer exist in the fused chain; record them in
+    # the dispatch table so every ORIGINAL node has an entry
+    for host, members in report.groups.items():
+        for m in members:
+            plan.dispatch.setdefault(m, f"fused:{host}")
+    return CompiledChain(chain, fused, report, parts, plan, opts)

@@ -36,15 +36,23 @@ def _kernel(x_ref, g_ref, b_ref, o_ref, *, eps: float, mode: str):
     o_ref[...] = y.astype(o_ref.dtype)
 
 
-@functools.partial(
-    jax.jit, static_argnames=("eps", "mode", "block_t", "interpret"))
 def chain_norm(x: jax.Array, gamma: jax.Array,
                beta: Optional[jax.Array] = None, *, eps: float = 1e-6,
                mode: str = "rms", block_t: int = 256,
                interpret: Optional[bool] = None) -> jax.Array:
-    """x: (T, C); gamma/beta: (C,). Returns same dtype as x."""
+    """x: (T, C); gamma/beta: (C,). Returns same dtype as x.
+
+    ``interpret`` resolves outside the jit boundary so the
+    ``REPRO_FORCE_INTERPRET`` override keys the jit cache."""
     if interpret is None:
         interpret = use_interpret()
+    return _chain_norm(x, gamma, beta, eps=eps, mode=mode, block_t=block_t,
+                       interpret=bool(interpret))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("eps", "mode", "block_t", "interpret"))
+def _chain_norm(x, gamma, beta, *, eps, mode, block_t, interpret):
     T, C = x.shape
     bt = min(block_t, T)
     grid = (cdiv(T, bt),)

@@ -2,17 +2,31 @@
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
 
 
 @functools.lru_cache(maxsize=1)
+def _backend_wants_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
 def use_interpret() -> bool:
     """Pallas kernels target TPU Mosaic; anywhere else (this CPU container)
     they run in interpret mode, which executes the kernel body with the
-    same blocking semantics for correctness validation."""
-    return jax.default_backend() != "tpu"
+    same blocking semantics for correctness validation.
+
+    ``REPRO_FORCE_INTERPRET=1`` (or ``0``) overrides the backend-derived
+    default; the env var is re-read on every call so a single TPU CI
+    process can exercise both modes (the backend probe itself stays
+    cached — it cannot change within a process).
+    """
+    forced = os.environ.get("REPRO_FORCE_INTERPRET")
+    if forced is not None and forced != "":
+        return forced.lower() not in ("0", "false", "no")
+    return _backend_wants_interpret()
 
 
 def cdiv(a: int, b: int) -> int:
@@ -24,11 +38,20 @@ def round_up(a: int, b: int) -> int:
 
 
 def pick_block(n: int, target: int, align: int = 128) -> int:
-    """Largest hardware-aligned block <= target that does not overshoot n
-    too badly. MXU wants multiples of 128 in contraction/output dims; VPU
-    lanes want multiples of 8 in sublanes."""
+    """Hardware-aligned block size for an axis of length ``n``.
+
+    Contract: the result ``b`` satisfies ``1 <= b <= round_up(n, align)``
+    and, for ``n > align``, ``b % align == 0``. A block may be *smaller*
+    than ``n`` (it never silently covers the remainder): callers MUST pad
+    the axis to ``cdiv(n, b) * b`` (or mask the tail in-kernel) before
+    launching a grid of ``cdiv(n, b)`` steps (enforced by
+    ``tests/test_exec.py::test_pick_block_invariants``).
+
+    MXU wants multiples of 128 in contraction/output dims; VPU lanes want
+    multiples of 8 in sublanes.
+    """
     if n <= align:
-        return max(1, n)
+        return max(1, min(n, target))
     b = min(target, round_up(n, align))
     b = (b // align) * align
     return max(align, b)

@@ -75,10 +75,6 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
                     / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("causal", "scale", "block_q", "block_k", "q_offset",
-                     "interpret"))
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     causal: bool = True, scale: Optional[float] = None,
                     block_q: int = 256, block_k: int = 256,
@@ -89,9 +85,23 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     ``q_offset`` positions the query block on the key timeline for
     decode/chunked-prefill causal masking (query i attends keys
     <= q_offset + i).
+
+    ``interpret`` resolves outside the jit boundary so the
+    ``REPRO_FORCE_INTERPRET`` override keys the jit cache.
     """
     if interpret is None:
         interpret = use_interpret()
+    return _flash_attention(q, k, v, causal=causal, scale=scale,
+                            block_q=block_q, block_k=block_k,
+                            q_offset=q_offset, interpret=bool(interpret))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "scale", "block_q", "block_k", "q_offset",
+                     "interpret"))
+def _flash_attention(q, k, v, *, causal, scale, block_q, block_k, q_offset,
+                     interpret):
     H, Tq, D = q.shape
     H2, Tk, D2 = k.shape
     assert (H, D) == (H2, D2), (q.shape, k.shape)

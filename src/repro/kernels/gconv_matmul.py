@@ -12,49 +12,80 @@ touching HBM. ``Ng`` maps to the grid's group axis (experts in MoE, groups in
 grouped convolution, heads in attention), ``Nop/Nopc`` to the (m, n) output
 tile, ``Nks`` to the contraction.
 
+Fused operator sequences: beyond the single-op ``post=``/``scale=`` form,
+``prologue=``/``epilogue=`` accept whole §4.3 pre/post sequences as
+``(name, const, operand_slot)`` triples over the ``core.operators.UNARY``
+vocabulary. Tensor operands (bias, scale, fused norm statistics, …) ride in
+``operands[slot]`` shaped ``(G|1, M, 1)`` / ``(G|1, 1, K)`` for the prologue
+and ``(G|1, M, 1)`` / ``(G|1, 1, N)`` for the epilogue; each is blocked with
+the matching (m/k/n) grid axis so the op applies in-register per tile.
+
 Blocking: grid (G, M/bm, N/bn, K/bk), K innermost so each (g, m, n) output
 block stays resident in VMEM while the contraction streams over K
 (output-stationary; kernel/input blocks are the streamed operands). f32
 accumulation in the output block; the cast to the storage dtype happens on
-the last K step together with the ``post`` epilogue.
+the last K step together with the ``post`` epilogue. Padded-K columns are
+re-masked to the additive identity after a prologue (prologue ops need not
+preserve zero).
 """
 from __future__ import annotations
 
 import functools
-from typing import Callable, Optional
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from ..core import operators as core_ops
 from .common import cdiv, pick_block, use_interpret
 
-# epilogue/prologue vocabulary (a subset of core.operators.UNARY that makes
-# sense in-register; extend as chains demand)
+# legacy single-op epilogue vocabulary (post=/scale= form), defined in
+# terms of core.operators.UNARY so the two epilogue paths share one source
 EPILOGUES = {
-    "id": lambda x: x,
-    "relu": lambda x: jnp.maximum(x, 0),
-    "silu": jax.nn.silu,
-    "gelu": jax.nn.gelu,
-    "sigmoid": jax.nn.sigmoid,
-    "tanh": jnp.tanh,
-    "exp": jnp.exp,
-    "square": lambda x: x * x,
+    name: (lambda f: lambda x: f(x, None, None))(core_ops.UNARY[name])
+    for name in ("id", "relu", "silu", "gelu", "sigmoid", "tanh", "exp",
+                 "square")
 }
 
+# ops legal in a fused prologue/epilogue sequence: every UNARY entry that is
+# elementwise in its input and (optionally) one broadcast operand.
+FUSABLE_OPS = frozenset(core_ops.UNARY)
 
-def _kernel(x_ref, w_ref, o_ref, *, n_k: int, post: str, scale: float,
-            out_dtype):
+# (name, const, operand_slot): one fused pre/post operator application.
+FusedOp = Tuple[str, Optional[float], Optional[int]]
+
+
+def _apply_fused(seq: Sequence[FusedOp], y, operand_refs):
+    for name, const, slot in seq:
+        p = None
+        if slot is not None:
+            p = operand_refs[slot][...].astype(jnp.float32)
+        y = core_ops.UNARY[name](y, const, p)
+    return y
+
+
+def _kernel(x_ref, w_ref, *rest, n_k: int, post: str, scale: float,
+            prologue: Tuple[FusedOp, ...], epilogue: Tuple[FusedOp, ...],
+            k_true: int, bk: int):
+    o_ref = rest[-1]
+    op_refs = rest[:-1]
     k = pl.program_id(3)
 
     @pl.when(k == 0)
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
 
-    x = x_ref[0].astype(jnp.float32)         # (bm, bk)
+    x = x_ref[...].astype(jnp.float32)       # (1, bm, bk)
+    if prologue:
+        x = _apply_fused(prologue, x, op_refs)
+        # prologue ops need not map 0 -> 0: re-zero the padded K tail so it
+        # stays the additive identity of the contraction
+        k_ids = k * bk + jax.lax.broadcasted_iota(jnp.int32, x.shape, 2)
+        x = jnp.where(k_ids < k_true, x, 0.0)
     w = w_ref[0].astype(jnp.float32)         # (bk, bn)
     acc = jax.lax.dot_general(
-        x, w, (((1,), (0,)), ((), ())),
+        x[0], w, (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32)
     o_ref[...] += acc[None]
 
@@ -64,32 +95,96 @@ def _kernel(x_ref, w_ref, o_ref, *, n_k: int, post: str, scale: float,
         if scale != 1.0:
             y = y * scale
         y = EPILOGUES[post](y)
+        if epilogue:
+            y = _apply_fused(epilogue, y, op_refs)
         o_ref[...] = y
+
+
+def _operand_spec(shape, slot, G, M, L, bm, blk, stage):
+    """BlockSpec for a fused-op operand. Legal shapes: (G|1, M|1, 1) or
+    (G|1, 1, L|1) with L = K (prologue) / N (epilogue); every axis must be
+    the full extent or a broadcast 1 — anything else is rejected (a
+    mismatched group axis must not silently read group 0)."""
+    g, a, b = shape
+    if g not in (1, G):
+        raise ValueError(f"operand {slot}: group axis {g} != 1 or {G}")
+    if (a, b) not in {(1, 1), (M, 1), (1, L)}:
+        raise ValueError(
+            f"operand {slot}: shape {shape} not broadcastable over "
+            f"(G={G}, M={M}, {'K' if stage == 'pro' else 'N'}={L})")
+    gi = (lambda g_, m, n, k: g_) if g == G and G > 1 else (lambda *_: 0)
+    if (a, b) == (1, 1):                      # per-group scalar
+        return pl.BlockSpec((1, 1, 1),
+                            lambda g_, m, n, k, _gi=gi: (_gi(g_, m, n, k), 0, 0))
+    if b == 1:                                # (G|1, M, 1): follows the m axis
+        return pl.BlockSpec((1, bm, 1),
+                            lambda g_, m, n, k, _gi=gi: (_gi(g_, m, n, k), m, 0))
+    if stage == "pro":                        # (G|1, 1, K): follows the k axis
+        return pl.BlockSpec((1, 1, blk),
+                            lambda g_, m, n, k, _gi=gi: (_gi(g_, m, n, k), 0, k))
+    return pl.BlockSpec((1, 1, blk),          # (G|1, 1, N): follows the n axis
+                        lambda g_, m, n, k, _gi=gi: (_gi(g_, m, n, k), 0, n))
+
+
+def _pad_operand(arr, G, Mp, Lp):
+    """Zero-pad an operand's non-unit M and K/N axes to block multiples."""
+    g, a, b = arr.shape
+    pad_a = (Mp - a) if a != 1 else 0
+    pad_b = (Lp - b) if b != 1 else 0
+    if pad_a or pad_b:
+        arr = jnp.pad(arr, ((0, 0), (0, pad_a), (0, pad_b)))
+    return arr
+
+
+def gconv_matmul(x: jax.Array, w: jax.Array, *, post: str = "id",
+                 scale: float = 1.0,
+                 prologue: Tuple[FusedOp, ...] = (),
+                 epilogue: Tuple[FusedOp, ...] = (),
+                 operands: Tuple[jax.Array, ...] = (),
+                 block_m: int = 256, block_n: int = 256,
+                 block_k: int = 512,
+                 interpret: Optional[bool] = None) -> jax.Array:
+    """out[g] = epilogue(scale * (prologue(x)[g] @ w[g])), f32 accumulation.
+
+    x: (G, M, K); w: (G, K, N) -> (G, M, N) in f32 (callers cast).
+    ``prologue``/``epilogue`` are ``(name, const, operand_slot)`` sequences
+    over ``core.operators.UNARY``; slot ``i`` reads ``operands[i]``, shaped
+    ``(G|1, M, 1)``, ``(G|1, 1, K)`` (prologue) or ``(G|1, 1, N)``
+    (epilogue). Shapes need not be tile-aligned; blocks are shrunk to fit
+    and the remainders zero-padded (see ``kernels.common.pick_block``).
+
+    ``interpret`` is resolved here, OUTSIDE the jit boundary, so the
+    ``REPRO_FORCE_INTERPRET`` override keys the jit cache — both modes can
+    run (and stay cached separately) within one process.
+    """
+    if interpret is None:
+        interpret = use_interpret()
+    return _gconv_matmul(x, w, post=post, scale=scale,
+                         prologue=tuple(prologue), epilogue=tuple(epilogue),
+                         operands=tuple(operands), block_m=block_m,
+                         block_n=block_n, block_k=block_k,
+                         interpret=bool(interpret))
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("post", "scale", "block_m", "block_n", "block_k",
-                     "interpret"))
-def gconv_matmul(x: jax.Array, w: jax.Array, *, post: str = "id",
-                 scale: float = 1.0, block_m: int = 256, block_n: int = 256,
-                 block_k: int = 512,
-                 interpret: Optional[bool] = None) -> jax.Array:
-    """out[g] = post(scale * (x[g] @ w[g])), f32 accumulation.
-
-    x: (G, M, K); w: (G, K, N) -> (G, M, N) in f32 (callers cast).
-    Shapes need not be tile-aligned; blocks are shrunk to fit.
-    """
-    if interpret is None:
-        interpret = use_interpret()
+    static_argnames=("post", "scale", "prologue", "epilogue", "block_m",
+                     "block_n", "block_k", "interpret"))
+def _gconv_matmul(x, w, *, post, scale, prologue, epilogue, operands,
+                  block_m, block_n, block_k, interpret):
+    for name, _c, _s in tuple(prologue) + tuple(epilogue):
+        if name not in FUSABLE_OPS:
+            raise ValueError(f"unfusable operator {name!r}")
     G, M, K = x.shape
     G2, K2, N = w.shape
     assert G == G2 and K == K2, (x.shape, w.shape)
     bm = min(block_m, pick_block(M, block_m, 8))
     bn = min(block_n, pick_block(N, block_n, 128))
     bk = min(block_k, pick_block(K, block_k, 128))
-    # pad to tile multiples: boundary-block contents are implementation-
-    # defined in Pallas, and a mul/add GCONV is exactly zero-pad-safe
+    # pick_block contract: a block may undershoot the axis; pad to tile
+    # multiples (making the padded extents divisible by construction) —
+    # boundary-block contents are implementation-defined in Pallas, and a
+    # mul/add GCONV is exactly zero-pad-safe (prologues re-mask below)
     Mp, Kp, Np = (cdiv(M, bm) * bm, cdiv(K, bk) * bk, cdiv(N, bn) * bn)
     if (Mp, Kp) != (M, K):
         x = jnp.pad(x, ((0, 0), (0, Mp - M), (0, Kp - K)))
@@ -98,16 +193,40 @@ def gconv_matmul(x: jax.Array, w: jax.Array, *, post: str = "id",
     n_k = Kp // bk
     grid = (G, Mp // bm, Np // bn, n_k)
 
+    in_specs = [
+        pl.BlockSpec((1, bm, bk), lambda g, m, n, k: (g, m, k)),
+        pl.BlockSpec((1, bk, bn), lambda g, m, n, k: (g, k, n)),
+    ]
+    args = [x, w]
+
+    def _bind(seq, stage, full_l, blk, pad_l):
+        """Append each op's operand array and rewrite its slot to the
+        kernel-local operand position (x/w excluded)."""
+        out_seq = []
+        for nm, c, s in seq:
+            if s is None:
+                out_seq.append((nm, c, None))
+                continue
+            arr = operands[s]
+            if arr.ndim != 3:
+                raise ValueError(f"operand {s}: rank {arr.ndim} != 3")
+            in_specs.append(
+                _operand_spec(arr.shape, s, G, M, full_l, bm, blk, stage))
+            args.append(_pad_operand(arr, G, Mp, pad_l))
+            out_seq.append((nm, c, len(args) - 3))
+        return tuple(out_seq)
+
+    pro_seq = _bind(prologue, "pro", K, bk, Kp)
+    epi_seq = _bind(epilogue, "epi", N, bn, Np)
+
     out = pl.pallas_call(
         functools.partial(_kernel, n_k=n_k, post=post, scale=scale,
-                          out_dtype=jnp.float32),
+                          prologue=pro_seq, epilogue=epi_seq,
+                          k_true=K, bk=bk),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, bm, bk), lambda g, m, n, k: (g, m, k)),
-            pl.BlockSpec((1, bk, bn), lambda g, m, n, k: (g, k, n)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, bm, bn), lambda g, m, n, k: (g, m, n)),
         out_shape=jax.ShapeDtypeStruct((G, Mp, Np), jnp.float32),
         interpret=interpret,
-    )(x, w)
+    )(*args)
     return out[:, :M, :N]

@@ -47,14 +47,22 @@ def _kernel(x_ref, w_ref, o_ref, *, kh: int, kw: int, stride: int,
     o_ref[0] = acc.reshape(oh, ow, -1)
 
 
-@functools.partial(
-    jax.jit, static_argnames=("stride", "pad", "block_o", "interpret"))
 def gconv_spatial(x: jax.Array, w: jax.Array, *, stride: int = 1,
                   pad: int = 0, block_o: int = 128,
                   interpret: Optional[bool] = None) -> jax.Array:
-    """NHWC conv: x (B, H, W, C), w (KH, KW, C, O) -> (B, OH, OW, O) f32."""
+    """NHWC conv: x (B, H, W, C), w (KH, KW, C, O) -> (B, OH, OW, O) f32.
+
+    ``interpret`` resolves outside the jit boundary so the
+    ``REPRO_FORCE_INTERPRET`` override keys the jit cache."""
     if interpret is None:
         interpret = use_interpret()
+    return _gconv_spatial(x, w, stride=stride, pad=pad, block_o=block_o,
+                          interpret=bool(interpret))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("stride", "pad", "block_o", "interpret"))
+def _gconv_spatial(x, w, *, stride, pad, block_o, interpret):
     B, H, W, C = x.shape
     KH, KW, C2, O = w.shape
     assert C == C2

@@ -508,6 +508,18 @@ def zero_inputs(chain: Chain):
             for name, info in chain.inputs.items()}
 
 
+def random_inputs(chain: Chain, seed: int = 1):
+    """:func:`zero_inputs` with a non-degenerate first input (the image):
+    the shared recipe of the execution tests and benchmarks."""
+    import jax
+    import numpy as np
+    inputs = zero_inputs(chain)
+    first = next(iter(chain.inputs))
+    inputs[first] = np.asarray(jax.random.normal(
+        jax.random.PRNGKey(seed), chain.inputs[first].shape))
+    return inputs
+
+
 # ---------------------------------------------------------------------------
 # training microbenchmark: conv -> BN -> ReLU forward + full backward
 # ---------------------------------------------------------------------------

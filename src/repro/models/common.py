@@ -11,6 +11,11 @@ decomposition in ``core.layers``; the implementations here are the *fused*
 execution paths the §4.3 optimizations produce (chain_norm == the fused
 FP1..FP4-style norm segment; chunked attention == the fused 5-GCONV
 attention segment), tested for equivalence against the chain interpreter.
+Since PR 2 they are no longer hand-wired only: the compiled chain engine
+(``repro.exec``) recognizes the norm / softmax / attention GCONV segments
+and dispatches them to :func:`norm` / :func:`attention_naive` (or the
+Pallas ``chain_norm`` / ``flash_attention`` kernels), so any chain using
+these patterns gets the fused paths automatically.
 """
 from __future__ import annotations
 
@@ -181,12 +186,20 @@ def _repeat_kv(k, n_rep: int):
 
 
 def attention_naive(q, k, v, *, causal: bool, q_offset=0,
-                    sliding_window: int = 0):
-    """q: (B,Tq,H,hd); k/v: (B,Tk,H,hd). Reference path (small shapes)."""
+                    sliding_window: int = 0,
+                    scale: Optional[float] = None):
+    """q: (B,Tq,H,hd); k/v: (B,Tk,H,hd). Reference path (small shapes).
+
+    Also the jnp dispatch target of the compiled chain engine
+    (``repro.exec``): a scores->softmax->values GCONV segment lowers to one
+    call of this function, with ``scale`` carried over from the segment's
+    fused ``post`` scale operator (default: 1/sqrt(hd)).
+    """
     B, Tq, H, hd = q.shape
     Tk = k.shape[1]
     s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
-                   k.astype(jnp.float32)) * hd ** -0.5
+                   k.astype(jnp.float32)) * (hd ** -0.5 if scale is None
+                                             else scale)
     q_ids = q_offset + jnp.arange(Tq)[:, None]
     k_ids = jnp.arange(Tk)[None, :]
     mask = jnp.ones((Tq, Tk), bool)

@@ -1,5 +1,9 @@
 """The seven paper CNNs: reduced-config execution smoke tests + full-size
-chain statistics sanity (Table 1 directional checks) + simulator runs."""
+chain statistics sanity (Table 1 directional checks) + simulator runs.
+
+Execution smoke tests run through the compiled engine (repro.exec) — the
+hot path. The oracle interpreter stays the allclose reference at analysis
+scale in tests/test_exec.py."""
 import jax
 import numpy as np
 import pytest
@@ -7,7 +11,7 @@ import pytest
 from repro.core import accelerators as acc
 from repro.core.costmodel import baseline_cost, gconv_chain_cost, speedup
 from repro.core.fusion import fuse_chain
-from repro.core.interpreter import ChainExecutor
+from repro.exec import compile_chain
 from repro.models import cnn
 
 
@@ -15,15 +19,9 @@ from repro.models import cnn
 @pytest.mark.slow
 def test_reduced_chain_executes(name):
     chain = cnn.build(name, reduced=True, batch=2)
-    ex = ChainExecutor(chain)
-    params = ex.init_params(jax.random.PRNGKey(0))
-    inputs = cnn.zero_inputs(chain)
-    # non-degenerate image input
-    key = jax.random.PRNGKey(1)
-    first = next(iter(chain.inputs))
-    inputs[first] = np.asarray(
-        jax.random.normal(key, chain.inputs[first].shape))
-    outs = ex(inputs, params)
+    eng = compile_chain(chain)
+    params = eng.init_params(jax.random.PRNGKey(0))
+    outs = eng(cnn.random_inputs(chain), params)
     for o, v in outs.items():
         assert np.all(np.isfinite(np.asarray(v))), f"{name}:{o} not finite"
 
@@ -59,11 +57,11 @@ def test_fusion_on_real_networks(name):
 @pytest.mark.slow
 def test_training_block_chain_executes():
     chain = cnn.training_block_chain(batch=4, ch=8, hw=8)
-    ex = ChainExecutor(chain)
-    params = ex.init_params(jax.random.PRNGKey(0))
+    eng = compile_chain(chain)
+    params = eng.init_params(jax.random.PRNGKey(0))
     xv = jax.random.normal(jax.random.PRNGKey(1), (4, 8, 8, 8))
     gv = jax.random.normal(jax.random.PRNGKey(2), (4, 8, 8, 8))
-    outs = ex({"x": xv, "gO": gv}, params, keep_all=True)
+    outs = eng({"x": xv, "gO": gv}, params, keep_all=True)
     # conv BP input-gradient must match autodiff through conv+BN+ReLU
     import jax.numpy as jnp
 

@@ -1,0 +1,316 @@
+"""Differential tests: the compiled chain engine (repro.exec) vs the oracle
+interpreter, across the CNN zoo, the LM chain segments, fusion-group
+execution, the fused-segment dispatch targets and randomized GCONVs.
+
+The oracle stays the semantic reference; here it runs under one jax.jit so
+the reference cost is a single compile of the oracle's own (deliberately
+expansion-heavy) program rather than per-op eager dispatch."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core.chain import Chain
+from repro.core.fusion import fuse_chain
+from repro.core.gconv import DimSpec, GConv, Op
+from repro.core.interpreter import ChainExecutor, eval_gconv
+from repro.core import layers as L
+from repro.exec import compile_chain, execute_gconv
+from repro.models import cnn, lm_chain
+from repro.models.common import ModelConfig
+
+TOL = dict(rtol=1e-4, atol=1e-4)
+
+
+def _inputs_and_params(chain, seed=0):
+    ex = ChainExecutor(chain)
+    params = ex.init_params(jax.random.PRNGKey(seed))
+    return ex, cnn.random_inputs(chain, seed + 1), params
+
+
+def _oracle(ex, inputs, params, **kw):
+    return jax.jit(lambda i, p: ex(i, p, **kw))(inputs, params)
+
+
+def _assert_allclose(got, ref):
+    assert set(got) == set(ref)
+    for o in ref:
+        np.testing.assert_allclose(np.asarray(got[o]), np.asarray(ref[o]),
+                                   err_msg=o, **TOL)
+
+
+# ---------------------------------------------------------------------------
+# the seven zoo networks + the training (FP+BP) chain
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", list(cnn.ZOO))
+@pytest.mark.slow
+def test_zoo_compiled_matches_oracle(name):
+    chain = cnn.build(name, reduced=True, batch=2)
+    ex, inputs, params = _inputs_and_params(chain)
+    ref = _oracle(ex, inputs, params)
+    got = compile_chain(chain)(inputs, params)
+    _assert_allclose(got, ref)
+
+
+@pytest.mark.slow
+def test_training_block_compiled_matches_oracle():
+    chain = cnn.training_block_chain(batch=4, ch=8, hw=8)
+    ex = ChainExecutor(chain)
+    params = ex.init_params(jax.random.PRNGKey(0))
+    ins = {"x": jax.random.normal(jax.random.PRNGKey(1), (4, 8, 8, 8)),
+           "gO": jax.random.normal(jax.random.PRNGKey(2), (4, 8, 8, 8))}
+    ref = _oracle(ex, ins, params, keep_all=True)
+    got = compile_chain(chain)(ins, params, keep_all=True)
+    for o in got:          # every surviving node, node-for-node
+        np.testing.assert_allclose(np.asarray(got[o]), np.asarray(ref[o]),
+                                   err_msg=o, **TOL)
+
+
+# ---------------------------------------------------------------------------
+# LM chain segments (dense + MoE)
+# ---------------------------------------------------------------------------
+def _tiny_cfg(**kw):
+    base = dict(name="tiny", family="dense", n_layers=1, d_model=16,
+                n_heads=2, n_kv_heads=2, d_ff=32, vocab=64)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def test_lm_block_compiled_matches_oracle():
+    ch = lm_chain.block_chain(_tiny_cfg(), 2, 8)
+    ex, inputs, params = _inputs_and_params(ch)
+    ref = _oracle(ex, inputs, params)
+    for fuse in (True, False):
+        got = compile_chain(ch, fuse=fuse)(inputs, params)
+        _assert_allclose(got, ref)
+
+
+def test_lm_moe_block_compiled_matches_oracle():
+    cfg = _tiny_cfg(name="tiny-moe", family="moe", n_experts=4, top_k=2)
+    ch = lm_chain.block_chain(cfg, 2, 8)
+    ex, inputs, params = _inputs_and_params(ch)
+    ref = _oracle(ex, inputs, params)
+    eng = compile_chain(ch)
+    _assert_allclose(eng(inputs, params), ref)
+    # the expert FFN must hit the grouped-matmul backend (Ng = n_experts)
+    assert eng.dispatch["e_gate"].startswith("matmul")
+    assert eng.dispatch["e_up"].startswith("matmul")
+    assert eng.dispatch["e_down"].startswith("matmul")
+
+
+# ---------------------------------------------------------------------------
+# fused segments: the hand-fused paths are now dispatch targets
+# ---------------------------------------------------------------------------
+def test_segments_dispatch_to_hand_fused_paths():
+    ch = lm_chain.block_chain(_tiny_cfg(), 2, 8)
+    eng = compile_chain(ch, fuse=False)          # unfused form of the chain
+    tags = set(eng.dispatch.values())
+    assert "segment:norm:jnp" in tags            # models.common.norm
+    assert "segment:attention:jnp" in tags       # models.common.attention_naive
+    ex, inputs, params = _inputs_and_params(ch)
+    _assert_allclose(eng(inputs, params), _oracle(ex, inputs, params))
+
+
+def test_segments_dispatch_to_pallas_kernels():
+    """backend='pallas' routes the same segments through chain_norm /
+    flash_attention / gconv_matmul (interpret mode on CPU)."""
+    ch = lm_chain.block_chain(_tiny_cfg(), 1, 4)
+    eng = compile_chain(ch, fuse=False, backend="pallas")
+    tags = set(eng.dispatch.values())
+    assert "segment:norm:pallas" in tags
+    assert "segment:attention:pallas" in tags
+    assert "matmul:pallas" in tags
+    ex, inputs, params = _inputs_and_params(ch)
+    _assert_allclose(eng(inputs, params), _oracle(ex, inputs, params))
+
+
+def test_pallas_matmul_runs_fused_sequences_in_register():
+    """fuse=True + backend='pallas': the rmsnorm that fusion folded into
+    the linears' pre sequence rides the gconv_matmul prologue (and the
+    softmax-into-values pre likewise), still allclose to the oracle."""
+    ch = lm_chain.block_chain(_tiny_cfg(), 1, 4)
+    eng = compile_chain(ch, fuse=True, backend="pallas")
+    assert "matmul:pallas" in set(eng.dispatch.values())
+    ex, inputs, params = _inputs_and_params(ch)
+    _assert_allclose(eng(inputs, params), _oracle(ex, inputs, params))
+
+
+def test_softmax_segment_detected_in_zoo_chain():
+    chain = cnn.build("AN", reduced=True, batch=2)
+    eng = compile_chain(chain)
+    assert "segment:softmax" in set(eng.dispatch.values())
+
+
+def test_segment_honors_out_dtype():
+    """Segment lowerings must keep the oracle's out_dtype contract."""
+    import dataclasses
+
+    c = Chain("sm")
+    xin = c.add_input("x", (2, 3, 5))
+    y = L.softmax(c, xin, axis=-1)
+    c.nodes[y] = dataclasses.replace(c.nodes[y], out_dtype="bfloat16")
+    c.mark_output(y)
+    eng = compile_chain(c)
+    assert "segment:softmax" in set(eng.dispatch.values())
+    xv = jax.random.normal(jax.random.PRNGKey(2), (2, 3, 5))
+    got = eng({"x": xv}, {})[y]
+    ref = ChainExecutor(c)({"x": xv}, {})[y]
+    assert got.dtype == ref.dtype == jnp.bfloat16
+
+    # interior out_dtype: the oracle quantizes the intermediate, so the
+    # f32 segment must refuse and fall back to per-node dispatch
+    c2 = Chain("sm2")
+    xin2 = c2.add_input("x", (2, 3, 5))
+    y2 = L.softmax(c2, xin2, axis=-1)
+    c2.nodes[f"{y2}.exp"] = dataclasses.replace(
+        c2.nodes[f"{y2}.exp"], out_dtype="bfloat16")
+    c2.mark_output(y2)
+    eng2 = compile_chain(c2)
+    assert "segment:softmax" not in set(eng2.dispatch.values())
+    got2 = eng2({"x": xv}, {})[y2]
+    ref2 = ChainExecutor(c2)({"x": xv}, {})[y2]
+    np.testing.assert_allclose(np.asarray(got2), np.asarray(ref2), **TOL)
+
+
+# ---------------------------------------------------------------------------
+# fusion-group execution == unfused execution, node for node
+# ---------------------------------------------------------------------------
+def _bn_block_chain(c=4, hw=6):
+    chain = Chain("fuseblk")
+    x = chain.add_input("x", (2, c, hw, hw))
+    y = L.conv2d(chain, x, out_c=c, k=1, bias=False)
+    y, _ = L.batch_norm_fp(chain, y)
+    y = L.relu(chain, y)
+    y = L.scale_layer(chain, y)
+    chain.mark_output(y)
+    return chain
+
+
+def test_fusion_group_execution_matches_unfused_node_for_node():
+    chain = _bn_block_chain()
+    fused, report = fuse_chain(chain)
+    assert report.groups                          # something actually fused
+    ex = ChainExecutor(chain)
+    params = ex.init_params(jax.random.PRNGKey(3))
+    ins = {"x": jax.random.normal(jax.random.PRNGKey(4), (2, 4, 6, 6))}
+    ref_all = _oracle(ex, ins, params, keep_all=True)
+    got_all = compile_chain(chain, fuse=True)(ins, params, keep_all=True)
+    # every surviving (host) node's value equals its unfused oracle value
+    for name in got_all:
+        np.testing.assert_allclose(np.asarray(got_all[name]),
+                                   np.asarray(ref_all[name]),
+                                   err_msg=name, **TOL)
+    # and the unfused compile agrees on every original node
+    got_unfused = compile_chain(chain, fuse=False)(ins, params, keep_all=True)
+    for name in got_unfused:
+        np.testing.assert_allclose(np.asarray(got_unfused[name]),
+                                   np.asarray(ref_all[name]),
+                                   err_msg=name, **TOL)
+
+
+def test_execution_partitions_cover_fused_chain():
+    chain = _bn_block_chain()
+    eng = compile_chain(chain)
+    hosts = [g.host for g in eng.partitions]
+    assert hosts == list(eng.chain.nodes)
+    members = [m for g in eng.partitions for m in g.members]
+    expected = {m for ms in eng.fusion_report.groups.values() for m in ms}
+    assert set(members) == expected
+    # fused members are reported in the dispatch table, not executed
+    for m in members:
+        assert eng.dispatch[m].startswith("fused:")
+
+
+# ---------------------------------------------------------------------------
+# randomized GCONVs across main/reduce/pre/post combinations
+# ---------------------------------------------------------------------------
+dim_strategy = st.builds(
+    dict,
+    ng=st.integers(1, 3), nop=st.integers(1, 3), nopc=st.integers(1, 4),
+    nks=st.integers(1, 3), stride=st.integers(1, 2))
+
+PRES = [(), (Op("square"),), (Op("abs"),)]
+POSTS = [(), (Op("relu"),), (Op("scale", const=0.5),)]
+
+
+@given(dim_strategy, dim_strategy,
+       st.sampled_from(["none", "mul", "add", "sub", "max"]),
+       st.sampled_from(["none", "add", "max"]),
+       st.integers(0, len(PRES) - 1), st.integers(0, len(POSTS) - 1),
+       st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=40, deadline=None)
+def test_compiled_gconv_matches_oracle_random(d1, d2, main, reduce,
+                                              pre_i, post_i, seed):
+    if reduce == "none":                  # no taps without a reduce
+        d1 = dict(d1, nks=1)
+        d2 = dict(d2, nks=1)
+    if main == "none":                    # no Nop replication without a kernel
+        d1 = dict(d1, nop=1)              # (the oracle defines no semantics
+        d2 = dict(d2, nop=1)              #  for kernel-less replication)
+    g = GConv(name="g", dims=(DimSpec("A", **d1), DimSpec("B", **d2)),
+              input="x", kernel=None if main == "none" else "k",
+              main=main, reduce=reduce,
+              pre=PRES[pre_i], post=POSTS[post_i])
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    x = jax.random.normal(k1, g.in_shape)
+    kk = (jax.random.normal(k2, g.k_shape) if main != "none" else None)
+    want = np.asarray(eval_gconv(g, x, kk))
+    got = np.asarray(execute_gconv(g, x, kk))
+    np.testing.assert_allclose(got, want, **TOL)
+
+
+def test_compiled_gconv_broadcast_kernel():
+    """Kernel with broadcast (size-1) axes — the chain's Table-2 usage."""
+    g = GConv(name="g",
+              dims=(DimSpec("A", ng=3), DimSpec("B", nop=2, nks=4)),
+              input="x", kernel="k", main="mul", reduce="add")
+    x = jax.random.normal(jax.random.PRNGKey(0), g.in_shape)
+    kk = jax.random.normal(jax.random.PRNGKey(1), (1, 8))  # bcast over A
+    want = np.asarray(eval_gconv(g, x, kk))
+    got = np.asarray(execute_gconv(g, x, kk))
+    np.testing.assert_allclose(got, want, **TOL)
+
+
+# ---------------------------------------------------------------------------
+# kernels.common satellites
+# ---------------------------------------------------------------------------
+def test_pick_block_invariants():
+    from repro.kernels.common import cdiv, pick_block, round_up
+
+    for n in list(range(1, 40)) + [100, 127, 128, 129, 130, 255, 300, 513]:
+        for target in (8, 64, 128, 256, 512):
+            for align in (8, 128):
+                b = pick_block(n, target, align)
+                assert b >= 1
+                # a grid of cdiv(n, b) blocks always covers the axis: the
+                # remainder is never silently dropped
+                assert cdiv(n, b) * b >= n, (n, target, align, b)
+                assert b <= round_up(n, align), (n, target, align, b)
+                if n > align:
+                    assert b % align == 0, (n, target, align, b)
+
+
+def test_gconv_matmul_remainder_blocks():
+    """n just above the 128 alignment (e.g. 130) must not drop the
+    remainder: the padded grid covers it and results match the oracle."""
+    from repro.kernels import ref
+    from repro.kernels.gconv_matmul import gconv_matmul
+
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, 130, 130))
+    w = jax.random.normal(jax.random.PRNGKey(1), (1, 130, 130))
+    got = gconv_matmul(x, w, interpret=True)       # default (big) targets
+    np.testing.assert_allclose(got, ref.gconv_matmul_ref(x, w),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_use_interpret_env_override(monkeypatch):
+    from repro.kernels import common
+
+    monkeypatch.setenv("REPRO_FORCE_INTERPRET", "0")
+    assert common.use_interpret() is False
+    monkeypatch.setenv("REPRO_FORCE_INTERPRET", "1")
+    assert common.use_interpret() is True
+    monkeypatch.delenv("REPRO_FORCE_INTERPRET")
+    assert common.use_interpret() is common._backend_wants_interpret()

@@ -44,6 +44,37 @@ def test_gconv_matmul_epilogue(post, scale):
     np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
 
 
+def test_gconv_matmul_fused_operand_sequences():
+    """§4.3-fused pre/post sequences with tensor operands ride in-register:
+    prologue (per-K gamma, per-M stat, const) + epilogue (per-N bias, relu,
+    const scale) against the jnp composition."""
+    x, w = rnd(30, (2, 17, 33), jnp.float32), rnd(31, (2, 33, 9), jnp.float32)
+    gamma = rnd(32, (1, 1, 33), jnp.float32)
+    ms = rnd(33, (2, 17, 1), jnp.float32)
+    bias = rnd(34, (1, 1, 9), jnp.float32)
+    got = gconv_matmul(
+        x, w,
+        prologue=(("mul", None, 0), ("add", None, 1),
+                  ("add_const", 0.3, None)),
+        epilogue=(("add", None, 2), ("relu", None, None),
+                  ("scale", 2.0, None)),
+        operands=(gamma, ms, bias),
+        block_m=8, block_n=8, block_k=8, interpret=True)
+    want = jnp.einsum("gmk,gkn->gmn", x * gamma + ms + 0.3, w)
+    want = jnp.maximum(want + bias, 0) * 2.0
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_gconv_matmul_grouped_epilogue_operand():
+    """Per-group epilogue operand (G, 1, N) — the MoE bias layout."""
+    x, w = rnd(35, (3, 8, 16), jnp.float32), rnd(36, (3, 16, 8), jnp.float32)
+    bias = rnd(37, (3, 1, 8), jnp.float32)
+    got = gconv_matmul(x, w, epilogue=(("add", None, 0),), operands=(bias,),
+                       block_m=8, block_n=8, block_k=8, interpret=True)
+    want = jnp.einsum("gmk,gkn->gmn", x, w) + bias
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
 # ---------------------------------------------------------------------------
 # spatial conv
 # ---------------------------------------------------------------------------

@@ -1,12 +1,13 @@
-"""LM block as a GCONV chain: executes through the interpreter and matches
-a plain-jnp transformer block (no RoPE/causal mask on either side)."""
+"""LM block as a GCONV chain: executes through the compiled engine and
+matches a plain-jnp transformer block (no RoPE/causal mask on either side).
+Compiled-vs-oracle equivalence for the same chain lives in test_exec.py."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro import configs
-from repro.core.interpreter import ChainExecutor
+from repro.exec import compile_chain
 from repro.models import lm_chain
 
 
@@ -16,10 +17,10 @@ def test_lm_block_chain_matches_jnp_reference():
     B, T, D = 2, 8, cfg.d_model
     H, hd = cfg.n_heads, cfg.hd
     ch = lm_chain.block_chain(cfg, B, T)
-    ex = ChainExecutor(ch)
-    params = ex.init_params(jax.random.PRNGKey(0))
+    eng = compile_chain(ch)
+    params = eng.init_params(jax.random.PRNGKey(0))
     xv = 0.3 * jax.random.normal(jax.random.PRNGKey(1), (B, T, D))
-    out = ex({"x": xv}, params)[ch.outputs[0]]
+    out = eng({"x": xv}, params)[ch.outputs[0]]
 
     def rms(z, g):
         zf = z / jnp.sqrt((z ** 2).mean(-1, keepdims=True) + 1e-6)
