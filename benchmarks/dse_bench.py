@@ -1,0 +1,65 @@
+"""Design-space-explorer benchmarks (the search-throughput trajectory).
+
+``dse``       — a modest genetic search over the full zoo suite; records
+                search throughput (analytic points/sec), the frontier, and
+                the equal-budget baseline-domination verdicts into
+                ``results/benchmarks.json``.
+``dse_micro`` — FAST-CI smoke on the reduced suite: asserts a Pareto
+                frontier is produced and that the best point's analytic cost
+                matches its cycle-level-sim promotion within the
+                ``repro.sim.validate`` agreement contract.
+                ``benchmarks.run`` exits nonzero when the check fails.
+"""
+from __future__ import annotations
+
+
+def dse_search():
+    """Search-throughput benchmark: genetic search, full-size zoo suite."""
+    from repro.dse.run import run_dse
+
+    payload = run_dse(suite="zoo", budget=60, seed=0, strategy="genetic",
+                      topk=4, map_budget=8, out_dir=None, quiet=True)
+    rows = [r.to_json() for r in payload["_frontier"][:8]]
+    for r in rows:
+        r.pop("per_chain", None)
+    # only sim-confirmed verdicts make the committed trajectory artifact
+    dominated = sorted(k for k, v in payload["domination"].items()
+                       if v["sim_confirmed"])
+    summary = dict(
+        points=payload["n_evals"],
+        points_per_sec=payload["points_per_sec"],
+        frontier_size=payload["frontier_size"],
+        best_wlc=round(payload["best"]["wlc"], 4),
+        best_sim_wlc=round(payload["best"]["sim"]["wlc"], 4),
+        dominates_at_equal_budget=dominated,
+        agreement_ok=payload["agreement_ok"],
+        max_mapping_gain=round(max(r["improvement"]
+                                   for r in payload["mapping_search"]), 4),
+    )
+    return rows, summary
+
+
+def dse_micro():
+    """FAST-tier smoke: tiny budget on the reduced suite; ``ok`` gates CI."""
+    from repro.dse.run import run_dse
+
+    payload = run_dse(suite="zoo", budget=16, seed=0, strategy="anneal",
+                      topk=2, map_budget=0, out_dir=None, reduced=True,
+                      quiet=True)
+    best = payload["best"]
+    rows = [dict(key=best["key"], wlc=round(best["wlc"], 4),
+                 sim_wlc=round(best["sim"]["wlc"], 4),
+                 cycles_ratio_max=best["sim"]["cycles_ratio_max"])]
+    ok = (payload["frontier_size"] > 0
+          and payload["agreement_ok"]
+          and best["sim"]["within_tolerance"])
+    summary = dict(
+        ok=bool(ok),
+        frontier_size=payload["frontier_size"],
+        best_wlc=round(best["wlc"], 4),
+        cycles_ratio_max=best["sim"]["cycles_ratio_max"],
+        cycles_ratio_tol=best["sim"]["cycles_ratio_tol"],
+        movement_drift=best["sim"]["movement_drift"],
+        energy_drift=best["sim"]["energy_drift"],
+    )
+    return rows, summary

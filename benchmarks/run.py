@@ -23,9 +23,10 @@ import time
 
 # "simval" (the cycle-level sim sweep) is not in ALL: the default analytic
 # run stays pure closed-form; select it with --engine sim or --only simval.
-# "exec_micro" (the FAST-tier smoke) is likewise only run via --only.
+# "exec_micro" / "dse_micro" (the FAST-tier smokes) likewise only run via
+# --only.
 ALL = ("table1", "fig12", "fig13", "fig14", "fig15", "fusion", "fig18",
-       "fig20", "kernels", "roofline", "exec")
+       "fig20", "kernels", "roofline", "exec", "dse")
 
 
 def _run(name, fn):
@@ -150,7 +151,7 @@ def main():
     else:
         want = list(ALL)
 
-    from benchmarks import exec_bench
+    from benchmarks import dse_bench, exec_bench
     from benchmarks import paper_tables as pt
 
     table = {
@@ -161,6 +162,7 @@ def main():
         "kernels": bench_kernels, "roofline": bench_roofline,
         "simval": pt.sim_validation,
         "exec": exec_bench.exec_speedup, "exec_micro": exec_bench.exec_micro,
+        "dse": dse_bench.dse_search, "dse_micro": dse_bench.dse_micro,
     }
     results = {}
     for name in want:
@@ -177,21 +179,27 @@ def main():
                 merged = json.load(f)
         except (OSError, ValueError):
             merged = {}
-    # exec_micro is the per-machine CI smoke gate: keep its wall times out
-    # of the committed perf-trajectory artifact (every FAST CI run would
-    # otherwise clobber the curated rows with laptop numbers)
+    # the *_micro benchmarks are per-machine CI smoke gates: keep their wall
+    # times out of the committed perf-trajectory artifact (every FAST CI run
+    # would otherwise clobber the curated rows with laptop numbers)
     merged.update({k: {"rows": v[0], "summary": v[1]}
-                   for k, v in results.items() if k != "exec_micro"})
+                   for k, v in results.items()
+                   if k not in ("exec_micro", "dse_micro")})
     with open(out, "w") as f:
         json.dump(merged, f, indent=1, default=str)
     print(f"\nwrote {os.path.abspath(out)}")
 
-    # CI gate (scripts/ci.sh FAST tier): the compiled engine must beat the
-    # oracle interpreter on the smoke network
+    # CI gates (scripts/ci.sh FAST tier): the compiled engine must beat the
+    # oracle interpreter on the smoke network, and the design-space smoke
+    # must produce a frontier whose best point passes the analytic-vs-sim
+    # agreement contract
     if "exec_micro" in results and not results["exec_micro"][1].get(
             "compiled_faster"):
         raise SystemExit("exec_micro: compiled engine slower than the "
                          "oracle interpreter")
+    if "dse_micro" in results and not results["dse_micro"][1].get("ok"):
+        raise SystemExit("dse_micro: no frontier or the best point's "
+                         "analytic cost disagrees with its sim promotion")
 
 
 if __name__ == "__main__":

@@ -5,7 +5,10 @@
 #   FAST=1 ./scripts/ci.sh          smoke tier: skip @slow tests, then run
 #                                   the compiled-engine smoke benchmark
 #                                   (fails if the compiled engine is slower
-#                                   than the oracle interpreter)
+#                                   than the oracle interpreter) and the
+#                                   design-space-explorer smoke (fails if no
+#                                   frontier is produced or the best point
+#                                   violates the analytic-vs-sim agreement)
 #   CI_INSTALL=1 ./scripts/ci.sh    pip install -e '.[dev]' first (networked
 #                                   CI; the dev extras declare pytest and
 #                                   hypothesis — without them the property
@@ -28,8 +31,9 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
   python -m pytest -x -q ${marker_args[@]+"${marker_args[@]}"} "$@"
 
 if [ "${FAST:-0}" = "1" ]; then
-  # compiled-path smoke benchmark: benchmarks.run exits nonzero when the
-  # compiled engine does not beat the interpreter on the smoke network
+  # smoke gates: benchmarks.run exits nonzero when the compiled engine does
+  # not beat the interpreter (exec_micro) or when the design-space explorer
+  # produces no frontier / fails the analytic-vs-sim agreement (dse_micro)
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
-    python -m benchmarks.run --only exec_micro
+    python -m benchmarks.run --only exec_micro,dse_micro
 fi

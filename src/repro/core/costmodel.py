@@ -180,8 +180,29 @@ def _offload_node_cost(node, chain: Chain) -> NodeCost:
 # ---------------------------------------------------------------------------
 # GCONV Chain path
 # ---------------------------------------------------------------------------
+def _check_override_resources(ov_spec: AcceleratorSpec,
+                              spec: AcceleratorSpec, node: str):
+    """An override's spec may differ from the chain's target spec only in
+    Algorithm-1 priorities (per §4.4) — never in physical resources."""
+    from .mapping import MappingError
+
+    same = (
+        tuple((s.name, s.size, s.reduce, s.overlap)
+              for s in ov_spec.spatial)
+        == tuple((s.name, s.size, s.reduce, s.overlap)
+                 for s in spec.spatial)
+        and ov_spec.ls == spec.ls and ov_spec.gb == spec.gb
+        and ov_spec.gb_bandwidth == spec.gb_bandwidth
+        and ov_spec.has_overlap_primitive == spec.has_overlap_primitive)
+    if not same:
+        raise MappingError(
+            f"override for node {node!r} was mapped on {ov_spec.name!r}, "
+            f"whose resources differ from target {spec.name!r}")
+
+
 def chain_mappings(chain: Chain, spec: AcceleratorSpec,
                    consistent: bool = True,
+                   overrides: Optional[Dict[str, Mapping]] = None,
                    ) -> Tuple[Dict[str, Mapping], Dict[str, bool]]:
     """Map every GCONV node (Algorithm 1) and resolve §4.3 producer/consumer
     load-format alignment across the chain.
@@ -192,13 +213,36 @@ def chain_mappings(chain: Chain, spec: AcceleratorSpec,
     the strided-access penalty. Shared between the analytic model below and
     the cycle-level simulator (``repro.sim.engine``), which must charge the
     exact same mappings to be comparable.
-    """
-    from .mapping import consistent_load_width
 
+    ``overrides`` replaces Algorithm 1's output for the named nodes with
+    externally-supplied mappings (e.g. ``repro.dse`` search results). Each
+    override is cloned (the loop exchange mutates entry lists in place) and
+    re-checked through :meth:`Mapping.validate` — the same resource-limit
+    path the mapper itself runs. An override may carry a priority-variant
+    ``spec`` (different Algorithm-1 priorities) but its *resources* (array
+    axes, scratchpads, buffers, bandwidth) must match ``spec`` — a mapping
+    built for a bigger accelerator cannot smuggle that accelerator's
+    resources into this chain's cost. Override names not present as GCONV
+    nodes raise (silently dropping a searched mapping would misreport).
+    """
+    from .mapping import MappingError, consistent_load_width
+
+    if overrides:
+        unknown = [n for n in overrides
+                   if not isinstance(chain.nodes.get(n), GConv)]
+        if unknown:
+            raise MappingError(
+                f"overrides name non-GCONV/unknown nodes {unknown} "
+                f"of chain {chain.name!r}")
     mappings: Dict[str, Mapping] = {}
     for name, node in chain.nodes.items():
         if isinstance(node, GConv):
-            mappings[name] = map_gconv(node, spec)
+            ov = overrides.get(name) if overrides else None
+            if ov is not None:
+                _check_override_resources(ov.spec, spec, name)
+                mappings[name] = ov.clone().validate()
+            else:
+                mappings[name] = map_gconv(node, spec)
     # §4.3 consistent mapping between chain producer/consumer pairs: where
     # the consumer's load format can be made consistent with the producer's
     # store format (loop exchange), intermediate loads run at full bus width;
@@ -224,6 +268,7 @@ def gconv_chain_cost(chain: Chain, spec: AcceleratorSpec,
                      energy_overhead: float = 0.19,
                      precomputed: Optional[Tuple[Dict[str, Mapping],
                                                  Dict[str, bool]]] = None,
+                     overrides: Optional[Dict[str, Mapping]] = None,
                      ) -> ChainCost:
     """Every node auto-mapped on the full array (paper's GC-<accel>).
 
@@ -231,11 +276,19 @@ def gconv_chain_cost(chain: Chain, spec: AcceleratorSpec,
     generalized main/reduce ALUs): +19 % power per paper Fig. 17.
     ``precomputed`` takes a :func:`chain_mappings` result so callers scoring
     the same chain with several engines share one mapping pass.
+    ``overrides`` forwards per-node mapping replacements to
+    :func:`chain_mappings`; mutually exclusive with ``precomputed`` (bake
+    overrides into the precomputed result instead — silently dropping them
+    would misreport the searched cost).
     """
     if precomputed is not None:
+        if overrides:
+            raise ValueError("pass overrides to chain_mappings() when "
+                             "supplying precomputed, not both here")
         mappings, aligned = precomputed
     else:
-        mappings, aligned = chain_mappings(chain, spec, consistent=consistent)
+        mappings, aligned = chain_mappings(chain, spec, consistent=consistent,
+                                           overrides=overrides)
     nodes = []
     for name, node in chain.nodes.items():
         trad = chain.meta.get(name, {}).get("traditional", True)

@@ -27,6 +27,11 @@ PARAMS = ("ks", "opc", "op", "g")
 # "reversed axis order" (innermost/fastest-varying first) for N-D GCONVs.
 
 
+class MappingError(ValueError):
+    """A :class:`Mapping` violates the accelerator's resource limits or the
+    GCONV's loop structure (raised by :meth:`Mapping.validate`)."""
+
+
 @dataclass(frozen=True)
 class Entry:
     param: str          # 'ks' | 'opc' | 'op' | 'g'
@@ -115,6 +120,94 @@ class Mapping:
     temporal: List[Entry] = field(default_factory=list)   # innermost first
 
     # ------------------------------------------------------------------
+    @classmethod
+    def from_entries(cls, gconv: GConv, spec: AcceleratorSpec,
+                     spatial: Sequence[Entry] = (),
+                     temporal: Sequence[Entry] = (),
+                     validate: bool = True) -> "Mapping":
+        """Build a mapping from externally-supplied unrolling entries (e.g. a
+        design-space-explorer candidate) through the same resource-limit
+        checks :func:`map_gconv` runs on its own output."""
+        m = cls(gconv=gconv, spec=spec,
+                spatial=list(spatial), temporal=list(temporal))
+        if validate:
+            m.validate()
+        return m
+
+    def clone(self) -> "Mapping":
+        """Entry-list copy (loop exchange mutates mappings in place)."""
+        return Mapping(gconv=self.gconv, spec=self.spec,
+                       spatial=list(self.spatial),
+                       temporal=list(self.temporal))
+
+    def validate(self) -> "Mapping":
+        """Check resource limits and loop coverage; raise :class:`MappingError`.
+
+        One shared code path for every mapping source — Algorithm 1 calls it
+        on its own output and ``repro.dse`` candidates go through
+        :meth:`from_entries` — so externally-supplied mappings cannot bypass
+        the checks the mapper enforces:
+
+          * every entry names a known GCONV dimension and loop parameter;
+          * spatial entries target existing array axes and their combined
+            unrolling never exceeds an axis' PE count;
+          * temporal entries live at ``where == "T"``; sliding (overlap
+            primitive) entries are temporal ``opc`` streams;
+          * every loop is fully covered: the product of all factors for a
+            ``(param, dim)`` reaches the GCONV's loop count (ceil-division
+            nests compose, so factor order is immaterial).
+
+        Scratchpad capacity needs no check here: entries whose prefix tile
+        overflows a scratchpad simply sit outside the reuse pointer and
+        stream from the GB (:meth:`pointer`), which is costed, not illegal.
+        """
+        axis_size = {s.name: s.size for s in self.spec.spatial}
+        known = {d.name for d in self.gconv.dims}
+        used: Dict[str, int] = {}
+        for e in self.spatial:
+            if e.param not in PARAMS:
+                raise MappingError(f"{e.pretty()}: unknown param {e.param!r}")
+            if e.dim not in known:
+                raise MappingError(f"{e.pretty()}: unknown dim {e.dim!r}")
+            if e.factor < 1:
+                raise MappingError(f"{e.pretty()}: factor must be >= 1")
+            if e.where not in axis_size:
+                raise MappingError(
+                    f"{e.pretty()}: no spatial axis {e.where!r} on "
+                    f"{self.spec.name}")
+            if e.sliding:
+                raise MappingError(
+                    f"{e.pretty()}: sliding entries are temporal")
+            used[e.where] = used.get(e.where, 1) * e.factor
+        for axis, u in used.items():
+            if u > axis_size[axis]:
+                raise MappingError(
+                    f"spatial axis {axis!r}: unrolled {u} > {axis_size[axis]} "
+                    f"PEs on {self.spec.name}")
+        for e in self.temporal:
+            if e.param not in PARAMS:
+                raise MappingError(f"{e.pretty()}: unknown param {e.param!r}")
+            if e.dim not in known:
+                raise MappingError(f"{e.pretty()}: unknown dim {e.dim!r}")
+            if e.factor < 1:
+                raise MappingError(f"{e.pretty()}: factor must be >= 1")
+            if e.where != "T":
+                raise MappingError(
+                    f"{e.pretty()}: temporal entries must be @T")
+            if e.sliding and e.param != "opc":
+                raise MappingError(
+                    f"{e.pretty()}: only opc entries slide (overlap reuse)")
+        f = factors_by(list(self.spatial) + list(self.temporal))
+        for d in self.gconv.dims:
+            for p, n in (("g", d.ng), ("op", d.nop),
+                         ("opc", d.nopc), ("ks", d.nks)):
+                have = f.get((p, d.name), 1)
+                if have < n:
+                    raise MappingError(
+                        f"loop ({p},{d.name}) of {self.gconv.name}: unrolling "
+                        f"covers {have} of {n} iterations")
+        return self
+
     @property
     def spatial_factors(self) -> Dict[Tuple[str, str], int]:
         return factors_by(self.spatial)
@@ -312,7 +405,7 @@ def map_gconv(g: GConv, spec: AcceleratorSpec) -> Mapping:
             if loops[d][p] > 1:
                 m.temporal.append(Entry(p, d, loops[d][p], "T"))
                 loops[d][p] = 1
-    return m
+    return m.validate()
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,278 @@
+"""Multi-fidelity whole-life-cost evaluation of design points.
+
+Objective (the paper's §7 whole-life framing, folded into one scalar): a
+deployment serving fixed traffic needs ``#chips ∝ latency``, each chip's
+CAPEX is ``∝ area``, and the fleet's OPEX is ``∝ energy per inference`` —
+so, normalizing every term to the Eyeriss (ER) reference point on the same
+workload suite,
+
+    WLC = W_CAPEX * (latency/latency_ER) * (area/area_ER)
+        + W_OPEX  * (energy/energy_ER)
+
+with latency and energy the *geomeans across the whole suite* (that is the
+whole-life claim: one substrate amortized over every current and future
+workload, §2) and area a silicon proxy from PE count, scratchpad/global
+buffer words and GB port width. ``WLC(ER) == 1`` by construction.
+
+Fidelities:
+  * ``analytic`` — ``core.costmodel.gconv_chain_cost`` (Eqs. 6-10), a few ms
+    per (point, chain): every searched point is scored here.
+  * ``sim``      — ``repro.sim`` cycle-level validation, promoted for the
+    top-k frontier points only (:meth:`Evaluator.promote`). Both engines
+    charge the *same* ``chain_mappings`` result, so movement and energy must
+    agree word-for-word and latency within
+    :data:`repro.sim.validate.CYCLES_RATIO_TOL`.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core import accelerators as acc
+from repro.core.accelerators import AcceleratorSpec
+from repro.core.costmodel import chain_mappings, gconv_chain_cost
+from repro.core.fusion import fuse_chain
+
+from .space import Point, SpecSpace
+
+# ---------------------------------------------------------------------------
+# area proxy (relative units; one PE datapath = 4 scratchpad words)
+# ---------------------------------------------------------------------------
+A_PE = 4.0            # MAC + control per PE
+A_LS_WORD = 0.25      # per-PE scratchpad word (registers/SRAM)
+A_GB_WORD = 0.03125   # global-buffer word (denser SRAM)
+A_BW_PORT = 64.0      # per word/cycle of GB port width (wires + banking)
+
+W_CAPEX = 0.5
+W_OPEX = 0.5
+
+LM_CHAINS = ("lm_dense", "lm_moe")
+SUITES = ("zoo", "lm", "all")
+
+
+def suite_names(suite: str) -> Tuple[str, ...]:
+    """Member workloads of a named suite. The zoo membership is derived
+    from ``repro.models.cnn.ZOO`` so a network added there is picked up
+    here (and by the WLC geomeans / domination verdicts) automatically."""
+    from repro.models import cnn
+
+    zoo = tuple(cnn.ZOO)
+    return {"zoo": zoo, "lm": LM_CHAINS, "all": zoo + LM_CHAINS}[suite]
+
+
+def area_proxy(spec: AcceleratorSpec) -> float:
+    """Silicon-area/TCO proxy of a spec (works for Table-4 baselines and
+    searched points alike — everything is derived from the spec itself)."""
+    ls_words = sum(spec.ls.values()) * spec.n_pes
+    gb_words = sum(spec.gb.values())
+    ports = sum(spec.gb_bandwidth.values())
+    return (A_PE * spec.n_pes + A_LS_WORD * ls_words
+            + A_GB_WORD * gb_words + A_BW_PORT * ports)
+
+
+def load_suite(suite: str | Sequence[str],
+               reduced: bool = False) -> List[Tuple[str, object]]:
+    """Build + fuse the workload chains once (fusion is accelerator- and
+    design-point-independent). ``suite`` is a :data:`SUITES` name or an
+    explicit list of member names; ``reduced`` selects the small test-scale
+    chain variants."""
+    from repro.models import cnn
+
+    names = suite_names(suite) if isinstance(suite, str) else tuple(suite)
+    out = []
+    for name in names:
+        if name in LM_CHAINS:
+            chain = _lm_chain(name, reduced)
+        else:
+            chain = cnn.build(name, reduced=reduced)
+        out.append((name, fuse_chain(chain)[0]))
+    return out
+
+
+def _lm_chain(name: str, reduced: bool):
+    from repro import configs
+    from repro.models.lm_chain import block_chain
+
+    arch = "tinyllama-1.1b" if name == "lm_dense" else "olmoe-1b-7b"
+    seq = 16 if reduced else 128
+    return block_chain(configs.get(arch), batch=1, seq=seq)
+
+
+def geomean(xs: Sequence[float]) -> float:
+    return math.exp(sum(math.log(max(x, 1e-12)) for x in xs) / len(xs))
+
+
+@dataclass
+class EvalRecord:
+    """One scored design point (or baseline spec)."""
+
+    key: str                       # canonical point encoding / baseline name
+    spec_name: str
+    point: Optional[Point]         # None for baseline specs
+    lat: float                     # geomean latency (cycles) over the suite
+    energy: float                  # geomean energy (relative units)
+    area: float
+    n_pes: int
+    gb_words: int
+    wlc: float
+    per_chain: Dict[str, Dict[str, float]] = field(default_factory=dict)
+    fidelity: str = "analytic"
+    sim: Optional[dict] = None     # filled in by Evaluator.promote
+
+    def objectives(self) -> Tuple[float, float, float]:
+        """(latency, energy, area) — the Pareto axes, all minimized."""
+        return (self.lat, self.energy, self.area)
+
+    def to_json(self) -> dict:
+        d = dict(key=self.key, spec=self.spec_name,
+                 lat=self.lat, energy=self.energy, area=self.area,
+                 n_pes=self.n_pes, gb_words=self.gb_words, wlc=self.wlc,
+                 fidelity=self.fidelity, per_chain=self.per_chain)
+        if self.sim is not None:
+            d["sim"] = self.sim
+        return d
+
+
+def pareto_front(records: Sequence[EvalRecord]) -> List[EvalRecord]:
+    """Non-dominated subset under (latency, energy, area), all minimized.
+    ``a`` dominates ``b`` iff a <= b on every axis and a < b on at least
+    one. Returned sorted by scalar WLC (ties broken by key) so the order is
+    deterministic and the head is the promotion queue."""
+    out: List[EvalRecord] = []
+    for r in records:
+        ro = r.objectives()
+        dominated = False
+        for s in records:
+            if s is r:
+                continue
+            so = s.objectives()
+            if all(x <= y for x, y in zip(so, ro)) and so != ro:
+                dominated = True
+                break
+        if not dominated:
+            out.append(r)
+    # collapse exact-objective duplicates to the lexicographically first key
+    seen: Dict[Tuple[float, float, float], EvalRecord] = {}
+    for r in sorted(out, key=lambda r: r.key):
+        seen.setdefault(r.objectives(), r)
+    return sorted(seen.values(), key=lambda r: (r.wlc, r.key))
+
+
+class Evaluator:
+    """Caches analytic scores per point and promotes frontier points to the
+    cycle-level simulator. The ER Table-4 spec on the same suite is the
+    normalization reference, so ``score_spec(acc.get('ER')).wlc == 1``."""
+
+    def __init__(self, space: SpecSpace, suite: List[Tuple[str, object]],
+                 w_capex: float = W_CAPEX, w_opex: float = W_OPEX):
+        self.space = space
+        self.suite = suite
+        self.w_capex = w_capex
+        self.w_opex = w_opex
+        self.cache: Dict[Point, EvalRecord] = {}
+        self.n_evals = 0
+        self._ref_raw = self._raw(acc.get("ER"))
+        self._ref_lat, self._ref_energy, self._ref_area = self._ref_raw[:3]
+
+    # ------------------------------------------------------------------
+    def _raw(self, spec: AcceleratorSpec):
+        # the ER reference pass from __init__ is reused for later ER
+        # scorings (run_dse scores the baselines through this path too)
+        if (spec.name == "ER" and getattr(self, "_ref_raw", None) is not None
+                and spec == acc.get("ER")):
+            lat, energy, area, per_chain = self._ref_raw
+            return lat, energy, area, {k: dict(v)
+                                       for k, v in per_chain.items()}
+        per_chain: Dict[str, Dict[str, float]] = {}
+        lats, energies = [], []
+        for name, chain in self.suite:
+            cost = gconv_chain_cost(chain, spec)
+            per_chain[name] = dict(latency=cost.latency, energy=cost.energy)
+            lats.append(cost.latency)
+            energies.append(cost.energy)
+        return geomean(lats), geomean(energies), area_proxy(spec), per_chain
+
+    def wlc(self, lat: float, energy: float, area: float) -> float:
+        return (self.w_capex * (lat / self._ref_lat) * (area / self._ref_area)
+                + self.w_opex * (energy / self._ref_energy))
+
+    def score_spec(self, spec: AcceleratorSpec,
+                   key: Optional[str] = None,
+                   point: Optional[Point] = None) -> EvalRecord:
+        """Score an arbitrary spec (baselines; not budget-counted)."""
+        lat, energy, area, per_chain = self._raw(spec)
+        return EvalRecord(
+            key=key or spec.name, spec_name=spec.name, point=point,
+            lat=lat, energy=energy, area=area,
+            n_pes=spec.n_pes, gb_words=sum(spec.gb.values()),
+            wlc=self.wlc(lat, energy, area), per_chain=per_chain)
+
+    def score_point(self, point: Point) -> EvalRecord:
+        if point in self.cache:
+            return self.cache[point]
+        rec = self.score_spec(self.space.to_spec(point),
+                              key=self.space.encode(point), point=point)
+        self.cache[point] = rec
+        self.n_evals += 1
+        return rec
+
+    def objective(self, point: Point) -> float:
+        return self.score_point(point).wlc
+
+    @property
+    def records(self) -> List[EvalRecord]:
+        return list(self.cache.values())
+
+    # ------------------------------------------------------------------
+    def promote(self, records: Sequence[EvalRecord]) -> List[EvalRecord]:
+        """Cycle-level validation of chosen points (the expensive fidelity).
+
+        Re-maps each (point, chain) pair once and feeds the identical
+        ``chain_mappings`` result to both engines, then records the sim's
+        latency geomean, a sim-corrected WLC, and the agreement checks from
+        ``repro.sim.validate`` (compute bound, latency tolerance, exact
+        movement/energy parity). Mutates the records in place
+        (``fidelity='sim'``) and returns them."""
+        from repro.sim.engine import simulate_chain
+        from repro.sim.validate import CYCLES_RATIO_TOL, DRIFT_TOL, agreement
+
+        for rec in records:
+            spec = (self.space.to_spec(rec.point) if rec.point is not None
+                    else acc.get(rec.spec_name))
+            sim_lats: List[float] = []
+            ratios: Dict[str, float] = {}
+            max_mov_drift = max_e_drift = 0.0
+            above = within = True
+            for name, chain in self.suite:
+                pre = chain_mappings(chain, spec)
+                analytic = gconv_chain_cost(chain, spec, precomputed=pre)
+                sim = simulate_chain(chain, spec, fuse=False,
+                                     precomputed=pre)
+                agree = agreement(sim.total_cycles, analytic)
+                ratios[name] = agree["cycles_ratio"]
+                above &= agree["above_compute_bound"]
+                within &= agree["within_tolerance"]
+                max_mov_drift = max(max_mov_drift, abs(
+                    sim.movement_words
+                    / max(analytic.movement_words, 1e-12) - 1))
+                max_e_drift = max(max_e_drift, abs(
+                    sim.energy / max(analytic.energy, 1e-12) - 1))
+                sim_lats.append(sim.total_cycles)
+                rec.per_chain[name]["sim_cycles"] = sim.total_cycles
+            sim_lat = geomean(sim_lats)
+            rec.fidelity = "sim"
+            rec.sim = dict(
+                lat=sim_lat,
+                wlc=self.wlc(sim_lat, rec.energy, rec.area),
+                cycles_ratio_max=max(ratios.values()),
+                cycles_ratio=ratios,
+                above_compute_bound=bool(above),
+                within_tolerance=bool(
+                    within and max_mov_drift <= DRIFT_TOL
+                    and max_e_drift <= DRIFT_TOL),
+                movement_drift=max_mov_drift,
+                energy_drift=max_e_drift,
+                cycles_ratio_tol=CYCLES_RATIO_TOL,
+            )
+        return list(records)

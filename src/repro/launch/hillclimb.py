@@ -1,19 +1,15 @@
-import os
-os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
-                           + " --xla_force_host_platform_device_count=512")
-
 """§Perf hillclimbing driver: re-lowers the three chosen cells with the
 perf-lever overrides and records each (hypothesis -> change -> before ->
 after) step next to the baselines in results/dryrun/.
 
     PYTHONPATH=src python -m repro.launch.hillclimb
+
+Importing this module is side-effect free: the ``XLA_FLAGS`` host-device
+mutation (which must precede the first jax import) happens in :func:`main`,
+right before ``repro.launch.dryrun`` — and with it jax — is first imported.
 """
-import json              # noqa: E402
-
-from repro.launch.dryrun import RESULTS_DIR, run_cell   # noqa: E402
-
-OUT = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "..",
-                                   "..", "results", "dryrun"))
+import json
+import os
 
 # (arch, shape, tag, overrides, hypothesis)
 EXPERIMENTS = [
@@ -61,14 +57,20 @@ EXPERIMENTS = [
 
 
 def main():
+    # must precede the first jax import (device count locks at init)
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=512")
+    from repro.launch.dryrun import RESULTS_DIR, run_cell
+
+    out = RESULTS_DIR
     results = []
     for arch, shape, tag, ov, hyp in EXPERIMENTS:
         print(f"\n### {arch} x {shape} {tag}\n{hyp}\n", flush=True)
-        rec = run_cell(arch, shape, "single", OUT, overrides=ov, tag=tag)
+        rec = run_cell(arch, shape, "single", out, overrides=ov, tag=tag)
         rec["hypothesis"] = hyp
         rec["overrides"] = {k: list(v) if isinstance(v, tuple) else v
                             for k, v in ov.items()}
-        path = os.path.join(OUT, f"{arch}{tag}__{shape}__single.json")
+        path = os.path.join(out, f"{arch}{tag}__{shape}__single.json")
         with open(path, "w") as f:
             json.dump(rec, f, indent=1, default=float)
         results.append(rec)

@@ -144,21 +144,29 @@ def simulate_chain(chain: Chain, spec: AcceleratorSpec,
                    contention: str = "ports",
                    precomputed: Optional[Tuple[Dict[str, Mapping],
                                                Dict[str, bool]]] = None,
+                   overrides: Optional[Dict[str, Mapping]] = None,
                    ) -> ChainSimStats:
     """Simulate a whole GCONV chain (the paper's GC-<accel> system mode:
     §4.3 fusion + consistent mapping, every node on the full array).
 
     ``precomputed`` takes a :func:`repro.core.costmodel.chain_mappings`
     result (only meaningful with ``fuse=False`` on an already-fused chain)
-    so analytic and sim engines charge structurally identical mappings."""
+    so analytic and sim engines charge structurally identical mappings.
+    ``overrides`` forwards per-node mapping replacements (e.g. ``repro.dse``
+    search results) to :func:`chain_mappings`; mutually exclusive with
+    ``precomputed`` (bake overrides into that result instead)."""
     groups: Dict[str, list] = {}
     if fuse:
         chain, report = fuse_chain(chain)
         groups = report.groups
     if precomputed is not None and not fuse:
+        if overrides:
+            raise ValueError("pass overrides to chain_mappings() when "
+                             "supplying precomputed, not both here")
         mappings, aligned = precomputed
     else:
-        mappings, aligned = chain_mappings(chain, spec, consistent=consistent)
+        mappings, aligned = chain_mappings(chain, spec, consistent=consistent,
+                                           overrides=overrides)
 
     nodes = []
     prev_name: Optional[str] = None

@@ -30,6 +30,28 @@ from .engine import simulate_chain
 
 DEFAULT_ACCELS = ("ER", "TPU", "EP")
 
+# Analytic-vs-sim agreement contract, shared by the validation tests, the
+# multi-fidelity promoter in ``repro.dse.evaluate`` and the ``dse_micro`` CI
+# gate: on identical mappings the sim's total latency may exceed the analytic
+# ``max(compute, load)`` by first-tile fills, last-window drains and per-tile
+# quantization (observed zoo x {ER,TPU,EP} max: 1.41x) but must never fall
+# below the Eq.-6 compute bound, while movement and energy agree
+# word-for-word (both are derived from the same TileStructure).
+CYCLES_RATIO_TOL = 1.75
+DRIFT_TOL = 1e-9
+
+
+def agreement(sim_total_cycles: float, analytic) -> dict:
+    """Per-point agreement record between a :class:`ChainSimStats` total and
+    its analytic :class:`~repro.core.costmodel.ChainCost` counterpart."""
+    ratio = sim_total_cycles / max(analytic.latency, 1e-12)
+    return dict(
+        cycles_ratio=round(ratio, 4),
+        above_compute_bound=bool(
+            sim_total_cycles >= analytic.compute_cycles * (1 - 1e-9)),
+        within_tolerance=bool(ratio <= CYCLES_RATIO_TOL),
+    )
+
 
 def validate_pair(chain, spec, fuse: bool = True, consistent: bool = True,
                   contention: str = "ports",
@@ -54,15 +76,14 @@ def validate_pair(chain, spec, fuse: bool = True, consistent: bool = True,
         sim.fused_groups = report.groups
     worst = max((n for n in sim.nodes if n.kind == "gconv"),
                 key=lambda n: n.stall_cycles, default=None)
+    agree = agreement(sim.total_cycles, analytic)
     row = dict(
         net=chain.name, accel=spec.name,
         sim_cycles=round(sim.total_cycles, 1),
         analytic_latency=round(analytic.latency, 1),
         analytic_compute=round(analytic.compute_cycles, 1),
-        cycles_ratio=round(sim.total_cycles / max(analytic.latency, 1e-12),
-                           4),
-        above_compute_bound=bool(
-            sim.total_cycles >= analytic.compute_cycles * (1 - 1e-9)),
+        cycles_ratio=agree["cycles_ratio"],
+        above_compute_bound=agree["above_compute_bound"],
         stall_frac=round(sim.stall_cycles / max(sim.total_cycles, 1e-12), 4),
         utilization=round(sim.utilization, 4),
         energy_drift=round(abs(sim.energy / max(analytic.energy, 1e-12) - 1),
