@@ -23,10 +23,10 @@ import time
 
 # "simval" (the cycle-level sim sweep) is not in ALL: the default analytic
 # run stays pure closed-form; select it with --engine sim or --only simval.
-# "exec_micro" / "dse_micro" (the FAST-tier smokes) likewise only run via
-# --only.
+# "exec_micro" / "dse_micro" / "serve_micro" (the FAST-tier smokes)
+# likewise only run via --only.
 ALL = ("table1", "fig12", "fig13", "fig14", "fig15", "fusion", "fig18",
-       "fig20", "kernels", "roofline", "exec", "dse")
+       "fig20", "kernels", "roofline", "exec", "dse", "serve")
 
 
 def _run(name, fn):
@@ -151,7 +151,7 @@ def main():
     else:
         want = list(ALL)
 
-    from benchmarks import dse_bench, exec_bench
+    from benchmarks import dse_bench, exec_bench, serve_bench
     from benchmarks import paper_tables as pt
 
     table = {
@@ -163,6 +163,8 @@ def main():
         "simval": pt.sim_validation,
         "exec": exec_bench.exec_speedup, "exec_micro": exec_bench.exec_micro,
         "dse": dse_bench.dse_search, "dse_micro": dse_bench.dse_micro,
+        "serve": serve_bench.serve_bench,
+        "serve_micro": serve_bench.serve_micro,
     }
     results = {}
     for name in want:
@@ -184,7 +186,7 @@ def main():
     # would otherwise clobber the curated rows with laptop numbers)
     merged.update({k: {"rows": v[0], "summary": v[1]}
                    for k, v in results.items()
-                   if k not in ("exec_micro", "dse_micro")})
+                   if k not in ("exec_micro", "dse_micro", "serve_micro")})
     with open(out, "w") as f:
         json.dump(merged, f, indent=1, default=str)
     print(f"\nwrote {os.path.abspath(out)}")
@@ -200,6 +202,11 @@ def main():
     if "dse_micro" in results and not results["dse_micro"][1].get("ok"):
         raise SystemExit("dse_micro: no frontier or the best point's "
                          "analytic cost disagrees with its sim promotion")
+    if "serve_micro" in results and not results["serve_micro"][1].get("ok"):
+        raise SystemExit(
+            "serve_micro: continuous-batching outputs diverge from "
+            "sequential single-slot decode (cache corruption) or batched "
+            "serving lost its throughput edge over per-request execution")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,125 @@
+"""Serving benchmarks: continuous batching through repro.exec.serving.
+
+``serve``       — staggered multi-slot workload on the smoke LM: total and
+                  generated tok/s, queue-wait / TTFT / end-to-end latency
+                  percentiles, and the speedup of batched continuous
+                  serving over per-request (single-slot, sequential)
+                  execution. Seeds the ``results/benchmarks.json``
+                  trajectory.
+``serve_micro`` — FAST-tier CI gate: drains a small staggered workload,
+                  exits nonzero (via benchmarks.run) when outputs diverge
+                  from sequential single-slot decode (cache corruption) or
+                  when batched serving loses its throughput edge over
+                  per-request execution.
+"""
+from __future__ import annotations
+
+ARCH = "tinyllama-1.1b"
+
+# serve_micro throughput gate: batched continuous serving must keep at
+# least this edge over per-request sequential execution. The acceptance
+# target is >= 2x at smoke scale (the 'serve' cell records the real
+# ratio); the CI gate sits lower so machine noise cannot flake FAST CI
+# while still catching a real regression to per-request throughput.
+MICRO_MIN_SPEEDUP = 1.3
+
+
+def _workload(n, vocab, max_new, seed=0):
+    import numpy as np
+
+    from repro.launch.serve import Request
+
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    prompt=rng.integers(0, vocab,
+                                        rng.integers(2, 6)).tolist(),
+                    max_new=max_new)
+            for i in range(n)]
+
+
+def _clone(reqs):
+    from repro.launch.serve import Request
+
+    return [Request(rid=r.rid, prompt=list(r.prompt), max_new=r.max_new)
+            for r in reqs]
+
+
+def _run_serve(n_requests, slots, max_new, stagger, max_len=96):
+    """Batched continuous serving vs per-request execution on the same
+    workload, both WARM (first run pays the compiles, the second is
+    timed), and the byte-identity corruption check between the two."""
+    from repro.launch.serve import Server
+
+    srv = Server(ARCH, smoke=True, slots=slots, max_len=max_len)
+    reqs = _workload(n_requests, srv.cfg.vocab, max_new)
+    srv.run_workload(_clone(reqs), stagger_ticks=stagger)    # warm-up
+    srv.reset_stats()
+    report = srv.run_workload(_clone(reqs), stagger_ticks=stagger)
+    got = {r.rid: r.out for r in srv.finished}
+
+    # per-request execution: ONE single-slot server (warm programs), every
+    # request decoded alone in submission order
+    seq = Server(ARCH, smoke=True, slots=1, max_len=max_len)
+    seq.run_workload(_clone(reqs), stagger_ticks=0)          # warm-up
+    seq.reset_stats()
+    seq_report = seq.run_workload(_clone(reqs), stagger_ticks=0)
+    ref = {r.rid: r.out for r in seq.finished}
+    identical = all(got[r.rid] == ref[r.rid] for r in reqs)
+    seq_tok_per_s = seq_report["tok_per_s"]
+    speedup = (report["tok_per_s"] / seq_tok_per_s if seq_tok_per_s
+               else 0.0)
+    row = dict(
+        requests=report["requests"],
+        slots=slots,
+        stagger_ticks=stagger,
+        tokens_total=report["tokens_total"],
+        tok_per_s=round(report["tok_per_s"], 1),
+        tok_per_s_out=round(report["tok_per_s_out"], 1),
+        p50_ttft_ms=round(report["p50_ttft_s"] * 1e3, 2),
+        p99_ttft_ms=round(report["p99_ttft_s"] * 1e3, 2),
+        p50_latency_ms=round(report["p50_latency_s"] * 1e3, 2),
+        p99_latency_ms=round(report["p99_latency_s"] * 1e3, 2),
+        p50_queue_wait_ms=round(report["p50_queue_wait_s"] * 1e3, 2),
+        prefill_compiles=report["prefill_compiles"],
+        seq_tok_per_s=round(seq_tok_per_s, 1),
+        speedup_vs_sequential=round(speedup, 2),
+        identical_to_sequential=bool(identical),
+    )
+    return row, speedup, identical
+
+
+def serve_bench():
+    """Perf-trajectory cell: staggered workload at two slot counts, warm
+    batched serving vs a warm single-slot per-request baseline."""
+    rows = []
+    speedups = []
+    ok = True
+    for slots in (2, 4):
+        row, speedup, identical = _run_serve(
+            n_requests=8, slots=slots, max_new=12, stagger=2)
+        rows.append(row)
+        speedups.append(speedup)
+        ok = ok and identical
+    summary = dict(
+        cells=len(rows),
+        best_speedup_vs_sequential=round(max(speedups), 2),
+        all_identical_to_sequential=bool(ok),
+        target="batched continuous serving >= 2x per-request execution "
+               "at smoke scale, byte-identical outputs",
+        met=bool(ok and max(speedups) >= 2.0),
+    )
+    return rows, summary
+
+
+def serve_micro():
+    """FAST-tier smoke gate: corruption => not ok; lost throughput edge
+    over per-request execution => not ok."""
+    row, speedup, identical = _run_serve(
+        n_requests=8, slots=4, max_new=8, stagger=1)
+    summary = dict(
+        speedup_vs_sequential=row["speedup_vs_sequential"],
+        identical_to_sequential=row["identical_to_sequential"],
+        min_speedup=MICRO_MIN_SPEEDUP,
+        ok=bool(identical and speedup >= MICRO_MIN_SPEEDUP),
+    )
+    return [row], summary

@@ -1,4 +1,6 @@
-"""Serving demo: slot-based continuous batching over a small model.
+"""Serving demo: continuous batching through the compiled serving programs
+(repro.exec.serving) — staggered arrivals, batched prefill, per-slot
+position bookkeeping.
 
 Run:  PYTHONPATH=src python examples/serve_lm.py
 """
@@ -7,10 +9,15 @@ import numpy as np, json
 
 srv = Server("tinyllama-1.1b", smoke=True, slots=4, max_len=64)
 rng = np.random.default_rng(0)
-for i in range(8):
-    prompt = rng.integers(0, srv.cfg.vocab, int(rng.integers(2, 6))).tolist()
-    srv.submit(Request(rid=i, prompt=prompt, max_new=10))
-report = srv.run_until_drained()
+reqs = [Request(rid=i,
+                prompt=rng.integers(0, srv.cfg.vocab,
+                                    int(rng.integers(2, 6))).tolist(),
+                max_new=10)
+        for i in range(8)]
+report = srv.run_workload(reqs, stagger_ticks=2)   # staggered arrivals
 print(json.dumps(report, indent=1))
 assert report["requests"] == 8
-print("OK: drained", report["requests"], "requests")
+assert report["tokens_total"] == report["tokens_prefill"] + report["tokens_out"]
+print("OK: drained", report["requests"], "requests at",
+      round(report["tok_per_s"], 1), "tok/s",
+      f"(p50 TTFT {report['p50_ttft_s'] * 1e3:.1f} ms)")

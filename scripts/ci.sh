@@ -5,10 +5,17 @@
 #   FAST=1 ./scripts/ci.sh          smoke tier: skip @slow tests, then run
 #                                   the compiled-engine smoke benchmark
 #                                   (fails if the compiled engine is slower
-#                                   than the oracle interpreter) and the
+#                                   than the oracle interpreter), the
 #                                   design-space-explorer smoke (fails if no
 #                                   frontier is produced or the best point
 #                                   violates the analytic-vs-sim agreement)
+#                                   and the serving smoke (drains a small
+#                                   staggered workload through the compiled
+#                                   serving programs; fails on cache
+#                                   corruption — outputs diverging from
+#                                   sequential single-slot decode — or on a
+#                                   throughput regression vs per-request
+#                                   execution)
 #   CI_INSTALL=1 ./scripts/ci.sh    pip install -e '.[dev]' first (networked
 #                                   CI; the dev extras declare pytest and
 #                                   hypothesis — without them the property
@@ -32,8 +39,10 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
 
 if [ "${FAST:-0}" = "1" ]; then
   # smoke gates: benchmarks.run exits nonzero when the compiled engine does
-  # not beat the interpreter (exec_micro) or when the design-space explorer
-  # produces no frontier / fails the analytic-vs-sim agreement (dse_micro)
+  # not beat the interpreter (exec_micro), when the design-space explorer
+  # produces no frontier / fails the analytic-vs-sim agreement (dse_micro),
+  # or when continuous-batching serving corrupts caches / regresses below
+  # per-request throughput (serve_micro)
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
-    python -m benchmarks.run --only exec_micro,dse_micro
+    python -m benchmarks.run --only exec_micro,dse_micro,serve_micro
 fi

@@ -7,9 +7,11 @@ once — §4.3 fusion-group partitioning, per-GCONV backend dispatch
 segments), Movement and Concat as metadata — and executes it as a single
 jitted function.
 """
+from .batch import BucketedCache, batch_bucket, pad_leading, unpad_leading
 from .engine import CompiledChain, CompileOptions, compile_chain
 from .dispatch import dispatch_gconv, plan_chain
 from .lowering import classify_dim, dim_classes
+from .serving import ServeEngine
 
 
 def execute_gconv(node, x, k=None, operands=None, backend: str = "jnp"):
@@ -24,4 +26,5 @@ def execute_gconv(node, x, k=None, operands=None, backend: str = "jnp"):
 
 __all__ = ["CompiledChain", "CompileOptions", "compile_chain",
            "dispatch_gconv", "plan_chain", "classify_dim", "dim_classes",
-           "execute_gconv"]
+           "execute_gconv", "BucketedCache", "batch_bucket", "pad_leading",
+           "unpad_leading", "ServeEngine"]

@@ -1,0 +1,87 @@
+"""Leading-batch bucketing for the compiled engine (and the serve driver).
+
+A compiled program is shape-specialized, so executing "any batch size"
+naively means one XLA compile per batch size ever seen — a compile storm
+under continuous batching, where the number of co-resident requests
+changes every admission. The standard fix (vLLM-style serving stacks, XLA
+bucketing) is to quantize the leading axis to a small ladder of *buckets*:
+pad the batch up to the nearest bucket, run the bucket-shaped program,
+slice the real rows back out. The compile count is then bounded by the
+number of buckets, not the number of batch sizes.
+
+:class:`BucketedCache` is the shared compile-cache type: the batched
+:class:`~repro.exec.engine.CompiledChain` path keys its jitted programs on
+``(keep_all, batch bucket)`` through one instance per engine, and the
+serving programs in :mod:`repro.exec.serving` key theirs on
+``(batch bucket, length bucket)``. Caches are per-program-family (one per
+engine), so the program identity (``CompiledChain.signature``) stays out
+of the key; it is introspection/reporting metadata.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Hashable, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def batch_bucket(n: int, min_bucket: int = 1) -> int:
+    """Smallest power-of-two >= n (and >= min_bucket)."""
+    if n < 1:
+        raise ValueError(f"batch size must be >= 1, got {n}")
+    b = max(1, min_bucket)
+    while b < n:
+        b *= 2
+    return b
+
+
+def pad_leading(x, bucket: int):
+    """Pad axis 0 of every array leaf up to ``bucket`` rows (zeros).
+
+    Padded rows run through the same program as real rows; callers slice
+    them away with :func:`unpad_leading`. Sound because every batched
+    program here is row-independent (vmap / per-row cache bookkeeping).
+    """
+    def one(a):
+        a = jnp.asarray(a)
+        n = a.shape[0]
+        if n == bucket:
+            return a
+        pad = [(0, bucket - n)] + [(0, 0)] * (a.ndim - 1)
+        return jnp.pad(a, pad)
+
+    return jax.tree.map(one, x)
+
+
+def unpad_leading(x, n: int):
+    """Slice axis 0 of every array leaf back to the real ``n`` rows."""
+    return jax.tree.map(lambda a: a[:n], x)
+
+
+class BucketedCache:
+    """Compile cache keyed on bucket tuples.
+
+    ``build(key)`` is called once per distinct key; the result (a jitted
+    callable) is cached forever. ``compiles`` counts distinct programs —
+    the invariant the tests pin down: after any sequence of batch sizes,
+    ``compiles == len(set(buckets seen))``.
+    """
+
+    def __init__(self, build: Callable[[Hashable], Callable]):
+        self._build = build
+        self._fns: Dict[Hashable, Callable] = {}
+        self.compiles = 0
+
+    def get(self, key: Hashable) -> Callable:
+        fn = self._fns.get(key)
+        if fn is None:
+            fn = self._build(key)
+            self._fns[key] = fn
+            self.compiles += 1
+        return fn
+
+    def keys(self) -> List[Hashable]:
+        return list(self._fns)
+
+    def __len__(self) -> int:
+        return len(self._fns)

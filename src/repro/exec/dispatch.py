@@ -45,6 +45,12 @@ class Step:
 class Plan:
     steps: List[Step]
     dispatch: Dict[str, str]             # every original node -> backend tag
+    signature: str = ""                  # stable program identity: chain
+                                         # name + input shapes + per-step
+                                         # backend decisions. Introspection
+                                         # /reporting only — compile caches
+                                         # are per-engine, so their keys
+                                         # need only (keep_all, bucket)
 
 
 # ---------------------------------------------------------------------------
@@ -448,7 +454,10 @@ def plan_chain(chain: Chain, *, backend: str = "auto", mxu_min: int = 128,
         tag, fn = dispatch_gconv(node, k_shape, backend, mxu_min)
         dispatch[name] = tag
         steps.append(Step(name, tag, _gconv_step(node, fn)))
-    return Plan(steps, dispatch)
+    ins = ";".join(f"{n}:{'x'.join(map(str, i.shape))}:{i.dtype}"
+                   for n, i in chain.inputs.items())
+    prog = ";".join(f"{s.name}={s.backend}" for s in steps)
+    return Plan(steps, dispatch, signature=f"{chain.name}|{ins}|{prog}")
 
 
 def _gconv_step(node: GConv, fn: Callable) -> Callable:

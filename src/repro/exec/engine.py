@@ -30,6 +30,7 @@ import jax.numpy as jnp
 
 from ..core.chain import Chain
 from ..core.fusion import ExecGroup, FusionReport
+from .batch import BucketedCache, batch_bucket, pad_leading, unpad_leading
 from .dispatch import Plan, plan_chain
 from .partition import partition_chain
 
@@ -53,10 +54,14 @@ class CompiledChain:
         self.chain = chain                   # the fused chain actually run
         self.fusion_report = report
         self.partitions = partitions
+        self._plan = plan
         self.steps = plan.steps
         self.dispatch: Dict[str, str] = plan.dispatch
         self.options = options
         self._fns: Dict[bool, object] = {}
+        # leading-batch execution: one vmapped program per (keep_all,
+        # batch bucket), cached per engine (exec.batch.BucketedCache)
+        self._batched = BucketedCache(self._build_batched)
 
     # -- parameter init (the oracle's own recipe, shared) ---------------
     def init_params(self, key, scale: float = 0.1) -> Dict[str, jnp.ndarray]:
@@ -92,26 +97,72 @@ class CompiledChain:
             self._fns[keep_all] = fn
         return fn
 
+    def _build_batched(self, key):
+        keep_all, _bucket = key          # bucket fixes the traced shape;
+        run = (lambda ins, ps, _k=keep_all:   # one compile per cache entry
+               self._execute(ins, ps, _k))
+        fn = jax.vmap(run, in_axes=(0, None))
+        return jax.jit(fn) if self.options.jit else fn
+
+    def _batch_size(self, ins: Dict[str, jnp.ndarray]) -> Optional[int]:
+        """None for exact chain shapes; N when every input carries one
+        extra leading batch axis of the same size N (the batched mode)."""
+        exact = all(tuple(a.shape) == self.chain.inputs[n].shape
+                    for n, a in ins.items())
+        if exact:
+            return None
+        sizes = set()
+        for name, arr in ins.items():
+            want = self.chain.inputs[name].shape
+            if arr.ndim != len(want) + 1 or tuple(arr.shape[1:]) != want:
+                raise ValueError(
+                    f"input {name!r}: got {arr.shape}, want {want} or "
+                    f"batch-extended (N,)+{want}")
+            sizes.add(arr.shape[0])
+        if len(sizes) != 1:
+            raise ValueError(
+                f"inconsistent leading batch sizes {sorted(sizes)}")
+        return sizes.pop()
+
     def __call__(self,
                  inputs: Mapping[str, jnp.ndarray],
                  params: Optional[Mapping[str, jnp.ndarray]] = None,
                  keep_all: bool = False) -> Dict[str, jnp.ndarray]:
         params = params or {}
         ins = {}
-        for name, info in self.chain.inputs.items():
+        for name in self.chain.inputs:
             if name not in inputs:
                 raise ValueError(f"missing chain input {name!r}")
-            arr = jnp.asarray(inputs[name])
-            if tuple(arr.shape) != info.shape:
-                raise ValueError(
-                    f"input {name!r}: got {arr.shape}, want {info.shape}")
-            ins[name] = arr
+            ins[name] = jnp.asarray(inputs[name])
         ps = {}
         for name in self.chain.params:
             if name not in params:
                 raise ValueError(f"missing chain param {name!r}")
             ps[name] = jnp.asarray(params[name])
-        return dict(self._fn(keep_all)(ins, ps))
+        n = self._batch_size(ins)
+        if n is None:
+            return dict(self._fn(keep_all)(ins, ps))
+        bucket = batch_bucket(n)
+        fn = self._batched.get((keep_all, bucket))
+        out = fn(pad_leading(ins, bucket), ps)
+        return dict(unpad_leading(out, n))
+
+    # -- batched-mode introspection -------------------------------------
+    @property
+    def batch_compiles(self) -> int:
+        """Distinct batched programs compiled so far (== #buckets seen)."""
+        return self._batched.compiles
+
+    @property
+    def batch_buckets(self):
+        return sorted({b for _k, b in self._batched.keys()})
+
+    @property
+    def signature(self) -> str:
+        """Stable program identity (chain name + input shapes + dispatch
+        decisions); introspection/reporting metadata — equal-signature
+        engines run the same program."""
+        return self._plan.signature
 
     # -- introspection --------------------------------------------------
     def backend_histogram(self) -> Dict[str, int]:

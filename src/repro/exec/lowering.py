@@ -27,6 +27,17 @@ All lowerings share the signature ``fn(x, k, lookup) -> y`` where ``lookup``
 resolves pre/post tensor operands from the execution environment, and
 mirror the oracle's dtype discipline: compute in
 ``result_type(x.dtype, float32)``, cast to ``out_dtype`` at the end.
+
+Batched-mode contract: the leading-batch execution path
+(:class:`~repro.exec.engine.CompiledChain` with batch-extended inputs)
+``jax.vmap``-wraps the whole step program, so every lowering here must be
+(a) traceable with the chain's declared shapes only — all reshapes /
+window index tables are built from the STATIC ``DimSpec`` geometry, never
+from runtime values — and (b) row-independent: nothing may reduce or
+gather across the (abstracted) batch axis. (a) is what lets one bucket
+compile serve every batch size in the bucket; (b) is what makes zero-pad
+rows inert, in the same way per-slot positions make pad-token decode
+ticks inert in the serving programs (exec.serving).
 """
 from __future__ import annotations
 

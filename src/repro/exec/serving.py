@@ -1,0 +1,200 @@
+"""Batch-aware serving programs: the execution substrate of launch/serve.
+
+The serving driver used to hand-roll its own execution (per-slot prefill
+through teacher-forced decode steps of the *whole* batch, global position
+bookkeeping), corrupting neighbouring slots' caches. This module moves
+serving execution into ``repro.exec``, sharing the batched engine's
+machinery rather than duplicating it: the same bucketed compile-cache
+type that backs the batched :class:`~repro.exec.engine.CompiledChain`
+(:class:`~repro.exec.batch.BucketedCache`) keys the prefill programs on
+``(batch bucket, length bucket)``, decode is ONE fixed-shape jitted
+program over the slot batch, and all slot-state surgery (KV-row splicing,
+slot reset) is pure tree arithmetic over the model's ``serve_axes`` table
+— no per-family code and no cross-slot writes. To be precise about the
+layering: the serving programs jit the models' fused decode/prefill paths
+(``models.common`` norm/attention — the very implementations the chain
+engine's segment dispatch lowers to, equivalence-tested in
+tests/test_exec.py); the per-GCONV lowerings themselves are the *offline*
+face of ``repro.exec`` and are not re-derived per token here.
+
+Layering::
+
+    launch/serve.py   policy: queue, slots, admission, stats
+    exec/serving.py   mechanism: compiled programs + slot-state surgery
+    exec/batch.py     bucketing + compile cache (shared with CompiledChain)
+    models/api.py     decode_step / prefill(lengths=...) / serve_axes
+
+Correctness contract (regression-tested in tests/test_serve.py): a
+staggered multi-slot workload produces byte-identical token streams to
+sequential single-slot decode. This holds because every program here is
+row-independent — per-slot positions mean a pad-token tick on an idle slot
+never advances or overwrites an active slot's rows, and right-padded
+prefill is masked (causally, then by ``pos``) so pad rows are inert.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .batch import BucketedCache, batch_bucket
+
+MIN_LEN_BUCKET = 8      # shortest prompt-length bucket (compile-count floor)
+
+
+class ServeEngine:
+    """Compiled decode/prefill programs + slot-state surgery for one model.
+
+    ``decode``  — one jitted program over the fixed ``slots`` batch.
+    ``prefill`` — right-padded batched prefill over the newly admitted
+                  requests, one compiled program per ``(batch bucket,
+                  length bucket)`` via the shared bucketed cache; falls
+                  back to per-request teacher-forced decode for families
+                  without a batched prefill (SSM/hybrid) or with sliding
+                  windows (where padded prefill is unsound).
+    ``splice``  — write prefilled rows (K/V rows, SSM state, positions)
+                  into their slots, ONE jitted scatter over the whole
+                  admission (``splice_many``); ``reset_slot`` zeroes a
+                  slot on release (also jitted).
+    """
+
+    def __init__(self, model, *, slots: int, max_len: int):
+        self.model = model
+        self.cfg = model.cfg
+        self.slots = int(slots)
+        self.max_len = int(max_len)
+        self.axes: Dict[str, int] = dict(model.serve_axes)
+        self._decode_fn = jax.jit(model.decode_step)
+        self._prefill_cache = BucketedCache(self._build_prefill)
+        # slot surgery compiles once per (row-state shape, admission count)
+        # — both bucket-bounded; jitting fuses the per-leaf updates into
+        # one program instead of eager per-leaf dispatch
+        self._splice_fn = jax.jit(self._splice_many)
+        self._reset_fn = jax.jit(self._reset_impl)
+        self._batched_prefill_ok = (
+            getattr(model, "prefill", None) is not None
+            and not self.cfg.sliding_window)
+
+    # -- state ----------------------------------------------------------
+    def init_state(self):
+        return self.model.serve_state_init(self.slots, self.max_len,
+                                           per_slot_pos=True)
+
+    # -- decode: ONE program, fixed (slots, 1) shape --------------------
+    def decode(self, params, tokens, cache):
+        """tokens: (slots, 1) int32 -> (logits, cache). Row-independent:
+        idle slots step a pad token but only their own rows move."""
+        return self._decode_fn(params, tokens, cache)
+
+    # -- prefill: bucketed batched programs -----------------------------
+    def _build_prefill(self, key):
+        nb, lb = key
+        if lb == 0:                       # fallback: single decode step
+            return jax.jit(self.model.decode_step)
+        return jax.jit(lambda params, tokens, lengths:
+                       self.model.prefill(params, tokens, lengths=lengths))
+
+    def prefill(self, params, prompts: Sequence[Sequence[int]]):
+        """Prefill ``prompts`` together; returns (logits, row_state, n).
+
+        ``logits[j]`` is row j's own last-real-token logits (never another
+        request's — the old driver's unbound/stale-``logits`` bug class);
+        ``row_state`` holds the per-row caches to splice into slots.
+        """
+        n = len(prompts)
+        if n == 0:
+            raise ValueError("prefill of zero prompts")
+        if any(len(p) == 0 for p in prompts):
+            raise ValueError("empty prompt reached prefill; the driver "
+                             "seeds BOS or rejects at submit")
+        longest = max(len(p) for p in prompts)
+        if longest > self.max_len:
+            raise ValueError(f"prompt length {longest} > max_len "
+                             f"{self.max_len}")
+        if not self._batched_prefill_ok:
+            return self._prefill_loop(params, prompts)
+        nb = batch_bucket(n)
+        # longest <= max_len (checked above), so the clamp keeps lb valid
+        lb = min(batch_bucket(longest, MIN_LEN_BUCKET), self.max_len)
+        tokens = np.zeros((nb, lb), np.int32)
+        lengths = np.ones((nb,), np.int32)     # pad rows: 1 (inert, valid)
+        for j, p in enumerate(prompts):
+            tokens[j, :len(p)] = p
+            lengths[j] = len(p)
+        fn = self._prefill_cache.get((nb, lb))
+        logits, row_state = fn(params, jnp.asarray(tokens),
+                               jnp.asarray(lengths))
+        return logits, row_state, n
+
+    def _prefill_loop(self, params, prompts):
+        """Teacher-forced per-request prefill on a fresh single-row state
+        (SSM/hybrid/windowed families): still isolated — the scratch state
+        is private, nothing touches the live slot batch."""
+        step = self._prefill_cache.get((1, 0))
+        rows, logits = [], []
+        for p in prompts:
+            st = self.model.serve_state_init(1, self.max_len,
+                                             per_slot_pos=True)
+            lg = None
+            for t in p:
+                lg, st = step(params, jnp.asarray([[t]], jnp.int32), st)
+            logits.append(lg[:, -1] if lg.ndim == 3 else lg)
+            rows.append(st)
+        row_state = {k: jnp.concatenate([r[k] for r in rows],
+                                        axis=self.axes[k])
+                     for k in rows[0]}
+        return jnp.concatenate(logits), row_state, len(prompts)
+
+    @property
+    def prefill_compiles(self) -> int:
+        return self._prefill_cache.compiles
+
+    # -- slot-state surgery (tree arithmetic over serve_axes) -----------
+    def _splice_many(self, cache, slots, row_state, js):
+        """Scatter rows ``js`` of ``row_state`` into ``slots`` of
+        ``cache`` — the ONLY slots whose leaves change; all other rows
+        pass through untouched (no cross-slot cache writes, by
+        construction). ``slots``/``js``: (m,) int32."""
+        def one(leaf, rows_leaf, axis):
+            rows = jnp.take(rows_leaf, js, axis=axis)
+            rows = jnp.moveaxis(rows, axis, 0)               # (m, ...)
+            tgt = jnp.moveaxis(leaf, axis, 0)                # (slots, ...)
+            pad = [(0, 0)] + [(0, int(t) - int(r))
+                              for t, r in zip(tgt.shape[1:], rows.shape[1:])]
+            if any(p != (0, 0) for p in pad):                # lb -> max_len
+                rows = jnp.pad(rows, pad)
+            out = tgt.at[slots].set(rows.astype(leaf.dtype))
+            return jnp.moveaxis(out, 0, axis)
+
+        return {k: one(cache[k], row_state[k], self.axes[k]) for k in cache}
+
+    def splice_many(self, cache, slots: Sequence[int], row_state,
+                    js: Optional[Sequence[int]] = None):
+        """Write each row ``js[i]`` of ``row_state`` into slot
+        ``slots[i]``: one fused jitted scatter for the whole admission."""
+        if js is None:
+            js = list(range(len(slots)))
+        return self._splice_fn(cache, jnp.asarray(slots, jnp.int32),
+                               row_state, jnp.asarray(js, jnp.int32))
+
+    def splice(self, cache, slot: int, row_state, j: int = 0):
+        """Single-slot convenience form of :meth:`splice_many`."""
+        return self.splice_many(cache, [slot], row_state, [j])
+
+    def _reset_impl(self, cache, slot):
+        def one(leaf, axis):
+            shape = list(leaf.shape)
+            shape[axis] = 1
+            zeros = jnp.zeros(shape, leaf.dtype)
+            start = [0] * leaf.ndim
+            start[axis] = slot
+            return jax.lax.dynamic_update_slice(leaf, zeros, start)
+
+        return {k: one(cache[k], self.axes[k]) for k in cache}
+
+    def reset_slot(self, cache, slot: int):
+        """Zero a slot's rows on release — a reused slot starts from a
+        clean state even before its next splice."""
+        return self._reset_fn(cache, jnp.asarray(slot, jnp.int32))

@@ -1,11 +1,21 @@
-"""Serving driver: batched prefill + decode with slot-based continuous
-batching.
+"""Serving driver: continuous batching over the compiled serving programs.
 
-A fixed pool of ``slots`` sequences decodes in lock-step (one jit'd
-``decode_step`` per tick over the whole batch — the decode_32k cell's
-workload); finished sequences release their slot to the next queued request
-(continuous batching). Prefill runs per-request through ``model.prefill``
-and its KV rows are spliced into the batch cache.
+Policy layer only — a fixed pool of ``slots`` sequences decodes in
+lock-step through ONE compiled decode program; finished sequences release
+their slot to the next queued request (continuous batching). All execution
+and slot-state surgery lives in :class:`repro.exec.serving.ServeEngine`:
+
+  * admission runs ONE batched prefill over the newly admitted requests
+    (bucketed compile cache on ``(batch bucket, length bucket)``) and
+    splices each row's K/V cache into its slot;
+  * position bookkeeping is per-slot (``cache["pos"]`` is a vector), so a
+    pad-token tick on an idle slot never advances or overwrites another
+    slot's rows;
+  * each request's first token is seeded from its OWN prefill logits row;
+  * slots are zeroed on release and re-spliced on reuse.
+
+Invariant (tests/test_serve.py): staggered multi-slot serving produces
+byte-identical token streams to sequential single-slot decode.
 
 On real hardware the same driver runs under the production mesh with the
 cache shardings from launch/sharding.py; here it demos at smoke scale
@@ -14,7 +24,6 @@ cache shardings from launch/sharding.py; here it demos at smoke scale
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import json
 import time
 from dataclasses import dataclass, field
@@ -25,6 +34,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
+from repro.exec.serving import ServeEngine
 from repro.models import api
 
 
@@ -35,98 +45,201 @@ class Request:
     max_new: int = 16
     out: List[int] = field(default_factory=list)
     submitted_at: float = 0.0
+    admitted_at: float = 0.0
+    first_token_at: float = 0.0
     done_at: float = 0.0
+
+
+def _pct(xs, q):
+    return float(np.percentile(xs, q)) if xs else 0.0
 
 
 class Server:
     def __init__(self, arch: str, *, smoke: bool = True, slots: int = 4,
-                 max_len: int = 128, greedy: bool = True):
+                 max_len: int = 128, greedy: bool = True,
+                 bos_id: Optional[int] = 0):
         self.cfg = configs.get(arch, smoke=smoke)
         self.model = api.build(self.cfg)
         self.params = self.model.init(jax.random.PRNGKey(0))
         self.slots = slots
         self.max_len = max_len
         self.greedy = greedy
+        self.bos_id = bos_id
         if self.cfg.family == "encdec":
             raise NotImplementedError(
                 "serve driver demos decoder-only archs; encdec uses "
                 "encode+decode_step directly (see tests)")
-        self.cache = self.model.serve_state_init(slots, max_len)
+        self.engine = ServeEngine(self.model, slots=slots, max_len=max_len)
+        self.cache = self.engine.init_state()
         self.slot_req: List[Optional[Request]] = [None] * slots
         self.slot_remaining = np.zeros(slots, np.int32)
-        self.tokens = jnp.zeros((slots, 1), jnp.int32)
+        self.tokens = np.zeros((slots, 1), np.int32)
         self.queue: List[Request] = []
         self.finished: List[Request] = []
-        self._decode = jax.jit(self.model.decode_step)
+        self.tokens_prefill = 0
+        self.tokens_decode = 0
 
     # ------------------------------------------------------------------
     def submit(self, req: Request):
+        """Queue a request. Empty prompts are defined here, once: seed a
+        BOS token (``bos_id``) or reject when the server has none."""
+        if not req.prompt:
+            if self.bos_id is None:
+                raise ValueError("empty prompt and no bos_id configured")
+            req.prompt = [self.bos_id]
+        if req.max_new < 1:
+            raise ValueError(f"request {req.rid}: max_new must be >= 1 "
+                             f"(got {req.max_new})")
+        if len(req.prompt) + req.max_new > self.max_len:
+            raise ValueError(
+                f"request {req.rid}: prompt {len(req.prompt)} + max_new "
+                f"{req.max_new} exceeds max_len {self.max_len}")
         req.submitted_at = time.perf_counter()
         self.queue.append(req)
 
+    def _release(self, s: int):
+        req = self.slot_req[s]
+        req.done_at = time.perf_counter()
+        self.finished.append(req)
+        self.slot_req[s] = None
+        self.tokens[s, 0] = 0
+        self.cache = self.engine.reset_slot(self.cache, s)
+
     def _admit(self):
-        """Fill free slots from the queue. Per-slot prefill: run the prompt
-        through decode steps (teacher-forced) to populate this slot's cache
-        rows — slot-wise isolation keeps it simple and correct; batched
-        prefill via model.prefill is the production path."""
-        for s in range(self.slots):
-            if self.slot_req[s] is not None or not self.queue:
-                continue
-            req = self.queue.pop(0)
+        """Fill free slots from the queue with ONE batched prefill.
+
+        Each admitted request's KV rows are spliced into its own slot and
+        its first token comes from its OWN prefill logits row — admission
+        never touches occupied slots (per-slot positions + row splicing;
+        the engine enforces it structurally)."""
+        free = [s for s in range(self.slots) if self.slot_req[s] is None]
+        take = self.queue[: len(free)]
+        if not take:
+            return
+        del self.queue[: len(take)]
+        now = time.perf_counter()
+        for req in take:
+            req.admitted_at = now
+        logits, rows, n = self.engine.prefill(
+            self.params, [r.prompt for r in take])
+        self.cache = self.engine.splice_many(self.cache, free[:n], rows)
+        firsts = (np.asarray(jnp.argmax(logits[:n], axis=-1))
+                  if self.greedy else np.zeros(n, np.int64))
+        for j, (s, req) in enumerate(zip(free, take)):
+            first = int(firsts[j])
+            req.out.append(first)
+            req.first_token_at = time.perf_counter()
+            self.tokens_prefill += len(req.prompt)
             self.slot_req[s] = req
-            self.slot_remaining[s] = req.max_new
-            # feed prompt tokens through the shared batch (other slots get
-            # a pad token; their caches advance harmlessly because position
-            # bookkeeping is global — acceptable for the lock-step demo)
-            for t in req.prompt:
-                tok = np.zeros((self.slots, 1), np.int32)
-                tok[s, 0] = t
-                logits, self.cache = self._decode(
-                    self.params, jnp.asarray(tok), self.cache)
-            self.tokens = self.tokens.at[s, 0].set(
-                int(jnp.argmax(logits[s, -1])) if self.greedy else 0)
+            self.slot_remaining[s] = req.max_new - 1
+            self.tokens[s, 0] = first
+            if self.slot_remaining[s] <= 0:     # max_new == 1: done already
+                self._release(s)
 
     def tick(self) -> int:
-        """One decode step for the whole batch; returns #active slots."""
+        """One decode step for the whole slot batch; returns #active."""
         self._admit()
         active = [s for s in range(self.slots)
                   if self.slot_req[s] is not None]
         if not active:
             return 0
-        logits, self.cache = self._decode(self.params, self.tokens,
-                                          self.cache)
-        nxt = jnp.argmax(logits[:, -1], axis=-1)
+        logits, self.cache = self.engine.decode(
+            self.params, jnp.asarray(self.tokens), self.cache)
+        nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1)) if self.greedy \
+            else np.zeros(self.slots, np.int64)
         for s in active:
             req = self.slot_req[s]
             req.out.append(int(nxt[s]))
+            self.tokens_decode += 1
+            self.tokens[s, 0] = int(nxt[s])
             self.slot_remaining[s] -= 1
             if self.slot_remaining[s] <= 0:
-                req.done_at = time.perf_counter()
-                self.finished.append(req)
-                self.slot_req[s] = None
-        self.tokens = nxt[:, None].astype(jnp.int32)
+                self._release(s)
         return len(active)
 
-    def run_until_drained(self, max_ticks: int = 10_000) -> Dict:
+    # ------------------------------------------------------------------
+    def run_workload(self, requests: List[Request], stagger_ticks: int = 0,
+                     max_ticks: int = 10_000) -> Dict:
+        """Submit ``requests[i]`` once ``i * stagger_ticks`` ticks have
+        elapsed (0 = all up front), then drain."""
         t0 = time.perf_counter()
         ticks = 0
-        tokens_out = 0
-        while (self.queue or any(r is not None for r in self.slot_req)):
-            n = self.tick()
-            tokens_out += n
+        i = 0
+        while (i < len(requests) or self.queue
+               or any(r is not None for r in self.slot_req)):
+            while i < len(requests) and ticks >= i * stagger_ticks:
+                self.submit(requests[i])
+                i += 1
+            self.tick()
             ticks += 1
             if ticks > max_ticks:
                 raise RuntimeError("server did not drain")
-        dt = time.perf_counter() - t0
-        lat = [r.done_at - r.submitted_at for r in self.finished]
+        return self._report(time.perf_counter() - t0, ticks)
+
+    def run_until_drained(self, max_ticks: int = 10_000) -> Dict:
+        return self.run_workload([], 0, max_ticks)
+
+    def reset_stats(self):
+        """Clear finished requests and token counters (benchmarking: time a
+        warm workload without the first run's compiles). The server must be
+        drained first; compiled programs and slot state stay warm."""
+        if self.queue or any(r is not None for r in self.slot_req):
+            raise RuntimeError("reset_stats on a busy server")
+        self.finished = []
+        self.tokens_prefill = 0
+        self.tokens_decode = 0
+
+    def reset_state(self):
+        """reset_stats + a factory-fresh slot cache, keeping the compiled
+        programs warm — a reused server becomes indistinguishable from a
+        newly built one (sequential_reference relies on this)."""
+        self.reset_stats()
+        self.cache = self.engine.init_state()
+        self.slot_remaining[:] = 0
+        self.tokens[:] = 0
+
+    def _report(self, dt: float, ticks: int) -> Dict:
+        fin = self.finished
+        tokens_out = sum(len(r.out) for r in fin)
+        total = self.tokens_prefill + tokens_out
+        queue_wait = [r.admitted_at - r.submitted_at for r in fin]
+        ttft = [r.first_token_at - r.submitted_at for r in fin]
+        lat = [r.done_at - r.submitted_at for r in fin]
         return {
-            "requests": len(self.finished),
+            "requests": len(fin),
             "ticks": ticks,
+            "tokens_prefill": self.tokens_prefill,
+            "tokens_decode": self.tokens_decode,
             "tokens_out": tokens_out,
+            "tokens_total": total,
             "wall_s": dt,
-            "tok_per_s": tokens_out / dt if dt else 0.0,
-            "p50_latency_s": float(np.percentile(lat, 50)) if lat else 0.0,
+            "tok_per_s": total / dt if dt else 0.0,
+            "tok_per_s_out": tokens_out / dt if dt else 0.0,
+            "p50_queue_wait_s": _pct(queue_wait, 50),
+            "p99_queue_wait_s": _pct(queue_wait, 99),
+            "p50_ttft_s": _pct(ttft, 50),
+            "p99_ttft_s": _pct(ttft, 99),
+            "p50_latency_s": _pct(lat, 50),
+            "p99_latency_s": _pct(lat, 99),
+            "prefill_compiles": self.engine.prefill_compiles,
         }
+
+
+def sequential_reference(arch: str, requests: List[Request],
+                         **server_kw) -> List[List[int]]:
+    """Decode every request alone on a single-slot server — the byte-level
+    reference the continuous-batching outputs must reproduce. One server
+    is built (the programs compile once); its state is factory-reset
+    between requests so each decodes against a fresh cache."""
+    srv = Server(arch, slots=1, **server_kw)
+    outs = []
+    for req in requests:
+        srv.reset_state()
+        srv.submit(Request(rid=req.rid, prompt=list(req.prompt),
+                           max_new=req.max_new))
+        srv.run_until_drained()
+        outs.append(srv.finished[0].out)
+    return outs
 
 
 def main():
@@ -136,13 +249,31 @@ def main():
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--stagger", type=int, default=2,
+                    help="ticks between request arrivals (staggered "
+                         "workload; 0 = all at once)")
+    ap.add_argument("--check", action="store_true",
+                    help="re-decode sequentially single-slot and verify "
+                         "byte-identical outputs")
     args = ap.parse_args()
     srv = Server(args.arch, smoke=True, slots=args.slots)
     rng = np.random.default_rng(0)
-    for i in range(args.requests):
-        prompt = rng.integers(0, srv.cfg.vocab, rng.integers(2, 6)).tolist()
-        srv.submit(Request(rid=i, prompt=prompt, max_new=args.max_new))
-    report = srv.run_until_drained()
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, srv.cfg.vocab,
+                                        rng.integers(2, 6)).tolist(),
+                    max_new=args.max_new)
+            for i in range(args.requests)]
+    report = srv.run_workload(reqs, stagger_ticks=args.stagger)
+    if args.check:
+        got = {r.rid: r.out for r in srv.finished}
+        ref = sequential_reference(
+            args.arch, [Request(rid=r.rid, prompt=list(r.prompt),
+                                max_new=r.max_new) for r in reqs])
+        ok = all(got[r.rid] == ref[i] for i, r in enumerate(reqs))
+        report["identical_to_sequential"] = ok
+        if not ok:
+            raise SystemExit("continuous-batching outputs diverge from "
+                             "sequential single-slot decode")
     print(json.dumps(report, indent=1))
 
 

@@ -5,6 +5,17 @@
     loss   = model.loss_fn(params, batch, shard_fn)
     logits, cache = model.decode_step(params, token, cache, shard_fn)
     cache  = model.serve_state_init(batch, max_len)
+
+Serving extras (consumed by repro.exec.serving):
+
+    cache  = model.serve_state_init(batch, max_len, per_slot_pos=True)
+        per-slot position vector instead of the lock-step scalar
+    model.serve_axes
+        dict mapping each serve-state key to the axis that indexes the
+        batch slot in that leaf (positions index axis 0 of the ``pos``
+        vector; K/V and SSM leaves stack layers first, so the slot is
+        axis 1). Slot splicing/reset in the serving engine is pure
+        tree arithmetic over this table — no per-family code.
 """
 from __future__ import annotations
 
@@ -45,8 +56,9 @@ def build(cfg: ModelConfig) -> SimpleNamespace:
             prefill=lambda params, tokens, **kw: transformer.prefill(
                 cfg, params, tokens, ffn_fn=ffn_fn, **kw),
             decode_step=decode_step,
-            serve_state_init=lambda batch, max_len: kv_cache_init(
-                cfg, batch, max_len),
+            serve_state_init=lambda batch, max_len, **kw: kv_cache_init(
+                cfg, batch, max_len, **kw),
+            serve_axes={"k": 1, "v": 1, "pos": 0},
         )
 
     if cfg.family == "ssm":
@@ -59,8 +71,9 @@ def build(cfg: ModelConfig) -> SimpleNamespace:
                 cfg, params, tokens, **kw),
             decode_step=lambda params, token, cache, shard_fn=_noshard:
                 rwkv6.decode_step(cfg, params, token, cache, shard_fn),
-            serve_state_init=lambda batch, max_len: rwkv6.init_state(
-                cfg, batch),
+            serve_state_init=lambda batch, max_len, per_slot_pos=False:
+                rwkv6.init_state(cfg, batch),   # stateful: no positions
+            serve_axes={"wkv": 1, "tm_x": 1, "cm_x": 1},
         )
 
     if cfg.family == "hybrid":
@@ -73,8 +86,9 @@ def build(cfg: ModelConfig) -> SimpleNamespace:
                 cfg, params, tokens, **kw),
             decode_step=lambda params, token, cache, shard_fn=_noshard:
                 hymba.decode_step(cfg, params, token, cache, shard_fn),
-            serve_state_init=lambda batch, max_len: hymba.serve_state_init(
-                cfg, batch, max_len),
+            serve_state_init=lambda batch, max_len, **kw:
+                hymba.serve_state_init(cfg, batch, max_len, **kw),
+            serve_axes={"k": 1, "v": 1, "ssm": 1, "pos": 0},
         )
 
     if cfg.family == "encdec":

@@ -334,22 +334,41 @@ def softmax_xent(logits, labels, ignore_id: int = -1):
 # ---------------------------------------------------------------------------
 # KV cache
 # ---------------------------------------------------------------------------
-def kv_cache_init(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
+def kv_cache_init(cfg: ModelConfig, batch: int, max_len: int, dtype=None,
+                  per_slot_pos: bool = False):
     """Stacked-over-layers KV cache. Sliding-window models allocate only the
-    window (ring buffer)."""
+    window (ring buffer).
+
+    ``per_slot_pos=True`` allocates ``pos`` as a ``(batch,)`` vector — one
+    independent write/mask position per batch row. This is the continuous-
+    batching serving layout (launch/serve via repro.exec.serving): each slot
+    advances only by its own decoded tokens, so admitting or draining one
+    request never moves another slot's position. The default scalar ``pos``
+    is the lock-step layout (dry-run decode cells, single-sequence demos).
+    """
     L = cfg.n_layers if cfg.family != "encdec" else cfg.n_layers
     size = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
     dt = dtype or cdtype(cfg)
     shape = (L, batch, size, cfg.n_kv_heads, cfg.hd)
-    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt),
-            "pos": jnp.zeros((), jnp.int32)}
+    pos = (jnp.zeros((batch,), jnp.int32) if per_slot_pos
+           else jnp.zeros((), jnp.int32))
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt), "pos": pos}
 
 
 def kv_cache_append_layer(cache_k, cache_v, pos, k_new, v_new,
                           sliding_window: int = 0):
-    """Insert (B, 1, Hkv, hd) at position pos (ring-buffered if windowed)."""
+    """Insert (B, 1, Hkv, hd) at position pos (ring-buffered if windowed).
+
+    ``pos`` may be a scalar (every row writes the same index — lock-step
+    decode) or a ``(B,)`` vector (per-slot serving: each row writes at its
+    own position)."""
     size = cache_k.shape[1]
+    pos = jnp.asarray(pos)
     idx = (pos % size) if sliding_window else jnp.minimum(pos, size - 1)
-    ck = jax.lax.dynamic_update_slice_in_dim(cache_k, k_new, idx, axis=1)
-    cv = jax.lax.dynamic_update_slice_in_dim(cache_v, v_new, idx, axis=1)
-    return ck, cv
+    if pos.ndim == 0:
+        ck = jax.lax.dynamic_update_slice_in_dim(cache_k, k_new, idx, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache_v, v_new, idx, axis=1)
+        return ck, cv
+    upd = jax.vmap(
+        lambda c, n, i: jax.lax.dynamic_update_slice_in_dim(c, n, i, axis=0))
+    return upd(cache_k, k_new, idx), upd(cache_v, v_new, idx)

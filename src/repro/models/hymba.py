@@ -237,23 +237,29 @@ def loss_fn(cfg: ModelConfig, params, batch, shard_fn=_noshard):
 # ---------------------------------------------------------------------------
 # serving: windowed KV cache + SSM state
 # ---------------------------------------------------------------------------
-def serve_state_init(cfg: ModelConfig, batch: int, max_len: int):
+def serve_state_init(cfg: ModelConfig, batch: int, max_len: int,
+                     per_slot_pos: bool = False):
     win = min(cfg.sliding_window or max_len, max_len)
     dt = cdtype(cfg)
+    pos = (jnp.zeros((batch,), jnp.int32) if per_slot_pos
+           else jnp.zeros((), jnp.int32))
     return {
         "k": jnp.zeros((cfg.n_layers, batch, win, cfg.n_kv_heads, cfg.hd), dt),
         "v": jnp.zeros((cfg.n_layers, batch, win, cfg.n_kv_heads, cfg.hd), dt),
         "ssm": init_state(cfg, batch),
-        "pos": jnp.zeros((), jnp.int32),
+        "pos": pos,
     }
 
 
 def decode_step(cfg: ModelConfig, params, token, cache, shard_fn=_noshard):
+    """cache["pos"] may be scalar (lock-step) or (B,) per-slot (serving)."""
     from .common import kv_cache_append_layer
 
     B = token.shape[0]
     pos = cache["pos"]
-    positions = jnp.broadcast_to(pos[None, None], (B, 1))
+    pos_b = (jnp.broadcast_to(pos[None], (B,)) if jnp.ndim(pos) == 0
+             else pos)
+    positions = pos_b[:, None]
     x = params["embed"][token].astype(cdtype(cfg))
 
     def scan_body(x, layer_in):

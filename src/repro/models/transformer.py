@@ -170,11 +170,22 @@ def loss_fn(cfg: ModelConfig, params: Params, batch, shard_fn=_noshard,
 # ---------------------------------------------------------------------------
 # serving: prefill + decode with KV cache
 # ---------------------------------------------------------------------------
+def _pos_col(pos, ndim: int):
+    """Broadcast pos against a (B, ..., S) score tensor: scalars apply
+    globally (lock-step decode); (B,) vectors mask per batch row (per-slot
+    serving positions)."""
+    pos = jnp.asarray(pos)
+    if pos.ndim == 0:
+        return pos
+    return pos.reshape(pos.shape + (1,) * (ndim - 1))
+
+
 def decode_attention(cfg: ModelConfig, q, cache_k, cache_v, pos,
                      shard_fn=None):
     """q: (B,1,H,hd); cache: (B,S,Hkv,hd); pos = tokens already in cache
-    (the new token's index). Ring-buffered caches attend every slot once
-    full; before that, slots beyond pos are masked."""
+    (the new token's index) — a scalar, or (B,) for per-slot positions.
+    Ring-buffered caches attend every slot once full; before that, slots
+    beyond pos are masked."""
     B, S = cache_k.shape[:2]
     n_rep = cfg.n_heads // cfg.n_kv_heads
     if "gqa_norepeat" in cfg.perf_flags and n_rep > 1:
@@ -185,7 +196,8 @@ def decode_attention(cfg: ModelConfig, q, cache_k, cache_v, pos,
         s = jnp.einsum("bqgrd,bkgd->bgrqk", qg.astype(jnp.float32),
                        cache_k.astype(jnp.float32)) * cfg.hd ** -0.5
         k_ids = jnp.arange(S)[None, None, None, None, :]
-        valid = (k_ids <= pos) | (pos >= S)
+        pc = _pos_col(pos, s.ndim)
+        valid = (k_ids <= pc) | (pc >= S)
         s = jnp.where(valid, s, -1e30)
         p = jax.nn.softmax(s, axis=-1)
         o = jnp.einsum("bgrqk,bkgd->bqgrd", p,
@@ -202,7 +214,8 @@ def decode_attention(cfg: ModelConfig, q, cache_k, cache_v, pos,
     s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
                    k.astype(jnp.float32)) * cfg.hd ** -0.5
     k_ids = jnp.arange(S)[None, None, None, :]
-    valid = (k_ids <= pos) | (pos >= S)
+    pc = _pos_col(pos, s.ndim)
+    valid = (k_ids <= pc) | (pc >= S)
     s = jnp.where(valid, s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
@@ -214,15 +227,20 @@ def decode_step(cfg: ModelConfig, params: Params, token, cache,
     """token: (B, 1) int; cache from kv_cache_init. Returns (logits, cache).
 
     The dry-run's ``serve_step``: one new token against a seq_len-deep KV
-    cache (decode_32k / long_500k cells).
+    cache (decode_32k / long_500k cells). ``cache["pos"]`` may be a scalar
+    (lock-step: all rows share one position) or a (B,) vector (continuous-
+    batching serving: each slot carries its own position; pad-token steps
+    on other slots never advance or overwrite this slot's rows).
     """
     from .common import kv_cache_append_layer
 
     B = token.shape[0]
     pos = cache["pos"]
-    positions = jnp.broadcast_to(pos[None, None], (B, 1))
+    pos_b = (jnp.broadcast_to(pos[None], (B,)) if jnp.ndim(pos) == 0
+             else pos)
+    positions = pos_b[:, None]
     if cfg.mrope_sections:
-        positions = jnp.broadcast_to(pos[None, None, None], (B, 3, 1))
+        positions = jnp.broadcast_to(pos_b[:, None, None], (B, 3, 1))
     x = embed_tokens(cfg, params, token)
 
     def scan_body(carry, layer_in):
@@ -254,12 +272,25 @@ def decode_step(cfg: ModelConfig, params: Params, token, cache,
 
 
 def prefill(cfg: ModelConfig, params: Params, tokens, shard_fn=_noshard,
-            ffn_fn=None):
+            ffn_fn=None, lengths=None):
     """Full-sequence forward that also returns the populated KV cache.
-    (Windowed models cache only the trailing window.)"""
+    (Windowed models cache only the trailing window.)
+
+    ``lengths`` (B,) enables right-padded batched prefill (the serving
+    path): each row's logits are taken at its own last real token and the
+    returned ``cache["pos"]`` is the per-row length vector. Causality makes
+    the pad tail inert for the real prefix; K/V rows past a row's length
+    are garbage but sit above ``pos`` and are therefore masked (and later
+    overwritten) during decode. Windowed models must prefill exact-length
+    (the trailing-window crop would otherwise capture pad rows).
+    """
     from .common import kv_cache_init
 
     B, T = tokens.shape
+    if lengths is not None and cfg.sliding_window:
+        raise ValueError(
+            "padded prefill (lengths=...) is unsupported for sliding-window "
+            "models: prefill exact-length per row instead")
     positions = _default_positions(cfg, B, T)
     x = embed_tokens(cfg, params, tokens)
     caches_k, caches_v = [], []
@@ -289,8 +320,15 @@ def prefill(cfg: ModelConfig, params: Params, tokens, shard_fn=_noshard,
     x = norm(x, params["final_ln"], params.get("final_ln_b"), kind=cfg.norm)
     head = (params["embed"].T if cfg.tie_embeddings
             else params["lm_head"]).astype(x.dtype)
-    logits = jnp.einsum("bd,dv->bv", x[:, -1], head)
-    cache = {"k": ck, "v": cv,
-             "pos": jnp.asarray(min(T, cfg.sliding_window) if
-                                cfg.sliding_window else T, jnp.int32)}
+    if lengths is None:
+        logits = jnp.einsum("bd,dv->bv", x[:, -1], head)
+        pos = jnp.asarray(min(T, cfg.sliding_window) if
+                          cfg.sliding_window else T, jnp.int32)
+    else:
+        lengths = jnp.asarray(lengths, jnp.int32)
+        last = jnp.clip(lengths - 1, 0, T - 1)
+        x_last = jnp.take_along_axis(x, last[:, None, None], axis=1)[:, 0]
+        logits = jnp.einsum("bd,dv->bv", x_last, head)
+        pos = lengths                                    # (B,) per-slot
+    cache = {"k": ck, "v": cv, "pos": pos}
     return logits, cache

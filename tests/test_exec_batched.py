@@ -1,0 +1,151 @@
+"""Batched (leading-batch) execution mode of the compiled chain engine:
+differential vs the per-sample compiled path, bucketed compile-cache
+accounting, and the exec.batch primitives."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.interpreter import ChainExecutor, init_chain_params
+from repro.exec import batch_bucket, compile_chain, pad_leading, unpad_leading
+from repro.models import cnn, lm_chain
+from repro.models.common import ModelConfig
+
+TOL = dict(rtol=1e-4, atol=1e-4)
+
+
+def _tiny_cfg(**kw):
+    base = dict(name="tiny", family="dense", n_layers=1, d_model=16,
+                n_heads=2, n_kv_heads=2, d_ff=32, vocab=64)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def _batched(inputs, n, seed=0):
+    key = jax.random.PRNGKey(seed)
+    return {k: jax.random.normal(jax.random.fold_in(key, i),
+                                 (n,) + tuple(v.shape), jnp.float32)
+            for i, (k, v) in enumerate(sorted(inputs.items()))}
+
+
+def _assert_rows_match_per_sample(eng, batched, params):
+    got = eng(batched, params)
+    n = next(iter(batched.values())).shape[0]
+    for j in range(n):
+        one = eng({k: v[j] for k, v in batched.items()}, params)
+        for o in one:
+            np.testing.assert_allclose(
+                np.asarray(got[o][j]), np.asarray(one[o]),
+                err_msg=f"row {j} output {o}", **TOL)
+
+
+# ---------------------------------------------------------------------------
+# bucketing primitives
+# ---------------------------------------------------------------------------
+def test_batch_bucket_ladder():
+    assert [batch_bucket(n) for n in (1, 2, 3, 4, 5, 7, 8, 9)] == \
+        [1, 2, 4, 4, 8, 8, 8, 16]
+    assert batch_bucket(3, min_bucket=8) == 8
+    with pytest.raises(ValueError):
+        batch_bucket(0)
+
+
+def test_pad_unpad_roundtrip():
+    x = {"a": jnp.arange(6).reshape(3, 2), "b": jnp.ones((3,))}
+    p = pad_leading(x, 4)
+    assert p["a"].shape == (4, 2) and p["b"].shape == (4,)
+    assert float(p["a"][3].sum()) == 0.0
+    u = unpad_leading(p, 3)
+    np.testing.assert_array_equal(np.asarray(u["a"]), np.asarray(x["a"]))
+
+
+# ---------------------------------------------------------------------------
+# batched vs per-sample compiled execution
+# ---------------------------------------------------------------------------
+def test_lm_block_batched_matches_per_sample():
+    ch = lm_chain.block_chain(_tiny_cfg(), 2, 8)
+    ex = ChainExecutor(ch)
+    params = ex.init_params(jax.random.PRNGKey(0))
+    eng = compile_chain(ch)
+    _assert_rows_match_per_sample(eng, _batched(ch_inputs(ch), 3), params)
+
+
+def ch_inputs(chain):
+    return cnn.random_inputs(chain, 1)
+
+
+def test_batched_matches_oracle_rows():
+    """Batched rows vs the ORACLE per sample (not just engine-vs-engine)."""
+    ch = lm_chain.block_chain(_tiny_cfg(), 2, 8)
+    ex = ChainExecutor(ch)
+    params = ex.init_params(jax.random.PRNGKey(0))
+    eng = compile_chain(ch)
+    batched = _batched(ch_inputs(ch), 2)
+    got = eng(batched, params)
+    for j in range(2):
+        ref = ex({k: v[j] for k, v in batched.items()}, params)
+        for o in ref:
+            np.testing.assert_allclose(np.asarray(got[o][j]),
+                                       np.asarray(ref[o]), err_msg=o, **TOL)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("name", list(cnn.ZOO))
+def test_zoo_batched_matches_per_sample(name):
+    chain = cnn.build(name, reduced=True, batch=1)
+    params = init_chain_params(chain, jax.random.PRNGKey(0))
+    eng = compile_chain(chain)
+    _assert_rows_match_per_sample(eng, _batched(ch_inputs(chain), 2), params)
+
+
+def test_batched_keep_all():
+    ch = lm_chain.block_chain(_tiny_cfg(), 2, 8)
+    ex = ChainExecutor(ch)
+    params = ex.init_params(jax.random.PRNGKey(0))
+    eng = compile_chain(ch)
+    batched = _batched(ch_inputs(ch), 2)
+    got = eng(batched, params, keep_all=True)
+    one = eng({k: v[0] for k, v in batched.items()}, params, keep_all=True)
+    for o in one:
+        got_o = got[o]
+        if got_o.ndim == one[o].ndim:        # params broadcast un-batched
+            continue
+        np.testing.assert_allclose(np.asarray(got_o[0]), np.asarray(one[o]),
+                                   err_msg=o, **TOL)
+
+
+# ---------------------------------------------------------------------------
+# bucketed compile cache: #compiles == #buckets, not #batch-sizes
+# ---------------------------------------------------------------------------
+def test_bucketed_cache_compile_count():
+    ch = lm_chain.block_chain(_tiny_cfg(), 2, 8)
+    params = ChainExecutor(ch).init_params(jax.random.PRNGKey(0))
+    eng = compile_chain(ch)
+    sizes = [1, 2, 3, 4, 5, 3, 2, 5, 4, 1]
+    for n in sizes:
+        eng(_batched(ch_inputs(ch), n, seed=n), params)
+    want_buckets = sorted({batch_bucket(n) for n in sizes})
+    assert eng.batch_buckets == want_buckets == [1, 2, 4, 8]
+    assert eng.batch_compiles == len(want_buckets)
+    # exact-shape calls bypass the batched cache entirely
+    eng(ch_inputs(ch), params)
+    assert eng.batch_compiles == len(want_buckets)
+
+
+def test_batched_shape_validation():
+    ch = lm_chain.block_chain(_tiny_cfg(), 2, 8)
+    params = ChainExecutor(ch).init_params(jax.random.PRNGKey(0))
+    eng = compile_chain(ch)
+    with pytest.raises(ValueError, match="batch-extended"):
+        eng({"x": jnp.zeros((2, 8, 17))}, params)      # trailing mismatch
+    with pytest.raises(ValueError, match="batch-extended"):
+        eng({"x": jnp.zeros((3, 2, 2, 8, 16))}, params)  # two extra axes
+
+
+def test_plan_signature_stable():
+    ch = lm_chain.block_chain(_tiny_cfg(), 2, 8)
+    a = compile_chain(ch)
+    b = compile_chain(lm_chain.block_chain(_tiny_cfg(), 2, 8))
+    assert a.signature and a.signature == b.signature
+    c = compile_chain(lm_chain.block_chain(_tiny_cfg(), 2, 16))
+    assert c.signature != a.signature

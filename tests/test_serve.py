@@ -1,0 +1,163 @@
+"""Serving regressions: continuous batching through repro.exec.serving.
+
+Pin down the two historical corruption bugs (cross-slot cache writes under
+global position bookkeeping; first-token seeding from another request's —
+or no — logits) plus the corrected stats surface."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.serve import Request, Server, sequential_reference
+
+ARCH = "tinyllama-1.1b"
+
+
+def _mk(slots=2, max_len=48, **kw):
+    return Server(ARCH, smoke=True, slots=slots, max_len=max_len, **kw)
+
+
+def _prompts(n, rng=None, lo=2, hi=6):
+    rng = rng or np.random.default_rng(0)
+    srv_vocab = 256                     # tinyllama smoke vocab
+    return [rng.integers(0, srv_vocab, rng.integers(lo, hi)).tolist()
+            for _ in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# _admit: first token comes from the request's OWN prefill logits
+# ---------------------------------------------------------------------------
+def test_admit_two_requests_one_call_seed_own_logits():
+    """Two requests admitted in ONE call must each seed from their own
+    prefill row (the old driver reused the last prompt's logits for all)."""
+    prompts = _prompts(2, lo=3, hi=7)
+    assert prompts[0] != prompts[1]
+    srv = _mk(slots=2)
+    for i, p in enumerate(prompts):
+        srv.submit(Request(rid=i, prompt=list(p), max_new=1))
+    srv.tick()                          # one _admit over both
+    got = {r.rid: r.out for r in srv.finished}
+    for i, p in enumerate(prompts):
+        ref = _mk(slots=1)
+        ref.submit(Request(rid=0, prompt=list(p), max_new=1))
+        ref.run_until_drained()
+        assert got[i] == ref.finished[0].out, f"request {i} seeded wrong"
+
+
+def test_empty_prompt_bos_seeded_not_nameerror():
+    """Empty prompt: defined behavior (BOS seed), and the first admission
+    must not blow up on unbound logits (the old driver's NameError)."""
+    srv = _mk(slots=2)
+    srv.submit(Request(rid=0, prompt=[], max_new=3))
+    rep = srv.run_until_drained()
+    assert rep["requests"] == 1
+    assert len(srv.finished[0].out) == 3
+    assert srv.finished[0].prompt == [0]          # seeded BOS
+    # matches an explicit-BOS request byte for byte
+    ref = _mk(slots=2)
+    ref.submit(Request(rid=0, prompt=[0], max_new=3))
+    ref.run_until_drained()
+    assert srv.finished[0].out == ref.finished[0].out
+
+
+def test_empty_prompt_rejected_without_bos():
+    srv = _mk(slots=1, bos_id=None)
+    with pytest.raises(ValueError, match="empty prompt"):
+        srv.submit(Request(rid=0, prompt=[], max_new=2))
+
+
+def test_oversized_request_rejected_at_submit():
+    srv = _mk(slots=1, max_len=16)
+    with pytest.raises(ValueError, match="max_len"):
+        srv.submit(Request(rid=0, prompt=[1] * 10, max_new=10))
+
+
+def test_nonpositive_max_new_rejected_at_submit():
+    srv = _mk(slots=1)
+    for bad in (0, -3):
+        with pytest.raises(ValueError, match="max_new"):
+            srv.submit(Request(rid=0, prompt=[1, 2], max_new=bad))
+
+
+# ---------------------------------------------------------------------------
+# per-slot isolation: staggered == sequential, byte for byte
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_staggered_byte_identical_to_sequential():
+    rng = np.random.default_rng(7)
+    prompts = _prompts(6, rng)
+    reqs = [Request(rid=i, prompt=list(p), max_new=6)
+            for i, p in enumerate(prompts)]
+    srv = _mk(slots=3, max_len=64)
+    rep = srv.run_workload(reqs, stagger_ticks=2)
+    assert rep["requests"] == 6
+    got = {r.rid: r.out for r in srv.finished}
+    ref = sequential_reference(
+        ARCH, [Request(rid=i, prompt=list(p), max_new=6)
+               for i, p in enumerate(prompts)], smoke=True, max_len=64)
+    for i in range(6):
+        assert got[i] == ref[i], f"request {i} diverged under churn"
+
+
+@pytest.mark.slow
+def test_slot_reuse_under_churn_does_not_exhaust_max_len():
+    """Many short requests through few slots: per-slot positions must not
+    accumulate globally (the old driver ran out of max_len and failed to
+    drain)."""
+    srv = _mk(slots=2, max_len=24)
+    reqs = [Request(rid=i, prompt=[1 + i % 5, 2, 3], max_new=4)
+            for i in range(10)]
+    rep = srv.run_workload(reqs, stagger_ticks=1)
+    assert rep["requests"] == 10
+    assert all(len(r.out) == 4 for r in srv.finished)
+
+
+def test_splice_and_reset_touch_only_their_slot():
+    from repro.exec.serving import ServeEngine
+    from repro import configs
+    from repro.models import api
+
+    cfg = configs.get(ARCH, smoke=True)
+    model = api.build(cfg)
+    eng = ServeEngine(model, slots=3, max_len=16)
+    key = jax.random.PRNGKey(0)
+    cache = {k: jax.random.normal(jax.random.fold_in(key, i),
+                                  v.shape).astype(v.dtype)
+             for i, (k, v) in enumerate(sorted(eng.init_state().items()))}
+    cache["pos"] = jnp.array([3, 5, 7], jnp.int32)
+    params = model.init(jax.random.PRNGKey(1))
+    _lg, rows, _n = eng.prefill(params, [[4, 5]])
+    spliced = eng.splice(cache, 1, rows, 0)
+    for k in cache:
+        ax = eng.axes[k]
+        for s in (0, 2):                      # untouched slots, bitwise
+            np.testing.assert_array_equal(
+                np.asarray(jnp.take(spliced[k], s, axis=ax)),
+                np.asarray(jnp.take(cache[k], s, axis=ax)), err_msg=k)
+    assert int(spliced["pos"][1]) == 2        # spliced slot got its length
+    reset = eng.reset_slot(spliced, 1)
+    assert float(jnp.abs(jnp.take(reset["k"], 1, axis=1)).sum()) == 0.0
+    np.testing.assert_array_equal(
+        np.asarray(jnp.take(reset["k"], 0, axis=1)),
+        np.asarray(jnp.take(spliced["k"], 0, axis=1)))
+
+
+# ---------------------------------------------------------------------------
+# stats: prefill+decode token counts, queue-wait and TTFT percentiles
+# ---------------------------------------------------------------------------
+def test_report_token_accounting_and_latency_split():
+    srv = _mk(slots=2, max_len=48)
+    reqs = [Request(rid=i, prompt=[1, 2, 3], max_new=4) for i in range(3)]
+    rep = srv.run_workload(reqs, stagger_ticks=0)
+    assert rep["requests"] == 3
+    assert rep["tokens_prefill"] == 9
+    assert rep["tokens_out"] == 12                 # 3 requests x max_new
+    assert rep["tokens_decode"] == 9               # first token from prefill
+    assert rep["tokens_total"] == rep["tokens_prefill"] + rep["tokens_out"]
+    assert rep["tok_per_s"] > rep["tok_per_s_out"] > 0
+    for k in ("p50_queue_wait_s", "p99_queue_wait_s", "p50_ttft_s",
+              "p99_ttft_s", "p50_latency_s", "p99_latency_s"):
+        assert k in rep and rep[k] >= 0.0
+    # TTFT includes queue wait but precedes full completion
+    assert rep["p50_queue_wait_s"] <= rep["p50_ttft_s"] <= \
+        rep["p50_latency_s"]
