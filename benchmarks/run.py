@@ -23,10 +23,11 @@ import time
 
 # "simval" (the cycle-level sim sweep) is not in ALL: the default analytic
 # run stays pure closed-form; select it with --engine sim or --only simval.
-# "exec_micro" / "dse_micro" / "serve_micro" (the FAST-tier smokes)
-# likewise only run via --only.
+# "exec_micro" / "dse_micro" / "serve_micro" / "exec_sharded_micro" (the
+# FAST-tier smokes) likewise only run via --only.
 ALL = ("table1", "fig12", "fig13", "fig14", "fig15", "fusion", "fig18",
-       "fig20", "kernels", "roofline", "exec", "dse", "serve")
+       "fig20", "kernels", "roofline", "exec", "exec_sharded", "dse",
+       "serve")
 
 
 def _run(name, fn):
@@ -140,6 +141,10 @@ def main():
                     help="analytic: closed-form cost model over every "
                          "table/figure; sim: cycle-level tiled simulator "
                          "cross-validated against the analytic model")
+    ap.add_argument("--mesh", default="4x2",
+                    help="mesh for the exec_sharded cells, 'D' or 'DxM' "
+                         "(the devices are faked in a subprocess via "
+                         "--xla_force_host_platform_device_count)")
     args = ap.parse_args()
     if args.only:
         want = args.only.split(",")
@@ -162,6 +167,9 @@ def main():
         "kernels": bench_kernels, "roofline": bench_roofline,
         "simval": pt.sim_validation,
         "exec": exec_bench.exec_speedup, "exec_micro": exec_bench.exec_micro,
+        "exec_sharded": lambda: exec_bench.exec_sharded(mesh=args.mesh),
+        "exec_sharded_micro":
+            lambda: exec_bench.exec_sharded_micro(mesh=args.mesh),
         "dse": dse_bench.dse_search, "dse_micro": dse_bench.dse_micro,
         "serve": serve_bench.serve_bench,
         "serve_micro": serve_bench.serve_micro,
@@ -186,7 +194,8 @@ def main():
     # would otherwise clobber the curated rows with laptop numbers)
     merged.update({k: {"rows": v[0], "summary": v[1]}
                    for k, v in results.items()
-                   if k not in ("exec_micro", "dse_micro", "serve_micro")})
+                   if k not in ("exec_micro", "dse_micro", "serve_micro",
+                                "exec_sharded_micro")})
     with open(out, "w") as f:
         json.dump(merged, f, indent=1, default=str)
     print(f"\nwrote {os.path.abspath(out)}")
@@ -207,6 +216,13 @@ def main():
             "serve_micro: continuous-batching outputs diverge from "
             "sequential single-slot decode (cache corruption) or batched "
             "serving lost its throughput edge over per-request execution")
+    if "exec_sharded_micro" in results and not results[
+            "exec_sharded_micro"][1].get("ok"):
+        raise SystemExit(
+            "exec_sharded_micro: the sharded compiled engine diverged "
+            "from the single-device engine (allclose, rtol 1e-4) on the "
+            "zoo net / LM blocks, or lost its >1 data-parallel throughput "
+            "scaling over one device")
 
 
 if __name__ == "__main__":

@@ -8,14 +8,19 @@
 #                                   than the oracle interpreter), the
 #                                   design-space-explorer smoke (fails if no
 #                                   frontier is produced or the best point
-#                                   violates the analytic-vs-sim agreement)
-#                                   and the serving smoke (drains a small
+#                                   violates the analytic-vs-sim agreement),
+#                                   the serving smoke (drains a small
 #                                   staggered workload through the compiled
 #                                   serving programs; fails on cache
 #                                   corruption — outputs diverging from
 #                                   sequential single-slot decode — or on a
 #                                   throughput regression vs per-request
-#                                   execution)
+#                                   execution) and the sharded-engine smoke
+#                                   (8 faked host devices in a subprocess;
+#                                   fails if the mesh-compiled program
+#                                   diverges from the single-device engine
+#                                   on a zoo net / the LM blocks, or loses
+#                                   its >1 data-parallel scaling)
 #   CI_INSTALL=1 ./scripts/ci.sh    pip install -e '.[dev]' first (networked
 #                                   CI; the dev extras declare pytest and
 #                                   hypothesis — without them the property
@@ -41,8 +46,11 @@ if [ "${FAST:-0}" = "1" ]; then
   # smoke gates: benchmarks.run exits nonzero when the compiled engine does
   # not beat the interpreter (exec_micro), when the design-space explorer
   # produces no frontier / fails the analytic-vs-sim agreement (dse_micro),
-  # or when continuous-batching serving corrupts caches / regresses below
-  # per-request throughput (serve_micro)
+  # when continuous-batching serving corrupts caches / regresses below
+  # per-request throughput (serve_micro), or when the mesh-sharded engine
+  # diverges from the single-device one / loses >1 data-parallel scaling
+  # on faked host devices (exec_sharded_micro)
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
-    python -m benchmarks.run --only exec_micro,dse_micro,serve_micro
+    python -m benchmarks.run \
+    --only exec_micro,dse_micro,serve_micro,exec_sharded_micro
 fi

@@ -12,6 +12,7 @@ from .engine import CompiledChain, CompileOptions, compile_chain
 from .dispatch import dispatch_gconv, plan_chain
 from .lowering import classify_dim, dim_classes
 from .serving import ServeEngine
+from .shardplan import ShardPlan, derive_plan
 
 
 def execute_gconv(node, x, k=None, operands=None, backend: str = "jnp"):
@@ -27,4 +28,4 @@ def execute_gconv(node, x, k=None, operands=None, backend: str = "jnp"):
 __all__ = ["CompiledChain", "CompileOptions", "compile_chain",
            "dispatch_gconv", "plan_chain", "classify_dim", "dim_classes",
            "execute_gconv", "BucketedCache", "batch_bucket", "pad_leading",
-           "unpad_leading", "ServeEngine"]
+           "unpad_leading", "ServeEngine", "ShardPlan", "derive_plan"]

@@ -16,6 +16,14 @@ serving programs in :mod:`repro.exec.serving` key theirs on
 ``(batch bucket, length bucket)``. Caches are per-program-family (one per
 engine), so the program identity (``CompiledChain.signature``) stays out
 of the key; it is introspection/reporting metadata.
+
+Mesh-aware mode (``compile_chain(mesh=...)`` / ``ServeEngine(mesh=...)``)
+threads through here as the ``min_bucket`` floor: sharded engines bucket
+with ``min_bucket = data-axis size``, so every bucket is
+``dp_size * 2**k`` and the leading axis ALWAYS divides the data-parallel
+mesh axis — the sharded batched program never needs a padding-vs-sharding
+special case, and :func:`pad_leading`'s zero rows stay inert per replica
+exactly as they are on one device (row independence, see exec.lowering).
 """
 from __future__ import annotations
 
@@ -26,7 +34,13 @@ import jax.numpy as jnp
 
 
 def batch_bucket(n: int, min_bucket: int = 1) -> int:
-    """Smallest power-of-two >= n (and >= min_bucket)."""
+    """Smallest ``min_bucket * 2**k`` >= n (power-of-two ladder).
+
+    Contract (property-tested in tests/test_exec_batched.py): the result
+    is >= n, >= min_bucket, exactly ``min_bucket`` times a power of two,
+    monotone in ``n``, and idempotent — so with ``min_bucket`` set to a
+    mesh's data-axis size, every bucket divides that axis.
+    """
     if n < 1:
         raise ValueError(f"batch size must be >= 1, got {n}")
     b = max(1, min_bucket)

@@ -47,10 +47,13 @@ class Plan:
     dispatch: Dict[str, str]             # every original node -> backend tag
     signature: str = ""                  # stable program identity: chain
                                          # name + input shapes + per-step
-                                         # backend decisions. Introspection
-                                         # /reporting only — compile caches
-                                         # are per-engine, so their keys
-                                         # need only (keep_all, bucket)
+                                         # backend decisions (the engine
+                                         # appends mesh + tensor-parallel
+                                         # splits for sharded programs).
+                                         # Introspection/reporting only —
+                                         # compile caches are per-engine,
+                                         # so their keys need only
+                                         # (keep_all, bucket)
 
 
 # ---------------------------------------------------------------------------

@@ -19,6 +19,17 @@ Usage mirrors the oracle::
     params = eng.init_params(jax.random.PRNGKey(0))
     outs = eng(inputs, params)            # dict of chain outputs
     eng.dispatch                          # node -> backend table
+
+Mesh-aware mode: ``compile_chain(chain, mesh=mesh)`` derives a per-chain
+:class:`~repro.exec.shardplan.ShardPlan` (data-parallel leading batch
+axis, tensor-parallel grouped matmuls, divisibility-guarded fallback to
+replication — the same policy as ``launch/sharding.py`` via
+``repro.shardpolicy``) and compiles the SAME program against the mesh:
+exact-shape calls jit with the plan's in-shardings and run the
+tensor-parallel-wrapped steps; batched calls shard the leading bucket
+axis over the data bundle (the bucket floor rises to the data-axis size
+so every bucket divides). Differentially tested against the single-device
+engine on faked host devices (tests/test_exec_sharded.py).
 """
 from __future__ import annotations
 
@@ -49,7 +60,7 @@ class CompiledChain:
 
     def __init__(self, source: Chain, chain: Chain, report: FusionReport,
                  partitions: List[ExecGroup], plan: Plan,
-                 options: CompileOptions):
+                 options: CompileOptions, shard_plan=None):
         self.source = source
         self.chain = chain                   # the fused chain actually run
         self.fusion_report = report
@@ -58,6 +69,17 @@ class CompiledChain:
         self.steps = plan.steps
         self.dispatch: Dict[str, str] = plan.dispatch
         self.options = options
+        # mesh-aware mode: the ShardPlan plus the step list with the
+        # tensor-parallel matmuls re-lowered to their column/row split
+        self.shard_plan = shard_plan
+        self.mesh = shard_plan.mesh if shard_plan is not None else None
+        if shard_plan is not None:
+            from .shardplan import wrap_steps
+            self._steps_sharded = wrap_steps(chain, self.steps, shard_plan)
+            self._min_bucket = shard_plan.dp_size
+        else:
+            self._steps_sharded = self.steps
+            self._min_bucket = 1
         self._fns: Dict[bool, object] = {}
         # leading-batch execution: one vmapped program per (keep_all,
         # batch bucket), cached per engine (exec.batch.BucketedCache)
@@ -69,7 +91,7 @@ class CompiledChain:
         return init_chain_params(self.chain, key, scale)
 
     # -- execution ------------------------------------------------------
-    def _execute(self, inputs, params, keep_all: bool):
+    def _execute(self, inputs, params, keep_all: bool, steps=None):
         """``keep_all`` mirrors the oracle's contract (the whole
         environment: inputs, params and every produced node) — except
         that §4.3-fused members and segment-interior nodes do not exist
@@ -77,7 +99,7 @@ class CompiledChain:
         point of fusing them; see ``dispatch`` for the ``fused:`` tags)."""
         env: Dict[str, jnp.ndarray] = dict(inputs)
         env.update(params)
-        for step in self.steps:
+        for step in (self.steps if steps is None else steps):
             env[step.name] = step.run(env)
         if keep_all:
             return env
@@ -87,7 +109,16 @@ class CompiledChain:
     def _fn(self, keep_all: bool):
         fn = self._fns.get(keep_all)
         if fn is None:
-            if self.options.jit:
+            if self.shard_plan is not None:
+                run = (lambda inputs, params, _k=keep_all:
+                       self._execute(inputs, params, _k,
+                                     self._steps_sharded))
+                if self.options.jit:
+                    run = jax.jit(run, in_shardings=(
+                        self.shard_plan.input_shardings(),
+                        self.shard_plan.param_shardings()))
+                fn = run
+            elif self.options.jit:
                 fn = jax.jit(
                     lambda inputs, params, _k=keep_all:
                     self._execute(inputs, params, _k))
@@ -98,11 +129,21 @@ class CompiledChain:
         return fn
 
     def _build_batched(self, key):
-        keep_all, _bucket = key          # bucket fixes the traced shape;
+        keep_all, bucket = key           # bucket fixes the traced shape;
         run = (lambda ins, ps, _k=keep_all:   # one compile per cache entry
                self._execute(ins, ps, _k))
         fn = jax.vmap(run, in_axes=(0, None))
-        return jax.jit(fn) if self.options.jit else fn
+        if not self.options.jit:
+            return fn
+        if self.shard_plan is not None:
+            # data-parallel replicas over the bucket axis: the tensor-
+            # parallel step rewrites stay out of the vmapped program — the
+            # mesh's contribution here is the leading-axis sharding (the
+            # bucket floor is the dp size, so the axis always divides)
+            return jax.jit(fn, in_shardings=(
+                self.shard_plan.batched_input_shardings(self.chain, bucket),
+                self.shard_plan.param_shardings()))
+        return jax.jit(fn)
 
     def _batch_size(self, ins: Dict[str, jnp.ndarray]) -> Optional[int]:
         """None for exact chain shapes; N when every input carries one
@@ -142,7 +183,7 @@ class CompiledChain:
         n = self._batch_size(ins)
         if n is None:
             return dict(self._fn(keep_all)(ins, ps))
-        bucket = batch_bucket(n)
+        bucket = batch_bucket(n, self._min_bucket)
         fn = self._batched.get((keep_all, bucket))
         out = fn(pad_leading(ins, bucket), ps)
         return dict(unpad_leading(out, n))
@@ -160,9 +201,17 @@ class CompiledChain:
     @property
     def signature(self) -> str:
         """Stable program identity (chain name + input shapes + dispatch
-        decisions); introspection/reporting metadata — equal-signature
-        engines run the same program."""
-        return self._plan.signature
+        decisions, plus the mesh and tensor-parallel splits when sharded);
+        introspection/reporting metadata — equal-signature engines run the
+        same program."""
+        sig = self._plan.signature
+        if self.shard_plan is not None:
+            mesh_s = "x".join(f"{a}{n}"
+                              for a, n in self.shard_plan.mesh.shape.items())
+            tp_s = ",".join(f"{n}={m}"
+                            for n, m in sorted(self.shard_plan.step_tp.items()))
+            sig += f"|mesh={mesh_s}|tp={tp_s}"
+        return sig
 
     # -- introspection --------------------------------------------------
     def backend_histogram(self) -> Dict[str, int]:
@@ -182,16 +231,25 @@ class CompiledChain:
         return "\n".join(lines)
 
 
-def compile_chain(chain: Chain, **options) -> CompiledChain:
-    """Compile a chain for execution. See :class:`CompileOptions`."""
+def compile_chain(chain: Chain, mesh=None, **options) -> CompiledChain:
+    """Compile a chain for execution. See :class:`CompileOptions`.
+
+    ``mesh``: a ``jax.sharding.Mesh`` to compile a SHARDED program against
+    (see the module docstring); ``None`` keeps the single-device engine.
+    """
     opts = CompileOptions(**options)
     chain.validate()
     fused, report, parts = partition_chain(chain, fuse=opts.fuse)
     plan = plan_chain(fused, backend=opts.backend, mxu_min=opts.mxu_min,
                       segments=opts.segments)
+    shard_plan = None
+    if mesh is not None and not mesh.empty:
+        from .shardplan import derive_plan
+        shard_plan = derive_plan(fused, plan.dispatch, mesh)
     # §4.3-fused nodes no longer exist in the fused chain; record them in
     # the dispatch table so every ORIGINAL node has an entry
     for host, members in report.groups.items():
         for m in members:
             plan.dispatch.setdefault(m, f"fused:{host}")
-    return CompiledChain(chain, fused, report, parts, plan, opts)
+    return CompiledChain(chain, fused, report, parts, plan, opts,
+                         shard_plan)

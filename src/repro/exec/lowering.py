@@ -38,6 +38,17 @@ gather across the (abstracted) batch axis. (a) is what lets one bucket
 compile serve every batch size in the bucket; (b) is what makes zero-pad
 rows inert, in the same way per-slot positions make pad-token decode
 ticks inert in the serving programs (exec.serving).
+
+Row-independence is ALSO the sharding invariant the mesh-aware mode
+(``compile_chain(mesh=...)``, :mod:`repro.exec.shardplan`) relies on:
+because no lowering communicates across the leading batch axis, sharding
+that axis over the mesh's "data" bundle partitions the program into
+independent per-device replicas — GSPMD inserts no batch-axis collectives,
+so the sharded program computes bit-for-bit the same per-row arithmetic as
+the single-device one. The only collective a chain program ever needs is
+the explicit ``psum`` of a row-split tensor-parallel grouped matmul
+(:func:`lower_grouped_matmul` with ``tp=...``), which changes reduction
+order but stays within the engine's differential-test tolerance.
 """
 from __future__ import annotations
 
@@ -331,8 +342,53 @@ def _fused_matmul_seq(seq, dims, g_ix, m_ix, c_ix, stage, lookup):
     return tuple(triples), tuple(arrays)
 
 
+def _tp_matmul(xb, kb, tp):
+    """Tensor-parallel ``(G,M,K) @ (G,K,N)`` under a ``shard_map``.
+
+    column: kernel sharded on N (the Cout/channel GCONV axis) — each shard
+            computes its own output columns, no collective; the result
+            stays N-sharded for downstream GSPMD propagation.
+    row:    both operands sharded on K — partial products need the one
+            explicit collective in the engine, a psum over the model axis.
+
+    The data-parallel axis rides along on G (grouped/batched kernels) or
+    M (plain batch rows) when it divides — ``dp_g``/``dp_m`` come from the
+    plan — so DP + TP compose without gathers. Operands are explicitly
+    constrained to the in_specs first: shard_map TRUSTS (does not enforce)
+    that an unmentioned mesh axis means "replicated along it", and under
+    data parallelism the operands arrive data-sharded — skipping the
+    constraint silently computes garbage (caught by the zoo differential
+    sweep on a (4, 2) mesh).
+
+    Divisibility of N/K over the model axis is guaranteed by the plan
+    (repro.exec.shardplan); an axis that doesn't divide never reaches
+    here.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import NamedSharding as _NS, PartitionSpec as _P
+
+    mesh, ax, mode, dp_g, dp_m = tp
+    if mode == "column":
+        x_spec = _P(dp_g, dp_m, None)
+        k_spec = _P(dp_g, None, ax)
+        out_spec = _P(dp_g, dp_m, ax)
+        mm = jnp.matmul
+    else:
+        x_spec = _P(dp_g, dp_m, ax)
+        k_spec = _P(dp_g, ax, None)
+        out_spec = _P(dp_g, dp_m, None)
+
+        def mm(xs, ks):
+            return jax.lax.psum(jnp.matmul(xs, ks), ax)
+
+    xb = jax.lax.with_sharding_constraint(xb, _NS(mesh, x_spec))
+    kb = jax.lax.with_sharding_constraint(kb, _NS(mesh, k_spec))
+    return shard_map(mm, mesh=mesh, in_specs=(x_spec, k_spec),
+                     out_specs=out_spec)(xb, kb)
+
+
 def lower_grouped_matmul(node: GConv, plan, *,
-                         pallas: bool = False) -> Callable:
+                         pallas: bool = False, tp=None) -> Callable:
     g_ix, m_ix, c_ix = plan
     dims = node.dims
     G = int(np.prod([dims[i].ng for i in g_ix])) if g_ix else 1
@@ -386,6 +442,8 @@ def lower_grouped_matmul(node: GConv, plan, *,
                             for nm, c, s in epi_seq)
             y = gconv_matmul(xb, kb, prologue=pro_seq, epilogue=epi_seq,
                              operands=pro_ops + epi_ops)
+        elif tp is not None:
+            y = _tp_matmul(xb, kb, tp)                       # (G, M, N)
         else:
             y = jnp.matmul(xb, kb)                           # (G, M, N)
         out_axes = ([dims[i].ng for i in g_ix]

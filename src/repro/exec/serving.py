@@ -38,7 +38,9 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
+from .. import shardpolicy as policy
 from .batch import BucketedCache, batch_bucket
 
 MIN_LEN_BUCKET = 8      # shortest prompt-length bucket (compile-count floor)
@@ -58,29 +60,79 @@ class ServeEngine:
                   into their slots, ONE jitted scatter over the whole
                   admission (``splice_many``); ``reset_slot`` zeroes a
                   slot on release (also jitted).
+
+    Mesh mode (``mesh=``): the engine runs data-parallel replicas of its
+    one fixed-shape decode program — every program (decode, prefill,
+    splice, reset) shards the SLOT axis of each serve-state leaf over the
+    mesh's data bundle (the ``serve_axes`` table names the axis per leaf),
+    params replicate, and the same divisibility guard as
+    ``launch/sharding.py`` applies: a slot count the data axis doesn't
+    divide falls back to replication (``repro.shardpolicy``). Per-slot
+    row independence (the PR-4 correctness contract) is exactly what
+    makes this sound: no program communicates across the slot axis, so
+    each device decodes its own slots bit-for-bit as a single device
+    would — staggered serving under a mesh stays byte-identical to the
+    sequential single-slot reference (tests/test_exec_sharded.py).
     """
 
-    def __init__(self, model, *, slots: int, max_len: int):
+    def __init__(self, model, *, slots: int, max_len: int, mesh=None):
         self.model = model
         self.cfg = model.cfg
         self.slots = int(slots)
         self.max_len = int(max_len)
         self.axes: Dict[str, int] = dict(model.serve_axes)
-        self._decode_fn = jax.jit(model.decode_step)
+        self.mesh = None if mesh is None or mesh.empty else mesh
+        if self.mesh is not None:
+            self._dp = policy.dp_axes(self.mesh)
+            self._dp_n = policy.axis_size(self.mesh, self._dp)
+            slot_dp = self._dp if self.slots % self._dp_n == 0 else None
+            state_shape = jax.eval_shape(
+                lambda: model.serve_state_init(self.slots, self.max_len,
+                                               per_slot_pos=True))
+            self._cache_sh = {
+                k: NamedSharding(self.mesh, P(*[
+                    slot_dp if a == self.axes[k] else None
+                    for a in range(leaf.ndim)]))
+                for k, leaf in state_shape.items()}
+            self._tok_sh = NamedSharding(self.mesh, P(slot_dp, None))
+            self._decode_fn = jax.jit(
+                model.decode_step,
+                in_shardings=(None, self._tok_sh, self._cache_sh),
+                out_shardings=(None, self._cache_sh))
+            # surgery keeps the cache canonically slot-sharded so the next
+            # decode never pays a reshard
+            self._splice_fn = jax.jit(self._splice_many,
+                                      out_shardings=self._cache_sh)
+            self._reset_fn = jax.jit(self._reset_impl,
+                                     out_shardings=self._cache_sh)
+        else:
+            self._dp_n = 1
+            self._decode_fn = jax.jit(model.decode_step)
+            # slot surgery compiles once per (row-state shape, admission
+            # count) — both bucket-bounded; jitting fuses the per-leaf
+            # updates into one program instead of eager per-leaf dispatch
+            self._splice_fn = jax.jit(self._splice_many)
+            self._reset_fn = jax.jit(self._reset_impl)
         self._prefill_cache = BucketedCache(self._build_prefill)
-        # slot surgery compiles once per (row-state shape, admission count)
-        # — both bucket-bounded; jitting fuses the per-leaf updates into
-        # one program instead of eager per-leaf dispatch
-        self._splice_fn = jax.jit(self._splice_many)
-        self._reset_fn = jax.jit(self._reset_impl)
         self._batched_prefill_ok = (
             getattr(model, "prefill", None) is not None
             and not self.cfg.sliding_window)
 
     # -- state ----------------------------------------------------------
     def init_state(self):
-        return self.model.serve_state_init(self.slots, self.max_len,
-                                           per_slot_pos=True)
+        state = self.model.serve_state_init(self.slots, self.max_len,
+                                            per_slot_pos=True)
+        if self.mesh is not None:
+            state = jax.device_put(state, self._cache_sh)
+        return state
+
+    def shard_params(self, params):
+        """Replicate params across the mesh (the data-parallel serving
+        story; tensor-parallel param rules stay in launch/sharding)."""
+        if self.mesh is None:
+            return params
+        rep = jax.tree.map(lambda _: NamedSharding(self.mesh, P()), params)
+        return jax.device_put(params, rep)
 
     # -- decode: ONE program, fixed (slots, 1) shape --------------------
     def decode(self, params, tokens, cache):
@@ -93,8 +145,17 @@ class ServeEngine:
         nb, lb = key
         if lb == 0:                       # fallback: single decode step
             return jax.jit(self.model.decode_step)
-        return jax.jit(lambda params, tokens, lengths:
-                       self.model.prefill(params, tokens, lengths=lengths))
+        fn = lambda params, tokens, lengths: \
+            self.model.prefill(params, tokens, lengths=lengths)
+        if self.mesh is not None:
+            # admission rows data-parallel: nb is bucketed to a multiple
+            # of the data-axis size, so the guard only fires for meshes
+            # whose data axis is not a power of two
+            row_dp = self._dp if nb % self._dp_n == 0 else None
+            tok_sh = NamedSharding(self.mesh, P(row_dp, None))
+            len_sh = NamedSharding(self.mesh, P(row_dp))
+            return jax.jit(fn, in_shardings=(None, tok_sh, len_sh))
+        return jax.jit(fn)
 
     def prefill(self, params, prompts: Sequence[Sequence[int]]):
         """Prefill ``prompts`` together; returns (logits, row_state, n).
@@ -115,7 +176,9 @@ class ServeEngine:
                              f"{self.max_len}")
         if not self._batched_prefill_ok:
             return self._prefill_loop(params, prompts)
-        nb = batch_bucket(n)
+        # sharded engines raise the row-bucket floor to the data-axis size
+        # (see exec.batch): every admission bucket then divides the mesh
+        nb = batch_bucket(n, self._dp_n)
         # longest <= max_len (checked above), so the clamp keeps lb valid
         lb = min(batch_bucket(longest, MIN_LEN_BUCKET), self.max_len)
         tokens = np.zeros((nb, lb), np.int32)

@@ -1,8 +1,3 @@
-import os
-os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
-                           + " --xla_force_host_platform_device_count=512")
-# ^ MUST precede any jax import (device count locks at first init).
-
 """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell
 against the production mesh, prove memory fit, and extract roofline terms.
 
@@ -12,24 +7,34 @@ against the production mesh, prove memory fit, and extract roofline terms.
 
 Results are cached as JSON under results/dryrun/ (one file per cell) so
 re-runs are incremental; --force recompiles.
+
+Importing this module is side-effect free (the same contract as
+``hillclimb``, subprocess-checked in tests/test_launch.py): the
+``XLA_FLAGS`` host-device mutation happens in :func:`main`, which is safe
+because the device count locks at the first jax *initialization* — the
+module-level ``import jax`` below does not initialize a backend; the
+first device query is ``make_production_mesh`` inside :func:`run_cell`,
+long after :func:`main` has set the flag. Library callers (e.g.
+``hillclimb``) own the flag themselves before their first device query.
 """
-import argparse          # noqa: E402
-import functools         # noqa: E402
-import json              # noqa: E402
-import time              # noqa: E402
-import traceback         # noqa: E402
+import argparse
+import functools
+import json
+import os
+import time
+import traceback
 
-import jax               # noqa: E402
-import jax.numpy as jnp  # noqa: E402
-from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro import configs                       # noqa: E402
-from repro.analysis import roofline as rl       # noqa: E402
-from repro.models import api                    # noqa: E402
-from repro.optim import adamw                   # noqa: E402
-from repro.launch import sharding as shlib      # noqa: E402
-from repro.launch.mesh import make_production_mesh  # noqa: E402
-from repro.launch.train import jit_train_step   # noqa: E402
+from repro import configs
+from repro.analysis import roofline as rl
+from repro.models import api
+from repro.optim import adamw
+from repro.launch import sharding as shlib
+from repro.launch.mesh import make_production_mesh
+from repro.launch.train import jit_train_step
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                            "results", "dryrun")
@@ -295,6 +300,11 @@ def _save(path, rec):
 
 
 def main():
+    # before the first jax initialization (NOT import): the 512 fake host
+    # devices back the (16,16)/(2,16,16) production meshes on CPU hosts
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count=512")
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None, choices=list(configs.ARCHS))
     ap.add_argument("--shape", default=None, choices=list(configs.SHAPES))

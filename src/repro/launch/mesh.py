@@ -12,6 +12,10 @@ from __future__ import annotations
 
 import jax
 
+from repro.shardpolicy import dp_axes  # noqa: F401  (re-export: the policy
+# module owns the definition; launch code keeps importing it from here)
+from repro.shardpolicy import parse_mesh_spec
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
@@ -24,6 +28,20 @@ def make_debug_mesh(n_data: int = 1, n_model: int = 1):
     return jax.make_mesh((n_data, n_model), ("data", "model"))
 
 
-def dp_axes(mesh) -> tuple:
-    """The data-parallel axis bundle: ("pod","data") on multi-pod meshes."""
-    return (("pod", "data") if "pod" in mesh.axis_names else ("data",))
+def mesh_from_spec(spec: str):
+    """Parse a ``--mesh`` flag into a ("data", "model") mesh.
+
+    ``"8"`` -> (8, 1) data-parallel; ``"4x2"`` -> (4, 2). The devices must
+    already exist — on CPU hosts fake them BEFORE the first jax
+    initialization with ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
+    (the recipe every ``--mesh``-taking CLI prints on failure).
+    """
+    d, m = parse_mesh_spec(spec)
+    have = len(jax.devices())
+    if d * m > have:
+        raise RuntimeError(
+            f"--mesh {spec} needs {d * m} devices but only {have} exist; "
+            f"fake host devices with XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={d * m} (must be set "
+            f"before the first jax initialization)")
+    return make_debug_mesh(d, m)

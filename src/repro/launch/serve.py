@@ -17,9 +17,13 @@ and slot-state surgery lives in :class:`repro.exec.serving.ServeEngine`:
 Invariant (tests/test_serve.py): staggered multi-slot serving produces
 byte-identical token streams to sequential single-slot decode.
 
-On real hardware the same driver runs under the production mesh with the
-cache shardings from launch/sharding.py; here it demos at smoke scale
-(examples/serve_lm.py).
+Mesh serving: ``--mesh D`` (or ``DxM``) runs the engine's data-parallel
+mode — the slot axis of every serve-state leaf shards over the mesh's
+data axis, params replicate, and the same invariant holds per slot
+(tests/test_exec_sharded.py). On CPU hosts fake the devices first::
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+        python -m repro.launch.serve --mesh 8 --check
 """
 from __future__ import annotations
 
@@ -57,7 +61,7 @@ def _pct(xs, q):
 class Server:
     def __init__(self, arch: str, *, smoke: bool = True, slots: int = 4,
                  max_len: int = 128, greedy: bool = True,
-                 bos_id: Optional[int] = 0):
+                 bos_id: Optional[int] = 0, mesh=None):
         self.cfg = configs.get(arch, smoke=smoke)
         self.model = api.build(self.cfg)
         self.params = self.model.init(jax.random.PRNGKey(0))
@@ -69,7 +73,9 @@ class Server:
             raise NotImplementedError(
                 "serve driver demos decoder-only archs; encdec uses "
                 "encode+decode_step directly (see tests)")
-        self.engine = ServeEngine(self.model, slots=slots, max_len=max_len)
+        self.engine = ServeEngine(self.model, slots=slots, max_len=max_len,
+                                  mesh=mesh)
+        self.params = self.engine.shard_params(self.params)
         self.cache = self.engine.init_state()
         self.slot_req: List[Optional[Request]] = [None] * slots
         self.slot_remaining = np.zeros(slots, np.int32)
@@ -255,8 +261,16 @@ def main():
     ap.add_argument("--check", action="store_true",
                     help="re-decode sequentially single-slot and verify "
                          "byte-identical outputs")
+    ap.add_argument("--mesh", default=None,
+                    help="data-parallel serving mesh, 'D' or 'DxM' (fake "
+                         "host devices with XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N)")
     args = ap.parse_args()
-    srv = Server(args.arch, smoke=True, slots=args.slots)
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import mesh_from_spec
+        mesh = mesh_from_spec(args.mesh)
+    srv = Server(args.arch, smoke=True, slots=args.slots, mesh=mesh)
     rng = np.random.default_rng(0)
     reqs = [Request(rid=i,
                     prompt=rng.integers(0, srv.cfg.vocab,

@@ -25,29 +25,12 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.models.common import ModelConfig
+# the divisibility-guard policy is shared with the compiled chain engine
+# (repro.exec.shardplan); both worlds import repro.shardpolicy rather than
+# each keeping its own copy of the fallback rules
+from repro.shardpolicy import axis_size as _axis_size
+from repro.shardpolicy import guard, takeover
 from .mesh import dp_axes
-
-
-def _axis_size(mesh: Mesh, axis) -> int:
-    if axis is None:
-        return 1
-    if isinstance(axis, tuple):
-        n = 1
-        for a in axis:
-            n *= mesh.shape[a]
-        return n
-    return mesh.shape[axis]
-
-
-def guard(mesh: Mesh, spec: Tuple, shape: Tuple[int, ...]) -> P:
-    """Drop spec axes that don't divide the corresponding dim."""
-    out = []
-    for dim, axis in zip(shape, tuple(spec) + (None,) * len(shape)):
-        if axis is not None and dim % _axis_size(mesh, axis) == 0:
-            out.append(axis)
-        else:
-            out.append(None)
-    return P(*out)
 
 
 # rules keyed by leaf name; "dp" placeholder = FSDP axis ("data"),
@@ -159,10 +142,11 @@ def cache_shardings(cfg: ModelConfig, mesh: Mesh, cache_spec) -> Any:
                 # local masked update per shard and the attention reduce
                 # psums tiny (B,H,1) vectors — no cache resharding at all
                 spec[2] = "model"
-            elif shape[3] % tp_n == 0:
-                spec[3] = "model"
-            elif shape[4] % tp_n == 0:
-                spec[4] = "model"
+            else:
+                # heads over model when divisible, else head_dim takes over
+                i = takeover(mesh, "model", shape, (3, 4))
+                if i is not None:
+                    spec[i] = "model"
         elif name == "wkv" and len(shape) == 5:
             # (L, B, H, N, N)
             if shape[1] % _axis_size(mesh, dp) == 0:
@@ -173,10 +157,9 @@ def cache_shardings(cfg: ModelConfig, mesh: Mesh, cache_spec) -> Any:
             # (L, B, H, hd, S)
             if shape[1] % _axis_size(mesh, dp) == 0:
                 spec[1] = dp
-            if shape[2] % tp_n == 0:
-                spec[2] = "model"
-            elif shape[3] % tp_n == 0:
-                spec[3] = "model"
+            i = takeover(mesh, "model", shape, (2, 3))
+            if i is not None:
+                spec[i] = "model"
         elif len(shape) >= 2:
             if shape[1] % _axis_size(mesh, dp) == 0:
                 spec[1] = dp

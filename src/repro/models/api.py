@@ -15,7 +15,13 @@ Serving extras (consumed by repro.exec.serving):
         batch slot in that leaf (positions index axis 0 of the ``pos``
         vector; K/V and SSM leaves stack layers first, so the slot is
         axis 1). Slot splicing/reset in the serving engine is pure
-        tree arithmetic over this table — no per-family code.
+        tree arithmetic over this table — no per-family code. The same
+        table doubles as the SHARDING table in the engine's mesh mode
+        (``ServeEngine(mesh=...)``): the named axis of every leaf shards
+        over the mesh's data-parallel bundle (divisibility-guarded via
+        repro.shardpolicy), which is sound for exactly the reason
+        splicing is — serving programs never communicate across the
+        slot axis.
 """
 from __future__ import annotations
 

@@ -1,0 +1,107 @@
+"""Shared divisibility-guarded sharding policy.
+
+Extracted from ``launch/sharding.py`` so that BOTH sharding worlds apply
+the same rules instead of duplicating them:
+
+  * the launch-layer model sharder (``repro.launch.sharding``) — parameter
+    / optimizer / batch / serve-cache rules for the LM model families;
+  * the compiled chain engine (``repro.exec.shardplan``) — per-chain
+    ``ShardPlan`` derivation for GCONV programs.
+
+The policy is three primitives:
+
+  * :func:`guard` — drop any spec axis that does not divide the
+    corresponding array dim (an axis that does not divide falls back to
+    replication for that dim; e.g. hymba's vocab=32001 on a 16-way axis).
+  * :func:`takeover` — the first of several candidate dims the axis DOES
+    divide takes the sharding (e.g. yi's 8 KV heads vs model=16: the
+    head_dim axis takes the "model" sharding instead of the heads axis).
+  * :func:`dp_axes` — the data-parallel axis bundle of a mesh
+    (``("pod", "data")`` on multi-pod meshes, ``("data",)`` in-pod; on
+    meshes without a "data" axis, the leading axis).
+
+``axis_size``/``divides`` accept anything with a ``mesh.shape`` mapping
+(a real ``jax.sharding.Mesh`` or a test fake), so the policy stays
+unit-testable without devices.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+from jax.sharding import PartitionSpec as P
+
+
+def axis_size(mesh, axis) -> int:
+    """Total device count behind ``axis`` (None -> 1; tuples multiply)."""
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        n = 1
+        for a in axis:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[axis]
+
+
+def divides(mesh, axis, dim: int) -> bool:
+    """True when sharding ``dim`` over ``axis`` needs no padding."""
+    return dim % axis_size(mesh, axis) == 0
+
+
+def guard(mesh, spec: Tuple, shape: Tuple[int, ...]) -> P:
+    """Drop spec axes that don't divide the corresponding dim."""
+    out = []
+    for dim, axis in zip(shape, tuple(spec) + (None,) * len(shape)):
+        if axis is not None and divides(mesh, axis, dim):
+            out.append(axis)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def takeover(mesh, axis, shape: Sequence[int],
+             candidates: Sequence[int]) -> Optional[int]:
+    """First candidate dim index that ``axis`` divides, else None.
+
+    The fallback ladder behind the launch sharder's serve-cache rules: when
+    the preferred dim (KV heads) doesn't divide the tensor-parallel axis,
+    the next one (head_dim) takes the sharding rather than replicating.
+    """
+    for i in candidates:
+        if divides(mesh, axis, shape[i]):
+            return i
+    return None
+
+
+def dp_axes(mesh) -> tuple:
+    """The data-parallel axis bundle of ``mesh``.
+
+    ``("pod", "data")`` on multi-pod meshes, ``("data",)`` when present,
+    otherwise the mesh's leading axis (debug/CI meshes with custom names).
+    """
+    names = tuple(mesh.axis_names)
+    if "pod" in names and "data" in names:
+        return ("pod", "data")
+    if "data" in names:
+        return ("data",)
+    return names[:1]
+
+
+def leading_batch_spec(mesh, shape: Tuple[int, ...], dp=None) -> P:
+    """Data-parallel spec for an activation/batch leaf: leading axis over
+    the dp bundle when divisible, everything else replicated."""
+    if not shape:
+        return P()
+    dp = dp_axes(mesh) if dp is None else dp
+    return guard(mesh, (dp,), shape)
+
+
+def parse_mesh_spec(spec: str) -> Tuple[int, int]:
+    """``--mesh`` flag grammar, in ONE place: ``"8"`` -> (8, 1) data-
+    parallel, ``"4x2"`` -> (4, 2) (data, model). Consumed by
+    ``launch.mesh.mesh_from_spec``, ``repro.exec.shardcheck`` and the
+    benchmark harness."""
+    parts = spec.lower().split("x")
+    if not 1 <= len(parts) <= 2:
+        raise ValueError(f"--mesh must be 'D' or 'DxM', got {spec!r}")
+    return int(parts[0]), (int(parts[1]) if len(parts) == 2 else 1)

@@ -5,6 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from _hypothesis_compat import given, settings, st
 
 from repro.core.interpreter import ChainExecutor, init_chain_params
 from repro.exec import batch_bucket, compile_chain, pad_leading, unpad_leading
@@ -57,6 +58,48 @@ def test_pad_unpad_roundtrip():
     assert float(p["a"][3].sum()) == 0.0
     u = unpad_leading(p, 3)
     np.testing.assert_array_equal(np.asarray(u["a"]), np.asarray(x["a"]))
+
+
+# -- property tests (hypothesis; self-skip when it is not installed) --------
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.integers(min_value=1, max_value=5), min_size=1,
+                max_size=4),
+       st.integers(min_value=1, max_value=6),
+       st.integers(min_value=0, max_value=8))
+def test_pad_unpad_roundtrip_property(shape, n, extra):
+    """pad_leading/unpad_leading round-trip for arbitrary leading shapes:
+    rows survive bit-for-bit, pad rows are zeros, unpad restores n."""
+    bucket = n + extra
+    rng = np.random.default_rng(n * 131 + extra)
+    x = {"a": rng.normal(size=(n, *shape)).astype(np.float32),
+         "b": rng.integers(0, 9, size=(n,)).astype(np.int32)}
+    p = pad_leading(x, bucket)
+    for k in x:
+        assert p[k].shape == (bucket,) + x[k].shape[1:]
+        np.testing.assert_array_equal(np.asarray(p[k][:n]), x[k])
+        assert float(jnp.abs(p[k][n:]).sum()) == 0.0       # inert pad rows
+    u = unpad_leading(p, n)
+    for k in x:
+        np.testing.assert_array_equal(np.asarray(u[k]), x[k])
+
+
+@settings(max_examples=80, deadline=None)
+@given(st.integers(min_value=1, max_value=4096),
+       st.integers(min_value=1, max_value=64))
+def test_batch_bucket_contract_property(n, min_bucket):
+    """batch_bucket contract: >= n, >= min_bucket, exactly min_bucket
+    times a power of two, monotone, idempotent — so a data-axis-sized
+    floor guarantees every bucket divides the mesh axis."""
+    b = batch_bucket(n, min_bucket)
+    assert b >= n and b >= min_bucket
+    q, r = divmod(b, min_bucket)
+    assert r == 0 and q & (q - 1) == 0                     # power of two
+    if min_bucket == 1:
+        assert b & (b - 1) == 0
+    assert batch_bucket(b, min_bucket) == b                # idempotent
+    if n > 1:
+        assert batch_bucket(n - 1, min_bucket) <= b        # monotone
+    assert b % min_bucket == 0                             # mesh-divisible
 
 
 # ---------------------------------------------------------------------------

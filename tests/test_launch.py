@@ -113,6 +113,24 @@ def test_collective_parser():
     assert out["reduce-scatter"] == 32 * 32 * 4
 
 
+def test_dryrun_import_is_side_effect_free():
+    """Importing launch.dryrun must not mutate XLA_FLAGS (the hillclimb
+    env-purity contract, extended to the dry-run: the fake-device flag is
+    set in main(), before the first jax INITIALIZATION — module-level jax
+    imports do not lock the device count)."""
+    proc = subprocess.run(
+        [sys.executable, "-c",
+         "import os, sys; before = os.environ.get('XLA_FLAGS');"
+         "sys.path.insert(0, 'src');"
+         "import jax;"          # jax first, as in any test process
+         "import repro.launch.dryrun as dr;"
+         "assert os.environ.get('XLA_FLAGS') == before, 'env mutated';"
+         "assert callable(dr.main)"],
+        capture_output=True, text=True,
+        cwd=os.path.join(os.path.dirname(__file__), ".."), timeout=240)
+    assert proc.returncode == 0, proc.stderr
+
+
 @pytest.mark.slow
 def test_dryrun_smoke_cell_subprocess():
     """End-to-end dry-run of one small cell in a subprocess (own XLA_FLAGS),

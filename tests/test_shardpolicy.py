@@ -1,0 +1,116 @@
+"""Direct unit tests for the shared divisibility-guard sharding policy
+(repro.shardpolicy) — every fallback case the launch/sharding.py strategy
+docstring names, tested against the policy primitives themselves rather
+than indirectly through the model sharder."""
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import shardpolicy as policy
+
+
+class FakeMesh:
+    """Just enough mesh surface for the policy (shape map + axis names)."""
+
+    def __init__(self, **axes):
+        self.shape = dict(axes)
+        self.axis_names = tuple(axes)
+        self.empty = False
+
+
+POD = FakeMesh(pod=2, data=16, model=16)
+MESH = FakeMesh(data=16, model=16)
+
+
+def test_axis_size_none_single_and_bundle():
+    assert policy.axis_size(MESH, None) == 1
+    assert policy.axis_size(MESH, "model") == 16
+    assert policy.axis_size(POD, ("pod", "data")) == 32
+
+
+def test_divides():
+    assert policy.divides(MESH, "model", 32000)
+    assert not policy.divides(MESH, "model", 32001)
+    assert policy.divides(MESH, None, 7)        # replication divides all
+
+
+# ---------------------------------------------------------------------------
+# guard: the vocab=32001 fallback (hymba's embedding on a 16-way axis)
+# ---------------------------------------------------------------------------
+def test_guard_drops_vocab_32001():
+    assert policy.guard(MESH, ("model", "data"), (32001, 2048)) == \
+        P(None, "data")
+    assert policy.guard(MESH, ("model", "data"), (32000, 2048)) == \
+        P("model", "data")
+
+
+def test_guard_pads_short_specs_with_replication():
+    # spec shorter than rank: trailing dims replicate
+    assert policy.guard(MESH, ("data",), (32, 4, 4)) == P("data", None, None)
+    assert policy.guard(MESH, (), (8, 8)) == P(None, None)
+
+
+def test_guard_axis_bundles():
+    # ("pod","data") = 32-way: 64 divides, 48 does not
+    assert policy.guard(POD, (("pod", "data"),), (64,)) == P(("pod", "data"))
+    assert policy.guard(POD, (("pod", "data"),), (48,)) == P(None)
+
+
+# ---------------------------------------------------------------------------
+# takeover: KV heads vs the model axis, head_dim takes the sharding
+# ---------------------------------------------------------------------------
+def test_takeover_prefers_heads_when_divisible():
+    # (L, B, S, Hkv, hd) with 32 KV heads: heads win
+    shape = (4, 8, 128, 32, 128)
+    assert policy.takeover(MESH, "model", shape, (3, 4)) == 3
+
+
+def test_takeover_head_dim_when_heads_dont_divide():
+    # yi's 8 KV heads vs model=16 : the head_dim axis takes the sharding
+    shape = (4, 8, 128, 8, 128)
+    assert policy.takeover(MESH, "model", shape, (3, 4)) == 4
+
+
+def test_takeover_none_when_nothing_divides():
+    shape = (4, 8, 128, 8, 100)
+    assert policy.takeover(MESH, "model", shape, (3, 4)) is None
+
+
+# ---------------------------------------------------------------------------
+# dp_axes / leading_batch_spec
+# ---------------------------------------------------------------------------
+def test_parse_mesh_spec():
+    assert policy.parse_mesh_spec("8") == (8, 1)
+    assert policy.parse_mesh_spec("4x2") == (4, 2)
+    assert policy.parse_mesh_spec("4X2") == (4, 2)
+    with pytest.raises(ValueError):
+        policy.parse_mesh_spec("2x2x2")
+
+
+def test_dp_axes_bundles():
+    assert policy.dp_axes(POD) == ("pod", "data")
+    assert policy.dp_axes(MESH) == ("data",)
+    assert policy.dp_axes(FakeMesh(x=4, y=2)) == ("x",)
+
+
+def test_leading_batch_spec_guards():
+    assert policy.leading_batch_spec(MESH, (32, 8, 8)) == \
+        P(("data",), None, None)
+    assert policy.leading_batch_spec(MESH, (3, 8, 8)) == P(None, None, None)
+    assert policy.leading_batch_spec(MESH, ()) == P()
+
+
+# ---------------------------------------------------------------------------
+# the launch sharder consumes THIS module (no duplicated policy)
+# ---------------------------------------------------------------------------
+def test_launch_sharding_reuses_policy():
+    from repro.launch import sharding as shlib
+
+    assert shlib.guard is policy.guard
+    assert shlib.takeover is policy.takeover
+    assert shlib._axis_size is policy.axis_size
+
+
+def test_exec_shardplan_reuses_policy():
+    from repro.exec import shardplan
+
+    assert shardplan.policy is policy
