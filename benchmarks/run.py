@@ -23,11 +23,14 @@ import time
 
 # "simval" (the cycle-level sim sweep) is not in ALL: the default analytic
 # run stays pure closed-form; select it with --engine sim or --only simval.
-# "exec_micro" / "dse_micro" / "serve_micro" / "exec_sharded_micro" (the
-# FAST-tier smokes) likewise only run via --only.
+# "exec_micro" / "dse_micro" / "serve_micro" / "exec_sharded_micro" /
+# "obs_micro" (the FAST-tier smokes) likewise only run via --only.
 ALL = ("table1", "fig12", "fig13", "fig14", "fig15", "fusion", "fig18",
        "fig20", "kernels", "roofline", "exec", "exec_sharded", "dse",
        "serve")
+
+MICRO = ("exec_micro", "dse_micro", "serve_micro", "exec_sharded_micro",
+         "obs_micro")
 
 
 def _run(name, fn):
@@ -156,8 +159,9 @@ def main():
     else:
         want = list(ALL)
 
-    from benchmarks import dse_bench, exec_bench, serve_bench
+    from benchmarks import dse_bench, exec_bench, obs_bench, serve_bench
     from benchmarks import paper_tables as pt
+    from repro.obs import Metrics, provenance
 
     table = {
         "table1": pt.table1_layers, "fig12": pt.fig12_breakdown,
@@ -173,10 +177,18 @@ def main():
         "dse": dse_bench.dse_search, "dse_micro": dse_bench.dse_micro,
         "serve": serve_bench.serve_bench,
         "serve_micro": serve_bench.serve_micro,
+        "obs_micro": obs_bench.obs_micro,
     }
+    # harness wall-times go through the unified metrics registry so the
+    # committed artifact carries the same schema every other subsystem emits
+    reg = Metrics()
     results = {}
     for name in want:
+        t0 = time.perf_counter()
         results[name] = _run(name, table[name])
+        reg.histogram("bench_wall_s", buckets=[0.1, 1, 10, 60, 600],
+                      bench=name).observe(time.perf_counter() - t0)
+        reg.counter("bench_runs", bench=name).inc()
     out = os.path.join(os.path.dirname(__file__), "..", "results",
                        "benchmarks.json")
     os.makedirs(os.path.dirname(out), exist_ok=True)
@@ -193,9 +205,15 @@ def main():
     # times out of the committed perf-trajectory artifact (every FAST CI run
     # would otherwise clobber the curated rows with laptop numbers)
     merged.update({k: {"rows": v[0], "summary": v[1]}
-                   for k, v in results.items()
-                   if k not in ("exec_micro", "dse_micro", "serve_micro",
-                                "exec_sharded_micro")})
+                   for k, v in results.items() if k not in MICRO})
+    # provenance + harness metrics are stamped once per invocation that
+    # contributes rows, so every committed number is attributable to a git
+    # SHA / jax version / device; micro-only (FAST CI) runs leave the
+    # stamp alone for the same reason their rows are excluded — a smoke
+    # box's identity must not masquerade as the curated rows' origin
+    if any(k not in MICRO for k in results):
+        merged["provenance"] = provenance()
+        merged["metrics"] = reg.to_dict()
     with open(out, "w") as f:
         json.dump(merged, f, indent=1, default=str)
     print(f"\nwrote {os.path.abspath(out)}")
@@ -223,6 +241,12 @@ def main():
             "from the single-device engine (allclose, rtol 1e-4) on the "
             "zoo net / LM blocks, or lost its >1 data-parallel throughput "
             "scaling over one device")
+    if "obs_micro" in results and not results["obs_micro"][1].get("ok"):
+        raise SystemExit(
+            "obs_micro: serve trace failed schema validation, the report "
+            "CLI disagrees with Server.stats() on request count or "
+            "p50/p99 TTFT, or disabled-mode tracing overhead on the exec "
+            "micro cell exceeded the 2% budget")
 
 
 if __name__ == "__main__":

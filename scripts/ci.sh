@@ -20,7 +20,13 @@
 #                                   fails if the mesh-compiled program
 #                                   diverges from the single-device engine
 #                                   on a zoo net / the LM blocks, or loses
-#                                   its >1 data-parallel scaling)
+#                                   its >1 data-parallel scaling) and the
+#                                   observability smoke (traced serve
+#                                   workload round-tripped through the
+#                                   trace schema + report CLI; fails if
+#                                   the report disagrees with
+#                                   Server.stats() or disabled-mode
+#                                   tracing overhead exceeds 2%)
 #   CI_INSTALL=1 ./scripts/ci.sh    pip install -e '.[dev]' first (networked
 #                                   CI; the dev extras declare pytest and
 #                                   hypothesis — without them the property
@@ -49,8 +55,11 @@ if [ "${FAST:-0}" = "1" ]; then
   # when continuous-batching serving corrupts caches / regresses below
   # per-request throughput (serve_micro), or when the mesh-sharded engine
   # diverges from the single-device one / loses >1 data-parallel scaling
-  # on faked host devices (exec_sharded_micro)
+  # on faked host devices (exec_sharded_micro), or when the observability
+  # layer breaks — serve trace failing schema validation, the report CLI
+  # disagreeing with Server.stats(), or disabled-mode tracing overhead
+  # above 2% on the exec micro cell (obs_micro)
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m benchmarks.run \
-    --only exec_micro,dse_micro,serve_micro,exec_sharded_micro
+    --only exec_micro,dse_micro,serve_micro,exec_sharded_micro,obs_micro
 fi

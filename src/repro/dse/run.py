@@ -9,11 +9,15 @@ every baseline *at equal-or-smaller PE/buffer budget*, hill-climbs per-node
 GCONV mappings for the best point's spec, and writes three artifacts to
 ``results/dse/``:
 
-  * ``evals.json``    — the run config + every per-point evaluation record;
-  * ``frontier.json`` — the (latency, energy, area) Pareto set;
-  * ``best.json``     — the best point's spec, per-workload breakdown,
+  * ``evals.json``      — the run config + every per-point evaluation
+    record;
+  * ``frontier.json``   — the (latency, energy, area) Pareto set;
+  * ``best.json``       — the best point's spec, per-workload breakdown,
     sim cross-check, baseline-domination verdicts and the mapping-search
-    report.
+    report;
+  * ``trajectory.json`` — best-fitness-vs-evaluations convergence curve
+    (``[{n, wlc, best_wlc}...]``, evaluation order) for search-trajectory
+    analytics.
 
 Exit status is nonzero when a promoted point violates the analytic-vs-sim
 agreement contract (``repro.sim.validate``) — the searched designs must stay
@@ -81,6 +85,22 @@ def run_dse(suite: str = "zoo", budget: int = 200, seed: int = 0,
     records = ev.records
     frontier = pareto_front(records)
     say(f"dse: {ev.n_evals} points evaluated, frontier size {len(frontier)}")
+
+    # ---- search trajectory: best fitness vs evaluations -------------------
+    # Evaluator.cache preserves insertion order, so `records` IS the
+    # evaluation order; the running minimum is the convergence curve the
+    # strategy benchmarks (and the archgym-style viz loop) consume.
+    trajectory = []
+    best_so_far = float("inf")
+    for i, rec in enumerate(records):
+        if rec.wlc < best_so_far:
+            best_so_far = rec.wlc
+        trajectory.append(dict(n=i + 1, wlc=rec.wlc,
+                               best_wlc=best_so_far))
+    evals_to_best = next((t["n"] for t in trajectory
+                          if t["best_wlc"] == best_so_far), 0)
+    say(f"dse: trajectory converged to wlc {best_so_far:.4f} after "
+        f"{evals_to_best}/{len(trajectory)} evaluations")
 
     # ---- multi-fidelity promotion: top-k frontier points -> repro.sim -----
     all_promoted: List[EvalRecord] = []   # every sim promotion feeds the gate
@@ -150,6 +170,8 @@ def run_dse(suite: str = "zoo", budget: int = 200, seed: int = 0,
         frontier_size=len(frontier),
         search=dict(strategy=res.strategy, best_score=res.best_score,
                     n_evals=res.n_evals),
+        trajectory=dict(points=len(trajectory), best_wlc=best_so_far,
+                        evals_to_best=evals_to_best),
     )
 
     if out_dir:
@@ -164,8 +186,14 @@ def run_dse(suite: str = "zoo", budget: int = 200, seed: int = 0,
                       f, indent=1, default=float)
         with open(os.path.join(out_dir, "best.json"), "w") as f:
             json.dump(payload, f, indent=1, default=float)
+        with open(os.path.join(out_dir, "trajectory.json"), "w") as f:
+            json.dump(dict(config=payload["config"],
+                           strategy=res.strategy,
+                           evals_to_best=evals_to_best,
+                           trajectory=trajectory),
+                      f, indent=1, default=float)
         say(f"dse: wrote {os.path.abspath(out_dir)}/"
-            f"{{evals,frontier,best}}.json")
+            f"{{evals,frontier,best,trajectory}}.json")
 
     payload["_frontier"] = frontier
     payload["_evaluator"] = ev

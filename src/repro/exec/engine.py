@@ -53,6 +53,8 @@ class CompileOptions:
     backend: str = "auto"        # auto | jnp | pallas
     mxu_min: int = 128           # min K/N to prefer the Pallas matmul (auto)
     jit: bool = True
+    profile: bool = False        # per-step timed spans into a repro.obs
+                                 # tracer (see CompiledChain docstring)
 
 
 class CompiledChain:
@@ -60,7 +62,7 @@ class CompiledChain:
 
     def __init__(self, source: Chain, chain: Chain, report: FusionReport,
                  partitions: List[ExecGroup], plan: Plan,
-                 options: CompileOptions, shard_plan=None):
+                 options: CompileOptions, shard_plan=None, tracer=None):
         self.source = source
         self.chain = chain                   # the fused chain actually run
         self.fusion_report = report
@@ -84,6 +86,16 @@ class CompiledChain:
         # leading-batch execution: one vmapped program per (keep_all,
         # batch bucket), cached per engine (exec.batch.BucketedCache)
         self._batched = BucketedCache(self._build_batched)
+        # profiling (repro.obs): per-step jitted programs so each fusion-
+        # group step can be timed device-synced. The DISABLED path costs
+        # exactly one flag check in __call__ — no tracer object, span or
+        # dict is ever allocated unless profiling is live.
+        self._profile = options.profile
+        self.tracer = None
+        if options.profile:
+            from ..obs.trace import Tracer
+            self.tracer = tracer if tracer is not None else Tracer()
+            self._step_fns: Dict[str, object] = {}
 
     # -- parameter init (the oracle's own recipe, shared) ---------------
     def init_params(self, key, scale: float = 0.1) -> Dict[str, jnp.ndarray]:
@@ -165,6 +177,59 @@ class CompiledChain:
                 f"inconsistent leading batch sizes {sorted(sizes)}")
         return sizes.pop()
 
+    # -- profiled execution (repro.obs) ---------------------------------
+    def _step_fn(self, step):
+        """Per-step jitted program (profile mode runs steps one by one so
+        each can be block_until_ready-timed; the single fused program of
+        the fast path cannot attribute time to its interior)."""
+        fn = self._step_fns.get(step.name)
+        if fn is None:
+            run = step.run
+            fn = jax.jit(run) if self.options.jit else run
+            self._step_fns[step.name] = fn
+        return fn
+
+    def _profiled(self, ins, ps, keep_all):
+        """Exact-shape execution with one device-synced span per fusion-
+        group step, attributed with the step's backend tag and the plan
+        signature. The first run of a step is recorded under cat
+        ``compile`` (trace + XLA compile + execute), steady-state runs
+        under cat ``execute`` — so compile time never pollutes the
+        execute-time attribution. The loop keeps only two clock reads of
+        bookkeeping per step and defers event construction until after
+        the enclosing chain span closes, so >= 95% of the chain span's
+        wall time is attributed to named steps (the report CLI's
+        ``profile.coverage``)."""
+        import time as _time
+
+        tr = self.tracer
+        sig = self._plan.signature
+        env: Dict[str, jnp.ndarray] = dict(ins)
+        env.update(ps)
+        steps = self._steps_sharded
+        step_fns = self._step_fns
+        marks = []
+        with tr.span(f"chain:{self.chain.name}", cat="chain",
+                     attrs={"signature": sig,
+                            "steps": len(steps)}) as chain_span:
+            for step in steps:
+                compiled = step.name in step_fns
+                fn = step_fns[step.name] if compiled else self._step_fn(step)
+                t0 = _time.perf_counter()
+                out = jax.block_until_ready(fn(env))
+                t1 = _time.perf_counter()
+                env[step.name] = out
+                marks.append((step, compiled, t0, t1))
+        parent = getattr(chain_span, "id", None)
+        for step, compiled, t0, t1 in marks:
+            tr.add_span(step.name, "execute" if compiled else "compile",
+                        t0, t1, parent=parent,
+                        attrs={"backend": step.backend, "signature": sig})
+        if keep_all:
+            return env
+        outs = self.chain.outputs or [list(self.chain.nodes)[-1]]
+        return {o: env[o] for o in outs}
+
     def __call__(self,
                  inputs: Mapping[str, jnp.ndarray],
                  params: Optional[Mapping[str, jnp.ndarray]] = None,
@@ -181,9 +246,23 @@ class CompiledChain:
                 raise ValueError(f"missing chain param {name!r}")
             ps[name] = jnp.asarray(params[name])
         n = self._batch_size(ins)
+        profiling = self._profile and self.tracer.enabled
         if n is None:
+            if profiling:
+                return self._profiled(ins, ps, keep_all)
             return dict(self._fn(keep_all)(ins, ps))
         bucket = batch_bucket(n, self._min_bucket)
+        if profiling:
+            # batched programs are one fused vmap: attribute the call as a
+            # whole (per-step attribution is an exact-shape-mode feature)
+            with self.tracer.span(f"batched:{self.chain.name}", cat="chain",
+                                  attrs={"backend": "batched", "n": n,
+                                         "bucket": bucket,
+                                         "signature":
+                                             self._plan.signature}):
+                fn = self._batched.get((keep_all, bucket))
+                out = jax.block_until_ready(fn(pad_leading(ins, bucket), ps))
+            return dict(unpad_leading(out, n))
         fn = self._batched.get((keep_all, bucket))
         out = fn(pad_leading(ins, bucket), ps)
         return dict(unpad_leading(out, n))
@@ -231,11 +310,20 @@ class CompiledChain:
         return "\n".join(lines)
 
 
-def compile_chain(chain: Chain, mesh=None, **options) -> CompiledChain:
+def compile_chain(chain: Chain, mesh=None, tracer=None,
+                  **options) -> CompiledChain:
     """Compile a chain for execution. See :class:`CompileOptions`.
 
     ``mesh``: a ``jax.sharding.Mesh`` to compile a SHARDED program against
     (see the module docstring); ``None`` keeps the single-device engine.
+
+    ``profile=True``: wrap each fusion-group step in a device-synced timed
+    span recorded into ``engine.tracer`` (a fresh ``repro.obs.trace.
+    Tracer`` unless ``tracer=`` is given) — backend + plan-signature
+    attributed, compile events separate from execute events; export with
+    ``engine.tracer.write(path)`` and summarize with ``python -m
+    repro.obs.report``. With the default ``profile=False`` the hot path
+    is untouched beyond one flag check per call.
     """
     opts = CompileOptions(**options)
     chain.validate()
@@ -252,4 +340,4 @@ def compile_chain(chain: Chain, mesh=None, **options) -> CompiledChain:
         for m in members:
             plan.dispatch.setdefault(m, f"fused:{host}")
     return CompiledChain(chain, fused, report, parts, plan, opts,
-                         shard_plan)
+                         shard_plan, tracer)

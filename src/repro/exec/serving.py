@@ -75,11 +75,17 @@ class ServeEngine:
     sequential single-slot reference (tests/test_exec_sharded.py).
     """
 
-    def __init__(self, model, *, slots: int, max_len: int, mesh=None):
+    def __init__(self, model, *, slots: int, max_len: int, mesh=None,
+                 tracer=None):
         self.model = model
         self.cfg = model.cfg
         self.slots = int(slots)
         self.max_len = int(max_len)
+        # optional repro.obs tracer: engine-category spans around the
+        # compiled programs (decode / prefill / splice / reset), device-
+        # synced so span durations are real device time. None (the
+        # default) keeps every hot path on a single flag check.
+        self.tracer = tracer
         self.axes: Dict[str, int] = dict(model.serve_axes)
         self.mesh = None if mesh is None or mesh.empty else mesh
         if self.mesh is not None:
@@ -138,6 +144,13 @@ class ServeEngine:
     def decode(self, params, tokens, cache):
         """tokens: (slots, 1) int32 -> (logits, cache). Row-independent:
         idle slots step a pad token but only their own rows move."""
+        tr = self.tracer
+        if tr is not None and tr.enabled:
+            with tr.span("engine.decode", cat="engine",
+                         attrs={"slots": self.slots}):
+                out = self._decode_fn(params, tokens, cache)
+                jax.block_until_ready(out)
+                return out
         return self._decode_fn(params, tokens, cache)
 
     # -- prefill: bucketed batched programs -----------------------------
@@ -186,6 +199,19 @@ class ServeEngine:
         for j, p in enumerate(prompts):
             tokens[j, :len(p)] = p
             lengths[j] = len(p)
+        tr = self.tracer
+        if tr is not None and tr.enabled:
+            before = self._prefill_cache.compiles
+            fn = self._prefill_cache.get((nb, lb))
+            cat = "compile" if self._prefill_cache.compiles > before \
+                else "execute"
+            with tr.span("engine.prefill", cat=cat,
+                         attrs={"n": n, "batch_bucket": nb,
+                                "len_bucket": lb}):
+                logits, row_state = fn(params, jnp.asarray(tokens),
+                                       jnp.asarray(lengths))
+                jax.block_until_ready((logits, row_state))
+            return logits, row_state, n
         fn = self._prefill_cache.get((nb, lb))
         logits, row_state = fn(params, jnp.asarray(tokens),
                                jnp.asarray(lengths))
@@ -239,6 +265,14 @@ class ServeEngine:
         ``slots[i]``: one fused jitted scatter for the whole admission."""
         if js is None:
             js = list(range(len(slots)))
+        tr = self.tracer
+        if tr is not None and tr.enabled:
+            with tr.span("engine.splice", cat="engine",
+                         attrs={"rows": len(js)}):
+                out = self._splice_fn(cache, jnp.asarray(slots, jnp.int32),
+                                      row_state, jnp.asarray(js, jnp.int32))
+                jax.block_until_ready(out)
+                return out
         return self._splice_fn(cache, jnp.asarray(slots, jnp.int32),
                                row_state, jnp.asarray(js, jnp.int32))
 
@@ -260,4 +294,11 @@ class ServeEngine:
     def reset_slot(self, cache, slot: int):
         """Zero a slot's rows on release — a reused slot starts from a
         clean state even before its next splice."""
+        tr = self.tracer
+        if tr is not None and tr.enabled:
+            with tr.span("engine.reset", cat="engine",
+                         attrs={"slot": int(slot)}):
+                out = self._reset_fn(cache, jnp.asarray(slot, jnp.int32))
+                jax.block_until_ready(out)
+                return out
         return self._reset_fn(cache, jnp.asarray(slot, jnp.int32))

@@ -17,6 +17,16 @@ and slot-state surgery lives in :class:`repro.exec.serving.ServeEngine`:
 Invariant (tests/test_serve.py): staggered multi-slot serving produces
 byte-identical token streams to sequential single-slot decode.
 
+Observability: ``--trace PATH`` (or ``Server(tracer=...)``) records the
+per-request lifecycle (submit -> queue -> prefill -> first token ->
+decode ticks -> finish, as nested ``request``-category spans) plus a
+per-tick ``slots`` occupancy counter track into a ``repro.obs`` trace —
+Chrome/Perfetto-loadable, summarized by ``python -m repro.obs.report``,
+and carrying the tick indices ``repro.sim`` replays. ``Server.stats()``
+reports the same percentiles (shared ``repro.obs.metrics.percentile``)
+and is well-formed at any point in the server's life;
+``Server.metrics_dict()`` emits the unified metrics schema.
+
 Mesh serving: ``--mesh D`` (or ``DxM``) runs the engine's data-parallel
 mode — the slot axis of every serve-state leaf shards over the mesh's
 data axis, params replicate, and the same invariant holds per slot
@@ -40,6 +50,7 @@ import numpy as np
 from repro import configs
 from repro.exec.serving import ServeEngine
 from repro.models import api
+from repro.obs.metrics import Metrics, percentile
 
 
 @dataclass
@@ -52,16 +63,29 @@ class Request:
     admitted_at: float = 0.0
     first_token_at: float = 0.0
     done_at: float = 0.0
+    # driver tick indices (the trace's replay clock: repro.sim consumes
+    # ticks, not wall seconds)
+    submitted_tick: int = -1
+    admitted_tick: int = -1
+    done_tick: int = -1
 
 
 def _pct(xs, q):
-    return float(np.percentile(xs, q)) if xs else 0.0
+    """Percentile through the shared repro.obs implementation — the same
+    arithmetic the trace report CLI uses, so `Server.stats()` and
+    `python -m repro.obs.report` agree bit for bit. Well-formed on zero
+    ([] -> 0.0) and one ([x] -> x) samples."""
+    return percentile(xs, q)
+
+
+# serve-latency histogram buckets (seconds): 100us .. ~100s, geometric
+_LAT_BUCKETS = [1e-4 * (10 ** 0.5) ** i for i in range(13)]
 
 
 class Server:
     def __init__(self, arch: str, *, smoke: bool = True, slots: int = 4,
                  max_len: int = 128, greedy: bool = True,
-                 bos_id: Optional[int] = 0, mesh=None):
+                 bos_id: Optional[int] = 0, mesh=None, tracer=None):
         self.cfg = configs.get(arch, smoke=smoke)
         self.model = api.build(self.cfg)
         self.params = self.model.init(jax.random.PRNGKey(0))
@@ -73,8 +97,16 @@ class Server:
             raise NotImplementedError(
                 "serve driver demos decoder-only archs; encdec uses "
                 "encode+decode_step directly (see tests)")
+        # observability: the tracer (optional) records the per-request
+        # lifecycle + per-tick slot occupancy; the metrics registry is
+        # always on (cheap counters) and feeds metrics_dict()
+        self.tracer = tracer
+        if tracer is not None:
+            tracer.meta.update(kind="serve", arch=arch, slots=slots,
+                               max_len=max_len)
+        self.metrics = Metrics()
         self.engine = ServeEngine(self.model, slots=slots, max_len=max_len,
-                                  mesh=mesh)
+                                  mesh=mesh, tracer=tracer)
         self.params = self.engine.shard_params(self.params)
         self.cache = self.engine.init_state()
         self.slot_req: List[Optional[Request]] = [None] * slots
@@ -84,6 +116,8 @@ class Server:
         self.finished: List[Request] = []
         self.tokens_prefill = 0
         self.tokens_decode = 0
+        self.ticks = 0
+        self._t0 = time.perf_counter()
 
     # ------------------------------------------------------------------
     def submit(self, req: Request):
@@ -101,15 +135,57 @@ class Server:
                 f"request {req.rid}: prompt {len(req.prompt)} + max_new "
                 f"{req.max_new} exceeds max_len {self.max_len}")
         req.submitted_at = time.perf_counter()
+        req.submitted_tick = self.ticks
         self.queue.append(req)
+        tr = self.tracer
+        if tr is not None and tr.enabled:
+            tr.instant("submit", cat="serve",
+                       attrs={"rid": req.rid, "prompt_len": len(req.prompt),
+                              "max_new": req.max_new, "tick": self.ticks})
 
     def _release(self, s: int):
         req = self.slot_req[s]
         req.done_at = time.perf_counter()
+        req.done_tick = self.ticks
         self.finished.append(req)
         self.slot_req[s] = None
         self.tokens[s, 0] = 0
         self.cache = self.engine.reset_slot(self.cache, s)
+        self._observe_finished(req)
+
+    def _observe_finished(self, req: Request):
+        """Emit the request's lifecycle into metrics + trace. The trace
+        schema (repro.obs.trace docstring) is the replayable one: args
+        carry rid / prompt_len / max_new / out_len plus the tick indices
+        repro.sim replays and the measured waits in seconds."""
+        queue_wait = req.admitted_at - req.submitted_at
+        ttft = req.first_token_at - req.submitted_at
+        latency = req.done_at - req.submitted_at
+        m = self.metrics
+        m.counter("serve_requests").inc()
+        m.counter("serve_tokens", kind="out").inc(len(req.out))
+        m.histogram("serve_queue_wait_s", _LAT_BUCKETS).observe(queue_wait)
+        m.histogram("serve_ttft_s", _LAT_BUCKETS).observe(ttft)
+        m.histogram("serve_latency_s", _LAT_BUCKETS).observe(latency)
+        tr = self.tracer
+        if tr is None or not tr.enabled:
+            return
+        attrs = {"rid": req.rid, "prompt_len": len(req.prompt),
+                 "max_new": req.max_new, "out_len": len(req.out),
+                 "submit_tick": req.submitted_tick,
+                 "admit_tick": req.admitted_tick,
+                 "done_tick": req.done_tick,
+                 "queue_wait_s": queue_wait, "ttft_s": ttft,
+                 "latency_s": latency}
+        pid = tr.add_span("request", "request", req.submitted_at,
+                          req.done_at, attrs=attrs)
+        rid = {"rid": req.rid}
+        tr.add_span("queue", "request", req.submitted_at, req.admitted_at,
+                    parent=pid, attrs=rid)
+        tr.add_span("prefill", "request", req.admitted_at,
+                    req.first_token_at, parent=pid, attrs=rid)
+        tr.add_span("decode", "request", req.first_token_at, req.done_at,
+                    parent=pid, attrs=rid)
 
     def _admit(self):
         """Fill free slots from the queue with ONE batched prefill.
@@ -126,6 +202,7 @@ class Server:
         now = time.perf_counter()
         for req in take:
             req.admitted_at = now
+            req.admitted_tick = self.ticks
         logits, rows, n = self.engine.prefill(
             self.params, [r.prompt for r in take])
         self.cache = self.engine.splice_many(self.cache, free[:n], rows)
@@ -136,6 +213,8 @@ class Server:
             req.out.append(first)
             req.first_token_at = time.perf_counter()
             self.tokens_prefill += len(req.prompt)
+            self.metrics.counter("serve_tokens",
+                                 kind="prefill").inc(len(req.prompt))
             self.slot_req[s] = req
             self.slot_remaining[s] = req.max_new - 1
             self.tokens[s, 0] = first
@@ -143,7 +222,26 @@ class Server:
                 self._release(s)
 
     def tick(self) -> int:
-        """One decode step for the whole slot batch; returns #active."""
+        """One decode step for the whole slot batch; returns #active.
+
+        With a tracer attached each tick is a ``serve``-category span
+        (admission + decode nested inside it) followed by one sample of
+        the ``slots`` counter track — the per-tick slot-occupancy series
+        the trace report turns into utilization."""
+        tr = self.tracer
+        if tr is not None and tr.enabled:
+            with tr.span("tick", cat="serve", attrs={"tick": self.ticks}):
+                n = self._tick_inner()
+            tr.counter("slots", {"active": n, "queued": len(self.queue)})
+        else:
+            n = self._tick_inner()
+        self.ticks += 1
+        self.metrics.counter("serve_ticks").inc()
+        self.metrics.counter("serve_tokens", kind="decode").inc(n)
+        self.metrics.gauge("serve_slots_active").set(n)
+        return n
+
+    def _tick_inner(self) -> int:
         self._admit()
         active = [s for s in range(self.slots)
                   if self.slot_req[s] is not None]
@@ -194,6 +292,9 @@ class Server:
         self.finished = []
         self.tokens_prefill = 0
         self.tokens_decode = 0
+        self.ticks = 0
+        self.metrics = Metrics()
+        self._t0 = time.perf_counter()
 
     def reset_state(self):
         """reset_stats + a factory-fresh slot cache, keeping the compiled
@@ -204,8 +305,20 @@ class Server:
         self.slot_remaining[:] = 0
         self.tokens[:] = 0
 
-    def _report(self, dt: float, ticks: int) -> Dict:
+    def stats(self, wall_s: Optional[float] = None,
+              ticks: Optional[int] = None) -> Dict:
+        """Current serving stats — callable at ANY point in the server's
+        life and well-formed for zero or one finished request (empty
+        percentile lists report 0.0; a single sample is its own p50 and
+        p99 — the :func:`repro.obs.metrics.percentile` contract, shared
+        with the trace report CLI so the two agree bit for bit).
+        Defaults: wall time since construction / last ``reset_stats``,
+        tick count since the same."""
         fin = self.finished
+        if wall_s is None:
+            wall_s = time.perf_counter() - self._t0
+        if ticks is None:
+            ticks = self.ticks
         tokens_out = sum(len(r.out) for r in fin)
         total = self.tokens_prefill + tokens_out
         queue_wait = [r.admitted_at - r.submitted_at for r in fin]
@@ -218,9 +331,9 @@ class Server:
             "tokens_decode": self.tokens_decode,
             "tokens_out": tokens_out,
             "tokens_total": total,
-            "wall_s": dt,
-            "tok_per_s": total / dt if dt else 0.0,
-            "tok_per_s_out": tokens_out / dt if dt else 0.0,
+            "wall_s": wall_s,
+            "tok_per_s": total / wall_s if wall_s else 0.0,
+            "tok_per_s_out": tokens_out / wall_s if wall_s else 0.0,
             "p50_queue_wait_s": _pct(queue_wait, 50),
             "p99_queue_wait_s": _pct(queue_wait, 99),
             "p50_ttft_s": _pct(ttft, 50),
@@ -229,6 +342,14 @@ class Server:
             "p99_latency_s": _pct(lat, 99),
             "prefill_compiles": self.engine.prefill_compiles,
         }
+
+    def metrics_dict(self) -> Dict:
+        """The same numbers through the unified ``repro.obs.metrics``
+        schema (versioned, mergeable across servers/runs)."""
+        return self.metrics.to_dict()
+
+    def _report(self, dt: float, ticks: int) -> Dict:
+        return self.stats(wall_s=dt, ticks=ticks)
 
 
 def sequential_reference(arch: str, requests: List[Request],
@@ -265,12 +386,24 @@ def main():
                     help="data-parallel serving mesh, 'D' or 'DxM' (fake "
                          "host devices with XLA_FLAGS="
                          "--xla_force_host_platform_device_count=N)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write the serve trace here: per-request "
+                         "lifecycle spans + per-tick slot occupancy. "
+                         "'.jsonl' -> the repro.obs JSONL schema, "
+                         "anything else -> Chrome trace JSON (open in "
+                         "Perfetto); summarize with "
+                         "python -m repro.obs.report PATH")
     args = ap.parse_args()
     mesh = None
     if args.mesh:
         from repro.launch.mesh import mesh_from_spec
         mesh = mesh_from_spec(args.mesh)
-    srv = Server(args.arch, smoke=True, slots=args.slots, mesh=mesh)
+    tracer = None
+    if args.trace:
+        from repro.obs.trace import Tracer
+        tracer = Tracer()
+    srv = Server(args.arch, smoke=True, slots=args.slots, mesh=mesh,
+                 tracer=tracer)
     rng = np.random.default_rng(0)
     reqs = [Request(rid=i,
                     prompt=rng.integers(0, srv.cfg.vocab,
@@ -288,6 +421,9 @@ def main():
         if not ok:
             raise SystemExit("continuous-batching outputs diverge from "
                              "sequential single-slot decode")
+    if args.trace:
+        tracer.write(args.trace)
+        report["trace"] = args.trace
     print(json.dumps(report, indent=1))
 
 

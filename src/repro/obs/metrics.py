@@ -1,0 +1,280 @@
+"""Metrics registry: labeled counters, gauges, fixed-bucket histograms.
+
+The one numbers schema the repo's reporters emit through — the serving
+driver's stats, the simulator's per-node/per-chain summaries and the
+benchmark harness all build their dicts over this registry, so their
+outputs stay mergeable and diffable across runs (``snapshot``/``merge``/
+``diff``) instead of each subsystem hand-rolling its own dict shape.
+
+A *family* is a metric name + type; a *series* is one labeled instance of
+it (``reg.counter("sim_cycles", node="conv1")``). ``to_dict()`` emits the
+versioned schema::
+
+    {"schema": "repro.obs.metrics", "version": 1,
+     "metrics": {name: {"type": "counter"|"gauge"|"histogram",
+                        "series": [{"labels": {...}, ...values...}]}}}
+
+counter/gauge series carry ``{"value": v}``; histogram series carry
+``{"buckets": [ub...], "counts": [c...], "count": n, "sum": s}`` with
+``counts`` one longer than ``buckets`` (the overflow bucket). The
+registry is pure stdlib — importable from anywhere (sim, launch,
+benchmarks) without dragging jax in.
+"""
+from __future__ import annotations
+
+import math
+from bisect import bisect_left
+from typing import Dict, List, Optional, Sequence, Tuple
+
+SCHEMA = "repro.obs.metrics"
+SCHEMA_VERSION = 1
+
+LabelKey = Tuple[Tuple[str, str], ...]
+
+
+def percentile(xs: Sequence[float], q: float) -> float:
+    """Linear-interpolated percentile (``numpy.percentile`` semantics),
+    well-formed on degenerate inputs: ``[] -> 0.0``, ``[x] -> x``. The
+    serving driver's stats and the trace report CLI both compute through
+    THIS function, so their percentiles agree bit for bit."""
+    xs = sorted(float(x) for x in xs)
+    if not xs:
+        return 0.0
+    if len(xs) == 1:
+        return xs[0]
+    rank = (len(xs) - 1) * (q / 100.0)
+    lo = math.floor(rank)
+    hi = math.ceil(rank)
+    if lo == hi:
+        return xs[int(rank)]
+    frac = rank - lo
+    return xs[lo] * (1.0 - frac) + xs[hi] * frac
+
+
+def exp_buckets(lo: float, hi: float, n: int) -> List[float]:
+    """``n`` geometrically spaced bucket upper bounds spanning [lo, hi]."""
+    if not (lo > 0 and hi > lo and n >= 2):
+        raise ValueError(f"need hi > lo > 0 and n >= 2, got {lo}, {hi}, {n}")
+    ratio = (hi / lo) ** (1.0 / (n - 1))
+    return [lo * ratio ** i for i in range(n)]
+
+
+class Counter:
+    """Monotonically increasing sum."""
+
+    __slots__ = ("value",)
+
+    def __init__(self):
+        self.value = 0.0
+
+    def inc(self, v: float = 1.0):
+        if v < 0:
+            raise ValueError(f"counter increment must be >= 0, got {v}")
+        self.value += v
+        return self
+
+
+class Gauge:
+    """Last-written value."""
+
+    __slots__ = ("value",)
+
+    def __init__(self):
+        self.value = 0.0
+
+    def set(self, v: float):
+        self.value = float(v)
+        return self
+
+
+class Histogram:
+    """Fixed upper-bound buckets + an overflow bucket.
+
+    ``buckets[i]`` is the inclusive upper bound of bucket ``i`` (the
+    Prometheus ``le`` convention): an observation lands in the first
+    bucket whose bound is ``>= v``, or in the overflow bucket when it
+    exceeds every bound.
+    """
+
+    __slots__ = ("buckets", "counts", "count", "sum")
+
+    def __init__(self, buckets: Sequence[float]):
+        bs = [float(b) for b in buckets]
+        if not bs or sorted(bs) != bs or len(set(bs)) != len(bs):
+            raise ValueError(f"buckets must be strictly increasing: {bs}")
+        self.buckets = bs
+        self.counts = [0] * (len(bs) + 1)
+        self.count = 0
+        self.sum = 0.0
+
+    def observe(self, v: float):
+        self.counts[bisect_left(self.buckets, float(v))] += 1
+        self.count += 1
+        self.sum += float(v)
+        return self
+
+    @property
+    def mean(self) -> float:
+        return self.sum / self.count if self.count else 0.0
+
+    def quantile(self, q: float) -> float:
+        """Bucket-resolution quantile (upper bound of the bucket holding
+        the q-th observation; the overflow bucket reports its lower
+        bound). Coarse by construction — exact percentiles come from the
+        raw samples via :func:`percentile`."""
+        if self.count == 0:
+            return 0.0
+        target = q / 100.0 * self.count
+        seen = 0
+        for i, c in enumerate(self.counts):
+            seen += c
+            if seen >= target and c:
+                return (self.buckets[i] if i < len(self.buckets)
+                        else self.buckets[-1])
+        return self.buckets[-1]
+
+
+_TYPES = {"counter": Counter, "gauge": Gauge, "histogram": Histogram}
+
+
+def _label_key(labels: Dict[str, object]) -> LabelKey:
+    return tuple(sorted((str(k), str(v)) for k, v in labels.items()))
+
+
+class Metrics:
+    """The registry: families of labeled series, one schema out."""
+
+    def __init__(self):
+        # name -> {"type": str, "buckets": [...]|None, "series": {key: m}}
+        self._families: Dict[str, dict] = {}
+
+    # -- creation/access ------------------------------------------------
+    def _series(self, name: str, typ: str, buckets=None, labels=None):
+        fam = self._families.get(name)
+        if fam is None:
+            fam = {"type": typ, "buckets": list(buckets) if buckets else None,
+                   "series": {}}
+            self._families[name] = fam
+        elif fam["type"] != typ:
+            raise ValueError(f"metric {name!r} is a {fam['type']}, "
+                             f"not a {typ}")
+        key = _label_key(labels or {})
+        m = fam["series"].get(key)
+        if m is None:
+            m = (Histogram(buckets if buckets is not None
+                           else fam["buckets"])
+                 if typ == "histogram" else _TYPES[typ]())
+            fam["series"][key] = m
+        return m
+
+    def counter(self, name: str, **labels) -> Counter:
+        return self._series(name, "counter", labels=labels)
+
+    def gauge(self, name: str, **labels) -> Gauge:
+        return self._series(name, "gauge", labels=labels)
+
+    def histogram(self, name: str, buckets: Optional[Sequence[float]] = None,
+                  **labels) -> Histogram:
+        if buckets is None and name not in self._families:
+            raise ValueError(f"first use of histogram {name!r} must "
+                             f"declare buckets")
+        return self._series(name, "histogram", buckets=buckets,
+                            labels=labels)
+
+    def value(self, name: str, **labels) -> float:
+        """Scalar value of a counter/gauge series (KeyError if absent)."""
+        fam = self._families[name]
+        m = fam["series"][_label_key(labels)]
+        if isinstance(m, Histogram):
+            raise TypeError(f"{name!r} is a histogram; read its series")
+        return m.value
+
+    def families(self) -> List[str]:
+        return sorted(self._families)
+
+    # -- schema ---------------------------------------------------------
+    def to_dict(self) -> dict:
+        out = {}
+        for name in sorted(self._families):
+            fam = self._families[name]
+            series = []
+            for key in sorted(fam["series"]):
+                m = fam["series"][key]
+                entry = {"labels": dict(key)}
+                if isinstance(m, Histogram):
+                    entry.update(buckets=list(m.buckets),
+                                 counts=list(m.counts),
+                                 count=m.count, sum=m.sum)
+                else:
+                    entry["value"] = m.value
+                series.append(entry)
+            out[name] = {"type": fam["type"], "series": series}
+        return {"schema": SCHEMA, "version": SCHEMA_VERSION, "metrics": out}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Metrics":
+        if d.get("schema") != SCHEMA or d.get("version") != SCHEMA_VERSION:
+            raise ValueError(f"not a {SCHEMA}/{SCHEMA_VERSION} payload: "
+                             f"{d.get('schema')!r}/{d.get('version')!r}")
+        reg = cls()
+        for name, fam in d["metrics"].items():
+            for s in fam["series"]:
+                labels = s["labels"]
+                if fam["type"] == "histogram":
+                    h = reg.histogram(name, buckets=s["buckets"], **labels)
+                    h.counts = [int(c) for c in s["counts"]]
+                    h.count = int(s["count"])
+                    h.sum = float(s["sum"])
+                elif fam["type"] == "counter":
+                    reg.counter(name, **labels).inc(float(s["value"]))
+                else:
+                    reg.gauge(name, **labels).set(float(s["value"]))
+        return reg
+
+    # -- snapshot / merge / diff ---------------------------------------
+    def snapshot(self) -> "Metrics":
+        return Metrics.from_dict(self.to_dict())
+
+    def merge(self, other: "Metrics") -> "Metrics":
+        """Fold ``other`` into ``self``: counters and histogram buckets
+        add, gauges take ``other``'s value. Returns ``self``."""
+        for name, fam in other._families.items():
+            for key, m in fam["series"].items():
+                labels = dict(key)
+                if fam["type"] == "counter":
+                    self.counter(name, **labels).inc(m.value)
+                elif fam["type"] == "gauge":
+                    self.gauge(name, **labels).set(m.value)
+                else:
+                    h = self.histogram(name, buckets=m.buckets, **labels)
+                    if h.buckets != m.buckets:
+                        raise ValueError(f"histogram {name!r}{labels}: "
+                                         f"bucket mismatch")
+                    h.counts = [a + b for a, b in zip(h.counts, m.counts)]
+                    h.count += m.count
+                    h.sum += m.sum
+        return self
+
+    def diff(self, earlier: "Metrics") -> "Metrics":
+        """New registry holding ``self - earlier``: counters and histogram
+        buckets subtract (a series absent from ``earlier`` passes through
+        whole); gauges keep ``self``'s current value."""
+        out = self.snapshot()
+        for name, fam in earlier._families.items():
+            if name not in out._families:
+                continue
+            ofam = out._families[name]
+            for key, m in fam["series"].items():
+                o = ofam["series"].get(key)
+                if o is None:
+                    continue
+                if fam["type"] == "counter":
+                    o.value -= m.value
+                elif fam["type"] == "histogram":
+                    if o.buckets != m.buckets:
+                        raise ValueError(f"histogram {name!r}: bucket "
+                                         f"mismatch in diff")
+                    o.counts = [a - b for a, b in zip(o.counts, m.counts)]
+                    o.count -= m.count
+                    o.sum -= m.sum
+        return out

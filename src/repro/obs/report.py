@@ -1,0 +1,168 @@
+"""Trace summarizer: ``python -m repro.obs.report TRACE[.json|.jsonl]``.
+
+Reconstructs, from any trace written by :class:`repro.obs.trace.Tracer`:
+
+  * **top spans by self-time** — per span name, call count, total and
+    self time (duration minus nested children), the profiler's headline;
+  * **per-backend time share** — execute spans attributed with a
+    ``backend`` arg (the profiled compiled engine) aggregated into a
+    time-share map;
+  * **request latency breakdown** — ``request``-category lifecycle spans:
+    request count plus queue-wait/TTFT/latency p50/p99 recomputed from
+    the per-request args through the same :func:`repro.obs.metrics.
+    percentile` the serving driver's ``Server.stats()`` uses, so the two
+    agree bit for bit;
+  * **slot utilization** — the serving driver's per-tick ``slots``
+    counter track averaged against the slot capacity in the trace meta;
+  * **profile coverage** — for profiled engine runs, the fraction of the
+    latest ``chain`` span's wall time attributed to named child steps
+    (the acceptance bar is >= 0.95).
+
+Prints one JSON object; exits nonzero on unreadable/invalid traces.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List, Optional, Sequence
+
+from .metrics import percentile
+from .trace import Trace, load_trace
+
+
+def _span_children(spans: List[dict]) -> Dict[object, List[dict]]:
+    kids: Dict[object, List[dict]] = {}
+    for s in spans:
+        p = s.get("parent")
+        if p is not None:
+            kids.setdefault(p, []).append(s)
+    return kids
+
+
+def top_spans(trace: Trace, n: int = 15) -> List[dict]:
+    spans = trace.spans
+    kids = _span_children(spans)
+    agg: Dict[str, dict] = {}
+    for s in spans:
+        child_t = sum(c["dur"] for c in kids.get(s.get("id"), ()))
+        a = agg.setdefault(s["name"], dict(name=s["name"], cat=s["cat"],
+                                           calls=0, total_us=0.0,
+                                           self_us=0.0))
+        a["calls"] += 1
+        a["total_us"] += s["dur"]
+        a["self_us"] += max(0.0, s["dur"] - child_t)
+    out = sorted(agg.values(), key=lambda a: -a["self_us"])[:n]
+    for a in out:
+        a["total_us"] = round(a["total_us"], 1)
+        a["self_us"] = round(a["self_us"], 1)
+    return out
+
+
+def backend_share(trace: Trace) -> Dict[str, float]:
+    """Time share per ``backend`` arg over backend-attributed spans."""
+    by: Dict[str, float] = {}
+    for s in trace.spans:
+        b = s["args"].get("backend")
+        if b is not None:
+            by[b] = by.get(b, 0.0) + s["dur"]
+    total = sum(by.values())
+    return ({b: round(v / total, 4) for b, v in sorted(by.items())}
+            if total > 0 else {})
+
+
+def request_stats(trace: Trace) -> dict:
+    """Request count + latency percentiles from lifecycle spans. Keys are
+    well-formed for zero and one finished request (percentile() contract)."""
+    reqs = [s for s in trace.spans
+            if s["cat"] == "request" and s["name"] == "request"]
+    qw = [s["args"]["queue_wait_s"] for s in reqs
+          if "queue_wait_s" in s["args"]]
+    ttft = [s["args"]["ttft_s"] for s in reqs if "ttft_s" in s["args"]]
+    lat = [s["args"]["latency_s"] for s in reqs if "latency_s" in s["args"]]
+    return {
+        "requests": len(reqs),
+        "p50_queue_wait_s": percentile(qw, 50),
+        "p99_queue_wait_s": percentile(qw, 99),
+        "p50_ttft_s": percentile(ttft, 50),
+        "p99_ttft_s": percentile(ttft, 99),
+        "p50_latency_s": percentile(lat, 50),
+        "p99_latency_s": percentile(lat, 99),
+        "tokens_out": sum(int(s["args"].get("out_len", 0)) for s in reqs),
+    }
+
+
+def phase_breakdown(trace: Trace) -> Dict[str, dict]:
+    """p50/total seconds per request-lifecycle phase (queue/prefill/
+    decode child spans under ``request`` spans)."""
+    phases: Dict[str, List[float]] = {}
+    for s in trace.spans:
+        if s["cat"] == "request" and s["name"] != "request":
+            phases.setdefault(s["name"], []).append(s["dur"] / 1e6)
+    return {name: {"count": len(xs), "p50_s": percentile(xs, 50),
+                   "total_s": round(sum(xs), 6)}
+            for name, xs in sorted(phases.items())}
+
+
+def slot_utilization(trace: Trace) -> Optional[float]:
+    samples = [c["values"].get("active") for c in trace.counters
+               if c["name"] == "slots" and "active" in c["values"]]
+    if not samples:
+        return None
+    slots = trace.meta.get("slots")
+    mean_active = sum(samples) / len(samples)
+    return round(mean_active / slots, 4) if slots else round(mean_active, 4)
+
+
+def profile_coverage(trace: Trace) -> Optional[dict]:
+    """Fraction of the latest ``chain`` span attributed to named child
+    steps — how much of a profiled run the profiler can explain."""
+    chains = [s for s in trace.spans if s["cat"] == "chain"]
+    if not chains:
+        return None
+    kids = _span_children(trace.spans)
+    last = chains[-1]
+    steps = kids.get(last.get("id"), [])
+    child_t = sum(c["dur"] for c in steps)
+    cov = child_t / last["dur"] if last["dur"] > 0 else 0.0
+    return {"chain": last["name"], "span_us": round(last["dur"], 1),
+            "steps": len(steps), "attributed_us": round(child_t, 1),
+            "coverage": round(min(cov, 1.0), 4),
+            "signature": last["args"].get("signature")}
+
+
+def summarize(trace: Trace, top: int = 15) -> dict:
+    out = {"schema_version": trace.version, "meta": trace.meta,
+           "events": len(trace.events), "spans": len(trace.spans)}
+    out.update(request_stats(trace))
+    out["phases"] = phase_breakdown(trace)
+    out["slot_utilization"] = slot_utilization(trace)
+    out["backend_share"] = backend_share(trace)
+    out["profile"] = profile_coverage(trace)
+    out["top_spans"] = top_spans(trace, top)
+    return out
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.obs.report",
+        description="Summarize a repro.obs trace (Chrome JSON or JSONL).")
+    ap.add_argument("trace", help="path written by Tracer.write / --trace")
+    ap.add_argument("--top", type=int, default=15,
+                    help="span-name rows in the self-time table")
+    args = ap.parse_args(argv)
+    try:
+        trace = load_trace(args.trace)
+    except (OSError, ValueError) as e:
+        print(f"report: invalid trace {args.trace!r}: {e}", file=sys.stderr)
+        return 1
+    try:
+        print(json.dumps(summarize(trace, top=args.top), indent=1,
+                         default=float))
+    except BrokenPipeError:            # | head etc. closed stdout
+        pass
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,320 @@
+"""Span tracer: nested timed spans, counter tracks, Chrome-trace export.
+
+The tracing substrate every subsystem emits through (the profiled
+compiled engine, the serving driver's per-request lifecycle, the DSE
+driver). Design constraints, in priority order:
+
+  1. **Provably near-zero cost when disabled.** ``Tracer.span`` on a
+     disabled tracer returns a module-level singleton no-op context
+     manager — no object, dict or closure is allocated per call
+     (regression-tested with ``tracemalloc`` in tests/test_obs.py), and
+     hot paths additionally gate on ``tracer.enabled`` before building
+     attr dicts.
+  2. **Bounded memory.** Finished events land in a ring buffer
+     (``collections.deque(maxlen=capacity)``); a long serve run keeps the
+     most recent ``capacity`` events rather than growing without bound.
+  3. **Standard viewers.** ``write(path)`` emits Chrome trace-event JSON
+     (``*.json`` — load it in Perfetto / ``chrome://tracing``) or the
+     line-oriented JSONL form (``*.jsonl``); both carry the schema name
+     and version and round-trip through :func:`load_trace`.
+
+Event schema (version :data:`SCHEMA_VERSION`) — one dict per event:
+
+  * ``span``:    ``{type, name, cat, id, parent, ts, dur, wall, args}``
+                 — ``ts``/``dur`` in microseconds on the tracer's
+                 monotonic clock, ``wall`` the wall-clock epoch seconds
+                 of the span start, ``parent`` the enclosing span's id
+                 (``None`` at top level).
+  * ``instant``: ``{type, name, cat, ts, args}``
+  * ``counter``: ``{type, name, ts, values}`` — a named multi-series
+                 counter track (Chrome ``C`` events; e.g. the serving
+                 driver's per-tick slot occupancy).
+
+The serving trace additionally follows the *request lifecycle* schema
+that ``repro.sim`` can replay: per finished request one ``request`` span
+(cat ``request``) whose ``args`` carry ``rid``, ``prompt_len``,
+``max_new``, ``out_len``, ``submit_tick``/``admit_tick``/``done_tick``
+(driver tick indices, the simulator's replay clock) and the measured
+``queue_wait_s``/``ttft_s``/``latency_s``, plus ``queue``/``prefill``/
+``decode`` child spans subdividing it.
+"""
+from __future__ import annotations
+
+import json
+import time
+from collections import deque
+from typing import Dict, List, Optional
+
+SCHEMA = "repro.obs.trace"
+SCHEMA_VERSION = 1
+
+_EVENT_TYPES = ("span", "instant", "counter")
+
+
+class _NullSpan:
+    """Singleton no-op context manager returned by a disabled tracer."""
+
+    __slots__ = ()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, et, ev, tb):
+        return False
+
+    def set(self, key, value):
+        return self
+
+
+_NULL_SPAN = _NullSpan()
+
+
+class _Span:
+    """A live span; records itself into the tracer's ring on exit."""
+
+    __slots__ = ("_tr", "name", "cat", "attrs", "id", "parent", "_t0",
+                 "_wall0")
+
+    def __init__(self, tr: "Tracer", name: str, cat: str,
+                 attrs: Optional[dict]):
+        self._tr = tr
+        self.name = name
+        self.cat = cat
+        self.attrs = attrs
+
+    def set(self, key, value):
+        """Attach one attribute after entry (lazy attrs on live spans)."""
+        if self.attrs is None:
+            self.attrs = {}
+        self.attrs[key] = value
+        return self
+
+    def __enter__(self):
+        tr = self._tr
+        self.id = tr._next_id
+        tr._next_id += 1
+        stack = tr._stack
+        self.parent = stack[-1].id if stack else None
+        stack.append(self)
+        self._wall0 = time.time()
+        self._t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, et, ev, tb):
+        t1 = time.perf_counter()
+        tr = self._tr
+        tr._stack.pop()
+        tr.events.append({
+            "type": "span", "name": self.name, "cat": self.cat,
+            "id": self.id, "parent": self.parent,
+            "ts": (self._t0 - tr._epoch) * 1e6,
+            "dur": (t1 - self._t0) * 1e6,
+            "wall": self._wall0,
+            "args": self.attrs or {},
+        })
+        return False
+
+
+class Tracer:
+    """Ring-buffered span/counter tracer.
+
+    ``enabled`` may be flipped at runtime; while ``False`` every emission
+    method is a flag check returning a shared no-op. ``meta`` is free-form
+    context (arch, slot count, ...) carried in the exported header.
+    """
+
+    def __init__(self, capacity: int = 65536, enabled: bool = True):
+        self.enabled = enabled
+        self.capacity = int(capacity)
+        self.events: deque = deque(maxlen=self.capacity)
+        self.meta: Dict[str, object] = {}
+        self._stack: List[_Span] = []
+        self._next_id = 0
+        self._epoch = time.perf_counter()   # monotonic trace time zero
+        self._wall_epoch = time.time()
+
+    # -- emission -------------------------------------------------------
+    def span(self, name, cat="default", attrs=None):
+        """Context manager timing a nested span. Disabled: no-op
+        singleton, no per-call allocation beyond this flag check."""
+        if not self.enabled:
+            return _NULL_SPAN
+        return _Span(self, name, cat, attrs)
+
+    def instant(self, name, cat="default", attrs=None):
+        if not self.enabled:
+            return
+        self.events.append({
+            "type": "instant", "name": name, "cat": cat,
+            "ts": (time.perf_counter() - self._epoch) * 1e6,
+            "args": attrs or {}})
+
+    def counter(self, name, values):
+        """One sample of a multi-series counter track (Chrome ``C``)."""
+        if not self.enabled:
+            return
+        self.events.append({
+            "type": "counter", "name": name,
+            "ts": (time.perf_counter() - self._epoch) * 1e6,
+            "values": dict(values)})
+
+    def add_span(self, name, cat, start, end, parent=None, attrs=None):
+        """Record a span from explicit ``time.perf_counter()`` endpoints
+        (the serving driver's request lifecycle: the timestamps were taken
+        long before the span is emitted). Returns the span id so callers
+        can parent children onto it."""
+        if not self.enabled:
+            return None
+        sid = self._next_id
+        self._next_id += 1
+        self.events.append({
+            "type": "span", "name": name, "cat": cat,
+            "id": sid, "parent": parent,
+            "ts": (start - self._epoch) * 1e6,
+            "dur": max(0.0, (end - start) * 1e6),
+            "wall": self._wall_epoch + (start - self._epoch),
+            "args": attrs or {}})
+        return sid
+
+    def us(self, t_perf: float) -> float:
+        """Trace-relative microseconds of a ``time.perf_counter()`` value."""
+        return (t_perf - self._epoch) * 1e6
+
+    # -- export ---------------------------------------------------------
+    def _header(self) -> dict:
+        return {"schema": SCHEMA, "version": SCHEMA_VERSION,
+                "meta": dict(self.meta)}
+
+    def chrome(self) -> dict:
+        """Chrome trace-event JSON object (Perfetto-loadable)."""
+        evs = []
+        for e in self.events:
+            if e["type"] == "span":
+                args = dict(e["args"])
+                args["id"] = e["id"]
+                if e["parent"] is not None:
+                    args["parent"] = e["parent"]
+                evs.append({"name": e["name"], "cat": e["cat"], "ph": "X",
+                            "ts": e["ts"], "dur": e["dur"],
+                            "pid": 0, "tid": 0, "args": args})
+            elif e["type"] == "instant":
+                evs.append({"name": e["name"], "cat": e["cat"], "ph": "i",
+                            "s": "t", "ts": e["ts"], "pid": 0, "tid": 0,
+                            "args": dict(e["args"])})
+            elif e["type"] == "counter":
+                evs.append({"name": e["name"], "ph": "C", "ts": e["ts"],
+                            "pid": 0, "args": dict(e["values"])})
+        return {"traceEvents": evs, "otherData": self._header()}
+
+    def write(self, path: str):
+        """``*.jsonl`` -> the JSONL schema; anything else -> Chrome JSON."""
+        if str(path).endswith(".jsonl"):
+            with open(path, "w") as f:
+                f.write(json.dumps(self._header()) + "\n")
+                for e in self.events:
+                    f.write(json.dumps(e, default=float) + "\n")
+        else:
+            with open(path, "w") as f:
+                json.dump(self.chrome(), f, default=float)
+
+
+# ---------------------------------------------------------------------------
+# loading + validation
+# ---------------------------------------------------------------------------
+class Trace:
+    """A loaded, schema-validated trace (either export format)."""
+
+    def __init__(self, meta: dict, events: List[dict], version: int):
+        self.meta = meta
+        self.events = events
+        self.version = version
+
+    @property
+    def spans(self) -> List[dict]:
+        return [e for e in self.events if e["type"] == "span"]
+
+    @property
+    def instants(self) -> List[dict]:
+        return [e for e in self.events if e["type"] == "instant"]
+
+    @property
+    def counters(self) -> List[dict]:
+        return [e for e in self.events if e["type"] == "counter"]
+
+
+_REQUIRED = {
+    "span": ("name", "cat", "id", "ts", "dur", "args"),
+    "instant": ("name", "cat", "ts", "args"),
+    "counter": ("name", "ts", "values"),
+}
+
+
+def validate_event(e: dict):
+    t = e.get("type")
+    if t not in _EVENT_TYPES:
+        raise ValueError(f"unknown trace event type {t!r}")
+    missing = [k for k in _REQUIRED[t] if k not in e]
+    if missing:
+        raise ValueError(f"{t} event missing fields {missing}: {e}")
+
+
+def _validate_header(hdr: dict) -> dict:
+    if hdr.get("schema") != SCHEMA:
+        raise ValueError(f"not a {SCHEMA} trace: schema={hdr.get('schema')!r}")
+    v = hdr.get("version")
+    if v != SCHEMA_VERSION:
+        raise ValueError(f"unsupported {SCHEMA} version {v!r} "
+                         f"(supported: {SCHEMA_VERSION})")
+    return hdr
+
+
+def _from_chrome(doc: dict) -> Trace:
+    hdr = _validate_header(doc.get("otherData") or {})
+    events = []
+    for ev in doc.get("traceEvents", []):
+        ph = ev.get("ph")
+        if ph == "X":
+            args = dict(ev.get("args") or {})
+            sid = args.pop("id", None)
+            parent = args.pop("parent", None)
+            events.append({"type": "span", "name": ev["name"],
+                           "cat": ev.get("cat", "default"), "id": sid,
+                           "parent": parent, "ts": ev["ts"],
+                           "dur": ev.get("dur", 0.0), "args": args})
+        elif ph == "i":
+            events.append({"type": "instant", "name": ev["name"],
+                           "cat": ev.get("cat", "default"), "ts": ev["ts"],
+                           "args": dict(ev.get("args") or {})})
+        elif ph == "C":
+            events.append({"type": "counter", "name": ev["name"],
+                           "ts": ev["ts"],
+                           "values": dict(ev.get("args") or {})})
+    for e in events:
+        validate_event(e)
+    return Trace(hdr.get("meta", {}), events, hdr["version"])
+
+
+def _from_jsonl(lines: List[str]) -> Trace:
+    if not lines:
+        raise ValueError("empty trace file")
+    hdr = _validate_header(json.loads(lines[0]))
+    events = []
+    for ln in lines[1:]:
+        ln = ln.strip()
+        if not ln:
+            continue
+        e = json.loads(ln)
+        validate_event(e)
+        events.append(e)
+    return Trace(hdr.get("meta", {}), events, hdr["version"])
+
+
+def load_trace(path: str) -> Trace:
+    """Load + validate a trace written by :meth:`Tracer.write` (either
+    format, auto-detected). Raises ``ValueError`` on schema violations."""
+    with open(path) as f:
+        text = f.read()
+    stripped = text.lstrip()
+    if stripped.startswith("{") and '"traceEvents"' in stripped[:4096]:
+        return _from_chrome(json.loads(text))
+    return _from_jsonl(text.splitlines())

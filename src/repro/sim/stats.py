@@ -3,6 +3,14 @@
 Cycle counts are accelerator cycles; energy is in the same relative units as
 :mod:`repro.core.costmodel` (one local-scratchpad access = 1.0, Eyeriss
 convention), so sim and analytic numbers are directly comparable.
+
+Both stat classes emit through the unified :mod:`repro.obs.metrics`
+registry: ``to_metrics()`` populates labeled counter/gauge families
+(``sim_cycles{phase=...}``, ``sim_stall_cycles{buffer=...}``,
+``sim_movement_words{tensor=...}``, ...) and ``summary()`` — the dict
+shape ``sim/validate.py`` and ``results/sim/`` artifacts consume — is
+*derived from that registry*, so the flat summaries and the versioned
+metrics schema can never drift apart.
 """
 from __future__ import annotations
 
@@ -10,6 +18,7 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
 from repro.core.mapping import Mapping
+from repro.obs.metrics import Metrics
 
 from .buffers import BufferPort
 
@@ -41,16 +50,46 @@ class NodeSimStats:
             return 1.0 if self.kind == "gconv" else 0.0
         return self.compute_cycles / self.total_cycles
 
+    def to_metrics(self, reg: Optional[Metrics] = None,
+                   **labels) -> Metrics:
+        """Emit this node into a metrics registry (extra ``labels`` — e.g.
+        ``chain=``/``accel=`` — ride along on every series)."""
+        reg = Metrics() if reg is None else reg
+        lbl = dict(node=self.name, kind=self.kind, **labels)
+        reg.counter("sim_tiles", **lbl).inc(self.tiles)
+        for phase, v in (("total", self.total_cycles),
+                         ("compute", self.compute_cycles),
+                         ("fill", self.fill_cycles),
+                         ("drain", self.drain_cycles)):
+            reg.counter("sim_cycles", phase=phase, **lbl).inc(v)
+        for buf, v in self.stalls.items():
+            reg.counter("sim_stall_cycles", buffer=buf, **lbl).inc(v)
+        for tensor, v in self.movement.items():
+            reg.counter("sim_movement_words", tensor=tensor, **lbl).inc(v)
+        reg.counter("sim_energy", **lbl).inc(self.energy)
+        reg.gauge("sim_utilization", **lbl).set(self.utilization)
+        return reg
+
     def summary(self) -> dict:
-        return dict(name=self.name, kind=self.kind, tiles=self.tiles,
-                    cycles=self.total_cycles,
-                    compute_cycles=self.compute_cycles,
-                    fill_cycles=round(self.fill_cycles, 1),
-                    drain_cycles=round(self.drain_cycles, 1),
+        reg = self.to_metrics()
+        lbl = dict(node=self.name, kind=self.kind)
+        cyc = lambda phase: reg.value("sim_cycles", phase=phase, **lbl)
+        return dict(name=self.name, kind=self.kind,
+                    tiles=int(reg.value("sim_tiles", **lbl)),
+                    cycles=cyc("total"),
+                    compute_cycles=cyc("compute"),
+                    fill_cycles=round(cyc("fill"), 1),
+                    drain_cycles=round(cyc("drain"), 1),
                     stall_cycles=round(self.stall_cycles, 1),
-                    stalls={d: round(v, 1) for d, v in self.stalls.items()},
-                    utilization=round(self.utilization, 4),
-                    movement=self.movement, energy=self.energy)
+                    stalls={d: round(reg.value("sim_stall_cycles",
+                                               buffer=d, **lbl), 1)
+                            for d in self.stalls},
+                    utilization=round(reg.value("sim_utilization",
+                                                **lbl), 4),
+                    movement={t: reg.value("sim_movement_words",
+                                           tensor=t, **lbl)
+                              for t in self.movement},
+                    energy=reg.value("sim_energy", **lbl))
 
 
 @dataclass
@@ -94,12 +133,42 @@ class ChainSimStats:
         total = self.total_cycles
         return self.compute_cycles / total if total > 0 else 1.0
 
+    def to_metrics(self, reg: Optional[Metrics] = None,
+                   per_node: bool = False) -> Metrics:
+        """Chain-level series labeled ``chain``/``accel``; with
+        ``per_node=True`` every node's series is emitted alongside under
+        the same labels."""
+        reg = Metrics() if reg is None else reg
+        lbl = dict(chain=self.chain_name, accel=self.accel)
+        for phase, v in (("total", self.total_cycles),
+                         ("compute", self.compute_cycles),
+                         ("stall", self.stall_cycles)):
+            reg.counter("sim_chain_cycles", phase=phase, **lbl).inc(v)
+        reg.counter("sim_chain_movement_words", **lbl).inc(
+            self.movement_words)
+        reg.counter("sim_chain_energy", **lbl).inc(self.energy)
+        reg.counter("sim_handoff_overlap_cycles", **lbl).inc(
+            self.handoff_overlap_cycles)
+        reg.gauge("sim_chain_utilization", **lbl).set(self.utilization)
+        reg.gauge("sim_fused_groups", **lbl).set(len(self.fused_groups))
+        if per_node:
+            for n in self.nodes:
+                n.to_metrics(reg, **lbl)
+        return reg
+
     def summary(self) -> dict:
+        reg = self.to_metrics()
+        lbl = dict(chain=self.chain_name, accel=self.accel)
+        cyc = lambda phase: reg.value("sim_chain_cycles", phase=phase,
+                                      **lbl)
         return dict(chain=self.chain_name, accel=self.accel, mode="sim",
-                    cycles=self.total_cycles,
-                    compute_cycles=self.compute_cycles,
-                    stall_cycles=round(self.stall_cycles, 1),
-                    utilization=round(self.utilization, 4),
-                    movement=self.movement_words, energy=self.energy,
-                    fused_groups=len(self.fused_groups),
-                    handoff_overlap=round(self.handoff_overlap_cycles, 1))
+                    cycles=cyc("total"),
+                    compute_cycles=cyc("compute"),
+                    stall_cycles=round(cyc("stall"), 1),
+                    utilization=round(reg.value("sim_chain_utilization",
+                                                **lbl), 4),
+                    movement=reg.value("sim_chain_movement_words", **lbl),
+                    energy=reg.value("sim_chain_energy", **lbl),
+                    fused_groups=int(reg.value("sim_fused_groups", **lbl)),
+                    handoff_overlap=round(
+                        reg.value("sim_handoff_overlap_cycles", **lbl), 1))

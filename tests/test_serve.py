@@ -161,3 +161,121 @@ def test_report_token_accounting_and_latency_split():
     # TTFT includes queue wait but precedes full completion
     assert rep["p50_queue_wait_s"] <= rep["p50_ttft_s"] <= \
         rep["p50_latency_s"]
+
+
+def test_stats_zero_finished_requests_is_well_formed():
+    """stats() must be callable at any point in the server's life; with
+    nothing finished every percentile is 0.0 and nothing divides by zero
+    (the old _report assumed a drained non-empty workload)."""
+    srv = _mk(slots=2)
+    rep = srv.stats()
+    assert rep["requests"] == 0
+    assert rep["tokens_out"] == 0
+    for k in ("p50_queue_wait_s", "p99_queue_wait_s", "p50_ttft_s",
+              "p99_ttft_s", "p50_latency_s", "p99_latency_s"):
+        assert rep[k] == 0.0
+    assert rep["tok_per_s"] >= 0.0 and rep["tok_per_s_out"] >= 0.0
+    # still well-formed mid-flight (in progress, nothing finished yet)
+    srv.submit(Request(rid=0, prompt=[1, 2], max_new=6))
+    srv.tick()
+    mid = srv.stats()
+    assert mid["requests"] == 0 and mid["p99_ttft_s"] == 0.0
+    srv.run_until_drained()
+
+
+def test_stats_single_finished_request_p50_equals_p99():
+    """One sample is its own p50 AND p99 (the percentile() contract) —
+    the old percentile index arithmetic was only exercised at n >= 2."""
+    srv = _mk(slots=2)
+    srv.submit(Request(rid=0, prompt=[1, 2, 3], max_new=2))
+    rep = srv.run_until_drained()
+    assert rep["requests"] == 1
+    req = srv.finished[0]
+    ttft = req.first_token_at - req.submitted_at
+    assert rep["p50_ttft_s"] == rep["p99_ttft_s"] == ttft
+    assert rep["p50_latency_s"] == rep["p99_latency_s"] \
+        == req.done_at - req.submitted_at
+    assert rep["p50_queue_wait_s"] == rep["p99_queue_wait_s"] \
+        == req.admitted_at - req.submitted_at
+
+
+# ---------------------------------------------------------------------------
+# trace: the replayable request-lifecycle schema + stats agreement
+# ---------------------------------------------------------------------------
+def test_trace_round_trip_agrees_with_stats(tmp_path):
+    from repro.obs import Tracer, load_trace
+    from repro.obs.report import summarize
+
+    tr = Tracer()
+    srv = _mk(slots=2, tracer=tr)
+    reqs = [Request(rid=i, prompt=[1 + i, 2, 3], max_new=3)
+            for i in range(4)]
+    rep = srv.run_workload(reqs, stagger_ticks=1)
+    path = tmp_path / "serve.json"
+    tr.write(str(path))
+    out = summarize(load_trace(str(path)))
+    assert out["requests"] == rep["requests"] == 4
+    # bit-for-bit: both route through repro.obs.metrics.percentile
+    for k in ("p50_ttft_s", "p99_ttft_s", "p50_queue_wait_s",
+              "p99_queue_wait_s", "p50_latency_s", "p99_latency_s"):
+        assert out[k] == rep[k], k
+    assert out["tokens_out"] == rep["tokens_out"]
+    assert out["slot_utilization"] is not None
+    assert 0.0 < out["slot_utilization"] <= 1.0
+
+
+def test_trace_request_lifecycle_schema(tmp_path):
+    """The replayable schema: per request one `request` span carrying the
+    tick indices and measured waits, with queue/prefill/decode children
+    parented onto it, plus the per-tick slots counter track."""
+    from repro.obs import Tracer, load_trace
+
+    tr = Tracer()
+    srv = _mk(slots=2, tracer=tr)
+    reqs = [Request(rid=i, prompt=[1, 2], max_new=2) for i in range(3)]
+    srv.run_workload(reqs, stagger_ticks=2)
+    path = tmp_path / "serve.jsonl"
+    tr.write(str(path))
+    trace = load_trace(str(path))
+
+    req_spans = [s for s in trace.spans
+                 if s["cat"] == "request" and s["name"] == "request"]
+    assert len(req_spans) == 3
+    assert sorted(s["args"]["rid"] for s in req_spans) == [0, 1, 2]
+    for s in req_spans:
+        a = s["args"]
+        for k in ("rid", "prompt_len", "max_new", "out_len",
+                  "submit_tick", "admit_tick", "done_tick",
+                  "queue_wait_s", "ttft_s", "latency_s"):
+            assert k in a, k
+        # the sim replay clock: tick indices are orderable integers
+        assert 0 <= a["submit_tick"] <= a["admit_tick"] <= a["done_tick"]
+        kids = [c for c in trace.spans if c.get("parent") == s["id"]]
+        assert sorted(c["name"] for c in kids) \
+            == ["decode", "prefill", "queue"]
+
+    ticks = [s for s in trace.spans if s["cat"] == "serve"]
+    assert len(ticks) == srv.ticks
+    slot_samples = [c for c in trace.counters if c["name"] == "slots"]
+    assert len(slot_samples) == srv.ticks
+    assert all({"active", "queued"} <= set(c["values"])
+               for c in slot_samples)
+    assert max(c["values"]["active"] for c in slot_samples) <= srv.slots
+
+    # engine spans ride along: decode/splice under cat "engine", prefill
+    # under compile/execute (cold vs warm program, like the profiled chain)
+    names = {s["name"] for s in trace.spans}
+    assert {"engine.prefill", "engine.decode", "engine.splice"} <= names
+    prefills = [s for s in trace.spans if s["name"] == "engine.prefill"]
+    assert {s["cat"] for s in prefills} <= {"compile", "execute"}
+
+
+def test_untraced_server_has_no_tracer_and_metrics_schema():
+    srv = _mk(slots=2)
+    assert srv.tracer is None
+    srv.submit(Request(rid=0, prompt=[1, 2], max_new=2))
+    srv.run_until_drained()
+    d = srv.metrics_dict()
+    assert d["schema"] == "repro.obs.metrics" and d["version"] == 1
+    fam = d["metrics"]["serve_requests"]["series"]
+    assert fam[0]["value"] == 1.0

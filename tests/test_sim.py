@@ -269,3 +269,84 @@ def test_zoo_cross_validation_agreement():
     assert summary["max_energy_drift"] < 1e-6
     assert summary["max_movement_drift"] < 1e-6
     assert summary["max_cycles_ratio"] < 3.0
+
+
+# ---------------------------------------------------------------------------
+# stats arithmetic + the unified metrics schema (repro.obs.metrics)
+# ---------------------------------------------------------------------------
+def test_node_stats_arithmetic_direct():
+    """stall_cycles / utilization on hand-built numbers — the derived
+    properties, not the simulator."""
+    from repro.sim.stats import NodeSimStats
+
+    ns = NodeSimStats(name="n", kind="gconv", tiles=10,
+                      compute_cycles=80.0, total_cycles=100.0,
+                      fill_cycles=5.0, drain_cycles=3.0,
+                      stalls={"x": 12.0, "k": 8.0},
+                      movement={"x": 64.0, "y": 32.0}, energy=7.5)
+    assert ns.stall_cycles == pytest.approx(20.0)
+    assert ns.utilization == pytest.approx(0.8)
+
+    # zero-total edges: an all-hidden gconv is fully utilized; a movement
+    # pseudo-node with no cycles did no useful array work
+    assert NodeSimStats(name="g", kind="gconv").utilization == 1.0
+    assert NodeSimStats(name="m", kind="movement").utilization == 0.0
+    assert NodeSimStats(name="g", kind="gconv").stall_cycles == 0.0
+
+
+def test_chain_stats_handoff_subtraction_direct():
+    from repro.sim.stats import ChainSimStats, NodeSimStats
+
+    a = NodeSimStats(name="a", kind="gconv", compute_cycles=60.0,
+                     total_cycles=100.0, stalls={"x": 40.0})
+    b = NodeSimStats(name="b", kind="gconv", compute_cycles=30.0,
+                     total_cycles=50.0, stalls={"k": 20.0})
+    cs = ChainSimStats(chain_name="c", accel="ER", nodes=[a, b],
+                       handoff_overlap_cycles=10.0)
+    # the overlap leaves BOTH the total and the stall count, keeping
+    # compute + stalls == total exactly
+    assert cs.total_cycles == pytest.approx(140.0)
+    assert cs.stall_cycles == pytest.approx(50.0)
+    assert cs.compute_cycles + cs.stall_cycles \
+        == pytest.approx(cs.total_cycles)
+    assert cs.utilization == pytest.approx(90.0 / 140.0)
+    # degenerate: no nodes -> no cycles -> utilization defined as 1.0
+    empty = ChainSimStats(chain_name="e", accel="ER", nodes=[])
+    assert empty.total_cycles == 0.0 and empty.utilization == 1.0
+
+
+def test_summary_consistent_with_metrics_registry():
+    """summary() is DERIVED from to_metrics() — the flat dict and the
+    versioned schema cannot drift. Checked on a real simulated chain."""
+    from repro.obs.metrics import Metrics
+
+    chain = conv_chain()
+    spec = acc.eyeriss()
+    cs = simulate_chain(chain, spec)
+
+    s = cs.summary()
+    reg = cs.to_metrics()
+    lbl = dict(chain=cs.chain_name, accel=cs.accel)
+    assert s["cycles"] == reg.value("sim_chain_cycles", phase="total", **lbl)
+    assert s["energy"] == reg.value("sim_chain_energy", **lbl)
+    assert s["stall_cycles"] == pytest.approx(
+        reg.value("sim_chain_cycles", phase="stall", **lbl), abs=0.05)
+    d = reg.to_dict()
+    assert d["schema"] == "repro.obs.metrics" and d["version"] == 1
+
+    n = cs.nodes[0]
+    nsum = n.summary()
+    nreg = n.to_metrics()
+    nlbl = dict(node=n.name, kind=n.kind)
+    assert nsum["cycles"] == nreg.value("sim_cycles", phase="total", **nlbl)
+    assert nsum["compute_cycles"] == nreg.value("sim_cycles",
+                                                phase="compute", **nlbl)
+    assert nsum["utilization"] == pytest.approx(n.utilization, abs=1e-4)
+    assert nsum["tiles"] == n.tiles
+    assert set(nsum["stalls"]) == set(n.stalls)
+    assert set(nsum["movement"]) == set(n.movement)
+
+    # per_node=True emits node series alongside chain series in one registry
+    both = cs.to_metrics(Metrics(), per_node=True)
+    assert both.value("sim_cycles", phase="total", node=n.name,
+                      kind=n.kind, **lbl) == n.total_cycles
