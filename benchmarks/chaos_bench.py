@@ -1,0 +1,173 @@
+"""Chaos benchmarks: the serving resilience layer under injected faults.
+
+``chaos_micro`` — FAST-tier CI gate (via ``benchmarks.run``). Two checks,
+both of which must hold for ``ok``:
+
+  * **chaos differential** — a staggered smoke workload is served through
+    a fixed deterministic fault spec injecting four fault kinds (a raised
+    device error, NaN'd logits, a corrupted KV-cache slot, a latency
+    spike) plus two requests with infeasible SLO deadlines. Every fault
+    in the spec must actually fire, the deadline-infeasible requests must
+    be shed, every other request must end ``ok``, and every ``ok``
+    output must be byte-identical to the fault-free
+    ``sequential_reference`` — the recovery contract (bounded retries,
+    watchdog quarantine + replay-from-prompt) is bit-exactness, not
+    approximate correctness.
+  * **resilience overhead** — the SAME fault-free workload on a warm
+    plain server vs a warm server with the resilience layer enabled (no
+    chaos): the resilient arm must cost no more than
+    ``MAX_RESILIENCE_OVERHEAD`` extra per driver tick. Estimator:
+    interleaved workload runs (arms alternate run by run), every tick
+    individually timed, per-arm MEDIAN tick duration compared — hundreds
+    of tick samples per arm make the median immune to the scheduler
+    bursts that make whole-workload wall times flaky at the 5% scale.
+"""
+from __future__ import annotations
+
+import time
+
+ARCH = "tinyllama-1.1b"
+
+# the resilience layer (retry wrappers, SLO scan, NaN watchdog) must be
+# near-free when nothing goes wrong; the acceptance bar is <= 5% on the
+# fault-free serve path (ISSUE 7)
+MAX_RESILIENCE_OVERHEAD = 0.05
+OVERHEAD_PAIRS = 12
+
+# the fixed differential spec: raise + nan + corrupt + latency across the
+# engine's decode/prefill sites and the driver tick loop (indices chosen
+# inside the busy window of the 8-request stagger-1 workload)
+CHAOS_SPEC = ("decode@3=raise;decode@5=nan:1;decode@8=corrupt:0;"
+              "prefill@2=raise;tick@1=latency:0.002")
+REQUIRED_KINDS = {"raise", "nan", "corrupt", "latency"}
+
+
+def _workload(n, vocab, max_new, seed=0, deadline=None):
+    import numpy as np
+
+    from repro.launch.serve import Request
+
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    prompt=rng.integers(0, vocab,
+                                        rng.integers(2, 6)).tolist(),
+                    max_new=max_new, deadline_ticks=deadline)
+            for i in range(n)]
+
+
+def _clone(reqs):
+    from repro.launch.serve import Request
+
+    return [Request(rid=r.rid, prompt=list(r.prompt), max_new=r.max_new,
+                    deadline_ticks=r.deadline_ticks) for r in reqs]
+
+
+def _chaos_differential():
+    """Serve through CHAOS_SPEC; compare ok outputs byte-for-byte against
+    the fault-free sequential reference."""
+    from repro.launch.serve import (ResilienceConfig, Request, Server,
+                                    sequential_reference)
+    from repro.runtime.chaos import ChaosInjector, ChaosPlan
+
+    chaos = ChaosInjector(ChaosPlan.parse(CHAOS_SPEC))
+    srv = Server(ARCH, smoke=True, slots=4, max_len=96,
+                 resilience=ResilienceConfig(), chaos=chaos)
+    reqs = _workload(8, srv.cfg.vocab, max_new=8)
+    # two deadline-infeasible requests ride along: max_new=8 needs 7 ticks
+    # after admission, a 3-tick deadline can never be met -> shed up front
+    doomed = [Request(rid=100 + i, prompt=[1 + i, 2, 3], max_new=8,
+                      deadline_ticks=3) for i in range(2)]
+    submit = _clone(reqs)
+    submit[2:2] = _clone(doomed)
+    report = srv.run_workload(submit, stagger_ticks=1)
+    got = {r.rid: r.out for r in srv.finished if r.status == "ok"}
+    ref = sequential_reference(ARCH, reqs, smoke=True, max_len=96)
+    identical = (set(got) == {r.rid for r in reqs}
+                 and all(got[r.rid] == ref[i] for i, r in enumerate(reqs)))
+    st = report["statuses"]
+    row = dict(
+        check="chaos_differential",
+        spec=CHAOS_SPEC,
+        kinds_fired=sorted(chaos.kinds_fired()),
+        faults_unfired=chaos.remaining,
+        statuses=st,
+        retries=report["retries"],
+        quarantines=report["quarantines"],
+        identical_to_reference=bool(identical),
+    )
+    ok = bool(identical
+              and chaos.remaining == 0
+              and REQUIRED_KINDS <= chaos.kinds_fired()
+              and st["ok"] == len(reqs)
+              and st["shed"] == len(doomed)
+              and st["failed"] == 0 and st["expired"] == 0)
+    row["ok"] = ok
+    return row, ok
+
+
+def _resilience_overhead():
+    """Warm fault-free workload: plain driver vs resilience enabled,
+    per-arm median TICK duration (see module docstring for why tick
+    granularity, not whole-workload wall time)."""
+    from repro.launch.serve import ResilienceConfig, Server
+
+    plain = Server(ARCH, smoke=True, slots=4, max_len=96)
+    resil = Server(ARCH, smoke=True, slots=4, max_len=96,
+                   resilience=ResilienceConfig())
+    reqs = _workload(8, plain.cfg.vocab, max_new=8)
+
+    def one(srv, durs=None):
+        srv.reset_state()
+        for r in _clone(reqs):
+            srv.submit(r)
+        while srv.queue or any(x is not None for x in srv.slot_req):
+            t0 = time.perf_counter()
+            srv.tick()
+            if durs is not None:
+                durs.append(time.perf_counter() - t0)
+
+    for srv in (plain, resil):               # pay the compiles up front
+        one(srv)
+
+    plains, resils = [], []
+    for i in range(OVERHEAD_PAIRS):
+        if i % 2:
+            one(resil, resils)
+            one(plain, plains)
+        else:
+            one(plain, plains)
+            one(resil, resils)
+
+    p = sorted(plains)[len(plains) // 2]
+    r = sorted(resils)[len(resils) // 2]
+    return p, r, r / p - 1.0
+
+
+def chaos_micro():
+    """FAST-tier gate: recovered outputs must be byte-identical to the
+    fault-free reference, and the fault-free resilient path must stay
+    within the 5% overhead budget."""
+    diff_row, diff_ok = _chaos_differential()
+    plain_s, resil_s, overhead = _resilience_overhead()
+    if overhead > MAX_RESILIENCE_OVERHEAD:
+        # same anti-flake policy as obs_micro: one re-measure, keep the
+        # smaller — noise passes on the retry, a real hot-path regression
+        # fails twice
+        p2, r2, o2 = _resilience_overhead()
+        if o2 < overhead:
+            plain_s, resil_s, overhead = p2, r2, o2
+    rows = [diff_row,
+            dict(check="resilience_overhead",
+                 plain_tick_ms=round(plain_s * 1e3, 3),
+                 resilient_tick_ms=round(resil_s * 1e3, 3),
+                 overhead=round(overhead, 4),
+                 budget=MAX_RESILIENCE_OVERHEAD,
+                 ok=bool(overhead <= MAX_RESILIENCE_OVERHEAD))]
+    summary = dict(
+        identical_to_reference=diff_row["identical_to_reference"],
+        kinds_fired=diff_row["kinds_fired"],
+        statuses=diff_row["statuses"],
+        resilience_overhead=round(overhead, 4),
+        ok=bool(diff_ok and overhead <= MAX_RESILIENCE_OVERHEAD),
+    )
+    return rows, summary

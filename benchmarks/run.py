@@ -30,7 +30,7 @@ ALL = ("table1", "fig12", "fig13", "fig14", "fig15", "fusion", "fig18",
        "serve")
 
 MICRO = ("exec_micro", "dse_micro", "serve_micro", "exec_sharded_micro",
-         "obs_micro")
+         "obs_micro", "chaos_micro")
 
 
 def _run(name, fn):
@@ -159,7 +159,8 @@ def main():
     else:
         want = list(ALL)
 
-    from benchmarks import dse_bench, exec_bench, obs_bench, serve_bench
+    from benchmarks import (chaos_bench, dse_bench, exec_bench, obs_bench,
+                            serve_bench)
     from benchmarks import paper_tables as pt
     from repro.obs import Metrics, provenance
 
@@ -178,6 +179,7 @@ def main():
         "serve": serve_bench.serve_bench,
         "serve_micro": serve_bench.serve_micro,
         "obs_micro": obs_bench.obs_micro,
+        "chaos_micro": chaos_bench.chaos_micro,
     }
     # harness wall-times go through the unified metrics registry so the
     # committed artifact carries the same schema every other subsystem emits
@@ -247,6 +249,13 @@ def main():
             "CLI disagrees with Server.stats() on request count or "
             "p50/p99 TTFT, or disabled-mode tracing overhead on the exec "
             "micro cell exceeded the 2% budget")
+    if "chaos_micro" in results and not results["chaos_micro"][1].get("ok"):
+        raise SystemExit(
+            "chaos_micro: recovered outputs diverged byte-for-byte from "
+            "the fault-free sequential reference under the fixed fault "
+            "spec, a spec'd fault never fired, a request landed in the "
+            "wrong terminal status, or the resilience layer cost more "
+            "than 5% on the fault-free serve path")
 
 
 if __name__ == "__main__":

@@ -26,7 +26,13 @@
 #                                   trace schema + report CLI; fails if
 #                                   the report disagrees with
 #                                   Server.stats() or disabled-mode
-#                                   tracing overhead exceeds 2%)
+#                                   tracing overhead exceeds 2%) and the
+#                                   chaos smoke (staggered workload served
+#                                   through a fixed fault-injection spec;
+#                                   fails if recovered outputs diverge
+#                                   byte-for-byte from the fault-free
+#                                   reference or the resilience layer
+#                                   costs >5% on the fault-free path)
 #   CI_INSTALL=1 ./scripts/ci.sh    pip install -e '.[dev]' first (networked
 #                                   CI; the dev extras declare pytest and
 #                                   hypothesis — without them the property
@@ -58,8 +64,10 @@ if [ "${FAST:-0}" = "1" ]; then
   # on faked host devices (exec_sharded_micro), or when the observability
   # layer breaks — serve trace failing schema validation, the report CLI
   # disagreeing with Server.stats(), or disabled-mode tracing overhead
-  # above 2% on the exec micro cell (obs_micro)
+  # above 2% on the exec micro cell (obs_micro), or when serving through
+  # the fixed chaos spec loses byte-identity with the fault-free
+  # reference / the resilience layer costs >5% fault-free (chaos_micro)
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m benchmarks.run \
-    --only exec_micro,dse_micro,serve_micro,exec_sharded_micro,obs_micro
+    --only exec_micro,dse_micro,serve_micro,exec_sharded_micro,obs_micro,chaos_micro
 fi

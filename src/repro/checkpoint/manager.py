@@ -136,6 +136,21 @@ class CheckpointManager:
         except Exception:
             return None
 
+    def verified_meta(self, step: Optional[int] = None
+                      ) -> Tuple[Optional[int], Optional[dict]]:
+        """``(step, meta)`` of the newest integrity-clean checkpoint (or the
+        given ``step``), walking back over corrupt/partial ones exactly like
+        :meth:`restore` — without loading the arrays. ``(None, None)`` when
+        nothing verifies. This is how the serving driver reads back the
+        ``extra`` payload it saved next to its state snapshot."""
+        candidates = ([step] if step is not None
+                      else list(reversed(self.all_steps())))
+        for s in candidates:
+            meta = self._verify(os.path.join(self.dir, f"step_{s}"))
+            if meta is not None:
+                return s, meta
+        return None, None
+
     def restore(self, tree_like, step: Optional[int] = None,
                 shardings=None) -> Tuple[Optional[int], Any]:
         """Restore into the structure of ``tree_like``. Walks back through

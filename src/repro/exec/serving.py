@@ -76,7 +76,7 @@ class ServeEngine:
     """
 
     def __init__(self, model, *, slots: int, max_len: int, mesh=None,
-                 tracer=None):
+                 tracer=None, chaos=None):
         self.model = model
         self.cfg = model.cfg
         self.slots = int(slots)
@@ -86,6 +86,11 @@ class ServeEngine:
         # synced so span durations are real device time. None (the
         # default) keeps every hot path on a single flag check.
         self.tracer = tracer
+        # optional repro.runtime.chaos injector: each compiled-program
+        # site calls chaos.enter(site) (which may raise/stall) and
+        # applies the returned data faults to its outputs. None (the
+        # default) keeps every hot path on a single flag check.
+        self.chaos = chaos
         self.axes: Dict[str, int] = dict(model.serve_axes)
         self.mesh = None if mesh is None or mesh.empty else mesh
         if self.mesh is not None:
@@ -144,14 +149,19 @@ class ServeEngine:
     def decode(self, params, tokens, cache):
         """tokens: (slots, 1) int32 -> (logits, cache). Row-independent:
         idle slots step a pad token but only their own rows move."""
+        ch = self.chaos
+        post = ch.enter("decode") if ch is not None else ()
         tr = self.tracer
         if tr is not None and tr.enabled:
             with tr.span("engine.decode", cat="engine",
                          attrs={"slots": self.slots}):
                 out = self._decode_fn(params, tokens, cache)
                 jax.block_until_ready(out)
-                return out
-        return self._decode_fn(params, tokens, cache)
+        else:
+            out = self._decode_fn(params, tokens, cache)
+        if post:
+            out = ch.apply_decode(post, out[0], out[1], self.axes)
+        return out
 
     # -- prefill: bucketed batched programs -----------------------------
     def _build_prefill(self, key):
@@ -187,8 +197,14 @@ class ServeEngine:
         if longest > self.max_len:
             raise ValueError(f"prompt length {longest} > max_len "
                              f"{self.max_len}")
+        ch = self.chaos
+        post = ch.enter("prefill") if ch is not None else ()
         if not self._batched_prefill_ok:
-            return self._prefill_loop(params, prompts)
+            logits, row_state, n = self._prefill_loop(params, prompts)
+            if post:
+                logits, row_state = ch.apply_decode(post, logits, row_state,
+                                                    self.axes)
+            return logits, row_state, n
         # sharded engines raise the row-bucket floor to the data-axis size
         # (see exec.batch): every admission bucket then divides the mesh
         nb = batch_bucket(n, self._dp_n)
@@ -211,10 +227,13 @@ class ServeEngine:
                 logits, row_state = fn(params, jnp.asarray(tokens),
                                        jnp.asarray(lengths))
                 jax.block_until_ready((logits, row_state))
-            return logits, row_state, n
-        fn = self._prefill_cache.get((nb, lb))
-        logits, row_state = fn(params, jnp.asarray(tokens),
-                               jnp.asarray(lengths))
+        else:
+            fn = self._prefill_cache.get((nb, lb))
+            logits, row_state = fn(params, jnp.asarray(tokens),
+                                   jnp.asarray(lengths))
+        if post:
+            logits, row_state = ch.apply_decode(post, logits, row_state,
+                                                self.axes)
         return logits, row_state, n
 
     def _prefill_loop(self, params, prompts):
@@ -265,6 +284,8 @@ class ServeEngine:
         ``slots[i]``: one fused jitted scatter for the whole admission."""
         if js is None:
             js = list(range(len(slots)))
+        if self.chaos is not None:
+            self.chaos.enter("splice")
         tr = self.tracer
         if tr is not None and tr.enabled:
             with tr.span("engine.splice", cat="engine",
@@ -294,6 +315,8 @@ class ServeEngine:
     def reset_slot(self, cache, slot: int):
         """Zero a slot's rows on release — a reused slot starts from a
         clean state even before its next splice."""
+        if self.chaos is not None:
+            self.chaos.enter("reset")
         tr = self.tracer
         if tr is not None and tr.enabled:
             with tr.span("engine.reset", cat="engine",
@@ -302,3 +325,44 @@ class ServeEngine:
                 jax.block_until_ready(out)
                 return out
         return self._reset_fn(cache, jnp.asarray(slot, jnp.int32))
+
+    # -- degraded-mode fallback: one request, private single-row state --
+    def decode_single(self, params, prompt: Sequence[int],
+                      max_new: int) -> List[int]:
+        """Greedy-decode ONE request end to end on a private single-row
+        state, bypassing the live slot batch — the driver's graceful-
+        degradation path when the batched decode program keeps failing.
+
+        Byte-identity with a single-slot server holds by construction:
+        the prompt goes through the SAME bucketed prefill program a
+        ``slots=1`` server would use (``batch_bucket(1) == 1``, same
+        length bucket), the row is spliced into a fresh 1-slot state by
+        the same (eagerly evaluated — pure data movement, bitwise
+        identical either way) splice arithmetic, and every decode step
+        runs ``jax.jit(model.decode_step)`` at the same (1, 1) shape.
+        The batched decode program — the thing that is failing — is
+        never touched, and neither is the live slot cache.
+        """
+        tr = self.tracer
+        if tr is not None and tr.enabled:
+            with tr.span("engine.decode_single", cat="engine",
+                         attrs={"prompt_len": len(prompt),
+                                "max_new": int(max_new)}):
+                return self._decode_single(params, prompt, max_new)
+        return self._decode_single(params, prompt, max_new)
+
+    def _decode_single(self, params, prompt, max_new):
+        logits, rows, _n = self.prefill(params, [list(prompt)])
+        st = self.model.serve_state_init(1, self.max_len,
+                                         per_slot_pos=True)
+        st = self._splice_many(st, jnp.asarray([0], jnp.int32), rows,
+                               jnp.asarray([0], jnp.int32))
+        step = self._prefill_cache.get((1, 0))   # jit(model.decode_step)
+        tok = int(np.asarray(jnp.argmax(logits[:1], axis=-1)).reshape(-1)[0])
+        out = [tok]
+        while len(out) < max_new:
+            lg, st = step(params, jnp.asarray([[tok]], jnp.int32), st)
+            lg = lg[:, -1] if lg.ndim == 3 else lg
+            tok = int(np.asarray(jnp.argmax(lg, axis=-1)).reshape(-1)[0])
+            out.append(tok)
+        return out

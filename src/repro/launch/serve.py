@@ -17,6 +17,51 @@ and slot-state surgery lives in :class:`repro.exec.serving.ServeEngine`:
 Invariant (tests/test_serve.py): staggered multi-slot serving produces
 byte-identical token streams to sequential single-slot decode.
 
+Resilience (``resilience=ResilienceConfig()`` / ``--resilience``): the
+driver treats faults and overload as normal control flow instead of
+crashing, with *byte-identical* recovered outputs (prompts are
+deterministic, every program is row-independent, so replay-from-prompt
+reproduces the fault-free stream bit for bit — the ``chaos_micro`` CI
+gate's contract). Every request ends in exactly one terminal status:
+
+  ``ok``       decoded to completion (the only status with output);
+  ``expired``  its SLO deadline (``Request.deadline_ticks``, driver
+               ticks since submit) passed while queued or in flight;
+  ``shed``     admission control: even an immediate admission could not
+               finish inside the deadline, so the request is rejected
+               up front instead of wasting slot time;
+  ``failed``   the numerical watchdog quarantined it more than
+               ``max_replays`` times.
+
+The degradation ladder, in order of escalation:
+
+  1. **bounded retries** — a raising compiled program (decode, prefill,
+     splice) is retried up to ``max_retries`` times with exponential
+     backoff; a one-shot fault clears deterministically;
+  2. **numerical watchdog** — NaN/Inf decode logits or prefill rows
+     quarantine the offending slot only: the slot is zeroed through the
+     jitted reset path and the request replays from its prompt (healthy
+     neighbours are untouched — row independence);
+  3. **graceful degradation** — ``degrade_after`` consecutive
+     engine-level failures switch the driver to the per-request
+     teacher-forced path (``ServeEngine.decode_single``), which finishes
+     one request per tick on a private single-row state; each degraded
+     tick also probes the batched program, and ``recover_after``
+     consecutive clean probes switch back to the compiled path;
+  4. **snapshot/restore** — with ``snapshot_dir`` the driver writes a
+     periodic integrity-checked serving snapshot (the slot cache plus a
+     JSON driver record) through ``repro.checkpoint.manager``; after a
+     mid-workload crash :meth:`Server.resume` restores finished outputs
+     and re-queues in-flight requests for replay (bit-identical again).
+
+Every fault, retry, shed, expiry, quarantine and degradation transition
+is counted in ``repro.obs`` metrics (``serve_faults{site}``,
+``serve_retries{site}``, ``serve_requests{status}``,
+``serve_quarantines``, ``serve_degraded_transitions{to}``) and emitted
+as ``resilience``-category trace instants, so ``python -m
+repro.obs.report`` shows the fault timeline next to the latency
+breakdown.
+
 Observability: ``--trace PATH`` (or ``Server(tracer=...)``) records the
 per-request lifecycle (submit -> queue -> prefill -> first token ->
 decode ticks -> finish, as nested ``request``-category spans) plus a
@@ -26,6 +71,11 @@ and carrying the tick indices ``repro.sim`` replays. ``Server.stats()``
 reports the same percentiles (shared ``repro.obs.metrics.percentile``)
 and is well-formed at any point in the server's life;
 ``Server.metrics_dict()`` emits the unified metrics schema.
+
+Fault injection is deterministic data, not monkeypatching: pass a
+``repro.runtime.chaos.ChaosInjector`` (``--chaos "decode@4=raise;..."``)
+and the engine's decode/prefill/splice/reset sites plus the driver's
+tick loop fire the spec's faults at exact invocation indices.
 
 Mesh serving: ``--mesh D`` (or ``DxM``) runs the engine's data-parallel
 mode — the slot axis of every serve-state leaf shards over the mesh's
@@ -52,6 +102,8 @@ from repro.exec.serving import ServeEngine
 from repro.models import api
 from repro.obs.metrics import Metrics, percentile
 
+TERMINAL_STATUSES = ("ok", "expired", "shed", "failed")
+
 
 @dataclass
 class Request:
@@ -68,6 +120,37 @@ class Request:
     submitted_tick: int = -1
     admitted_tick: int = -1
     done_tick: int = -1
+    # resilience: SLO deadline in driver ticks since submit (None = no
+    # SLO), lifecycle status (queued -> active -> one of
+    # TERMINAL_STATUSES), and how many times the watchdog replayed it
+    deadline_ticks: Optional[int] = None
+    status: str = "queued"
+    replays: int = 0
+
+
+@dataclass
+class ResilienceConfig:
+    """Knobs for the serving resilience layer (see module docstring).
+
+    ``max_retries``     per-site compiled-program retries within a tick;
+    ``retry_backoff_s`` base of the exponential retry backoff;
+    ``max_replays``     watchdog prompt-replays before ``failed``;
+    ``degrade_after``   consecutive engine failures before falling back
+                        to the per-request teacher-forced path;
+    ``recover_after``   consecutive clean probes before returning to the
+                        compiled path;
+    ``watchdog``        NaN/Inf checks on decode logits + prefill rows;
+    ``shed``            admission control: shed queued requests whose
+                        deadline has become infeasible.
+    """
+
+    max_retries: int = 2
+    retry_backoff_s: float = 0.005
+    max_replays: int = 3
+    degrade_after: int = 3
+    recover_after: int = 2
+    watchdog: bool = True
+    shed: bool = True
 
 
 def _pct(xs, q):
@@ -85,7 +168,10 @@ _LAT_BUCKETS = [1e-4 * (10 ** 0.5) ** i for i in range(13)]
 class Server:
     def __init__(self, arch: str, *, smoke: bool = True, slots: int = 4,
                  max_len: int = 128, greedy: bool = True,
-                 bos_id: Optional[int] = 0, mesh=None, tracer=None):
+                 bos_id: Optional[int] = 0, mesh=None, tracer=None,
+                 resilience: Optional[ResilienceConfig] = None,
+                 chaos=None, snapshot_dir: Optional[str] = None,
+                 snapshot_every: int = 0):
         self.cfg = configs.get(arch, smoke=smoke)
         self.model = api.build(self.cfg)
         self.params = self.model.init(jax.random.PRNGKey(0))
@@ -105,8 +191,15 @@ class Server:
             tracer.meta.update(kind="serve", arch=arch, slots=slots,
                                max_len=max_len)
         self.metrics = Metrics()
+        # resilience: None disables the whole layer (retries, watchdog,
+        # shedding, degradation) — the fault-free hot path then runs the
+        # PR-4 code byte for byte
+        self.resilience = resilience
+        self.chaos = chaos
+        if chaos is not None:
+            chaos.observe(self.metrics, tracer)
         self.engine = ServeEngine(self.model, slots=slots, max_len=max_len,
-                                  mesh=mesh, tracer=tracer)
+                                  mesh=mesh, tracer=tracer, chaos=chaos)
         self.params = self.engine.shard_params(self.params)
         self.cache = self.engine.init_state()
         self.slot_req: List[Optional[Request]] = [None] * slots
@@ -117,6 +210,23 @@ class Server:
         self.tokens_prefill = 0
         self.tokens_decode = 0
         self.ticks = 0
+        self.submitted = 0
+        # resilience state: consecutive engine-level failures, degraded
+        # flag, consecutive clean probes while degraded, plain-int views
+        # of the fault counters for cheap stats()
+        self.degraded = False
+        self._engine_failures = 0
+        self._probe_ok = 0
+        self.n_faults = 0
+        self.n_retries = 0
+        self.n_quarantines = 0
+        self.n_degraded_transitions = 0
+        # serving snapshots (resume after a mid-workload crash)
+        self.snapshot_every = int(snapshot_every)
+        self._snap = None
+        if snapshot_dir:
+            from repro.checkpoint.manager import CheckpointManager
+            self._snap = CheckpointManager(snapshot_dir, keep_n=3)
         self._t0 = time.perf_counter()
 
     # ------------------------------------------------------------------
@@ -134,8 +244,13 @@ class Server:
             raise ValueError(
                 f"request {req.rid}: prompt {len(req.prompt)} + max_new "
                 f"{req.max_new} exceeds max_len {self.max_len}")
+        if req.deadline_ticks is not None and req.deadline_ticks < 0:
+            raise ValueError(f"request {req.rid}: deadline_ticks must be "
+                             f">= 0 (got {req.deadline_ticks})")
         req.submitted_at = time.perf_counter()
         req.submitted_tick = self.ticks
+        req.status = "queued"
+        self.submitted += 1
         self.queue.append(req)
         tr = self.tracer
         if tr is not None and tr.enabled:
@@ -143,15 +258,39 @@ class Server:
                        attrs={"rid": req.rid, "prompt_len": len(req.prompt),
                               "max_new": req.max_new, "tick": self.ticks})
 
-    def _release(self, s: int):
-        req = self.slot_req[s]
+    # -- terminal bookkeeping ------------------------------------------
+    def _finish(self, req: Request, status: str):
+        """The ONE place a request reaches a terminal status."""
+        req.status = status
         req.done_at = time.perf_counter()
         req.done_tick = self.ticks
         self.finished.append(req)
+        self.metrics.counter("serve_requests", status=status).inc()
+        if status == "ok":
+            self._observe_finished(req)
+        else:
+            self._instant("evict", {"rid": req.rid, "status": status})
+
+    def _release(self, s: int, status: str = "ok"):
+        req = self.slot_req[s]
         self.slot_req[s] = None
         self.tokens[s, 0] = 0
-        self.cache = self.engine.reset_slot(self.cache, s)
-        self._observe_finished(req)
+        self._reset_slot_safe(s)
+        self._finish(req, status)
+
+    def _reset_slot_safe(self, s: int):
+        """Zero a released slot. Resilient mode tolerates a failing
+        reset program: the next admission's splice overwrites the whole
+        slot row anyway (splice pads prompt rows to max_len), so a
+        skipped zeroing cannot leak state into a later request."""
+        if self.resilience is None:
+            self.cache = self.engine.reset_slot(self.cache, s)
+            return
+        try:
+            self.cache = self._attempt(
+                "reset", lambda: self.engine.reset_slot(self.cache, s))
+        except Exception:                        # noqa: BLE001
+            self._engine_failure()
 
     def _observe_finished(self, req: Request):
         """Emit the request's lifecycle into metrics + trace. The trace
@@ -162,7 +301,6 @@ class Server:
         ttft = req.first_token_at - req.submitted_at
         latency = req.done_at - req.submitted_at
         m = self.metrics
-        m.counter("serve_requests").inc()
         m.counter("serve_tokens", kind="out").inc(len(req.out))
         m.histogram("serve_queue_wait_s", _LAT_BUCKETS).observe(queue_wait)
         m.histogram("serve_ttft_s", _LAT_BUCKETS).observe(ttft)
@@ -187,13 +325,120 @@ class Server:
         tr.add_span("decode", "request", req.first_token_at, req.done_at,
                     parent=pid, attrs=rid)
 
+    # -- resilience plumbing -------------------------------------------
+    def _instant(self, name: str, attrs: Dict):
+        tr = self.tracer
+        if tr is not None and tr.enabled:
+            a = {"tick": self.ticks}
+            a.update(attrs)
+            tr.instant(name, cat="resilience", attrs=a)
+
+    def _note_fault(self, site: str, err: Exception):
+        self.n_faults += 1
+        self.metrics.counter("serve_faults", site=site).inc()
+        self._instant("fault", {"site": site,
+                                "error": type(err).__name__})
+
+    def _attempt(self, site: str, fn):
+        """Run ``fn`` under the bounded-retry policy: every raise is
+        counted as a fault; retries back off exponentially; the last
+        error re-raises for the caller's escalation path."""
+        res = self.resilience
+        last = None
+        for attempt in range(res.max_retries + 1):
+            if attempt:
+                time.sleep(res.retry_backoff_s * (2 ** (attempt - 1)))
+                self.n_retries += 1
+                self.metrics.counter("serve_retries", site=site).inc()
+                self._instant("retry", {"site": site, "attempt": attempt})
+            try:
+                return fn()
+            except Exception as e:               # noqa: BLE001
+                last = e
+                self._note_fault(site, e)
+        raise last
+
+    def _engine_failure(self):
+        """An engine call exhausted its retries. Enough of these in a
+        row escalate to the degraded (per-request teacher-forced)
+        path."""
+        res = self.resilience
+        self._engine_failures += 1
+        if not self.degraded and \
+                self._engine_failures >= res.degrade_after:
+            self.degraded = True
+            self._probe_ok = 0
+            self.n_degraded_transitions += 1
+            self.metrics.counter("serve_degraded_transitions",
+                                 to="degraded").inc()
+            self._instant("degrade",
+                          {"failures": self._engine_failures})
+
+    def _expire_and_shed(self):
+        """SLO enforcement, once per tick before admission. In-flight or
+        queued requests whose deadline has passed are evicted
+        (``expired``); queued requests that could not finish even if
+        admitted THIS tick (done tick would be ``ticks + max_new - 1``)
+        are shed up front (``shed``) instead of wasting slot time."""
+        res = self.resilience
+        for s in range(self.slots):
+            req = self.slot_req[s]
+            if req is not None and req.deadline_ticks is not None and \
+                    self.ticks - req.submitted_tick > req.deadline_ticks:
+                self.metrics.counter("serve_expired").inc()
+                self._release(s, "expired")
+        keep = []
+        for req in self.queue:
+            if req.deadline_ticks is not None:
+                age = self.ticks - req.submitted_tick
+                if age > req.deadline_ticks:
+                    self.metrics.counter("serve_expired").inc()
+                    self._finish(req, "expired")
+                    continue
+                if res.shed and \
+                        age + req.max_new - 1 > req.deadline_ticks:
+                    self.metrics.counter("serve_shed").inc()
+                    self._instant("shed", {"rid": req.rid,
+                                           "deadline": req.deadline_ticks,
+                                           "age": age})
+                    self._finish(req, "shed")
+                    continue
+            keep.append(req)
+        self.queue = keep
+
+    def _quarantine(self, s: int):
+        """Watchdog hit on slot ``s``: zero the slot through the jitted
+        reset path and replay the request from its prompt (deterministic
+        prompts -> bit-identical replay), or fail it once the replay
+        budget is spent. Healthy slots are untouched."""
+        req = self.slot_req[s]
+        self.slot_req[s] = None
+        self.tokens[s, 0] = 0
+        self._reset_slot_safe(s)
+        req.replays += 1
+        self.n_quarantines += 1
+        self.metrics.counter("serve_quarantines").inc()
+        self._instant("quarantine", {"rid": req.rid, "slot": s,
+                                     "replays": req.replays})
+        if req.replays > self.resilience.max_replays:
+            self._finish(req, "failed")
+        else:
+            req.out = []
+            req.status = "queued"
+            self.queue.insert(0, req)
+
+    # -- admission ------------------------------------------------------
     def _admit(self):
         """Fill free slots from the queue with ONE batched prefill.
 
         Each admitted request's KV rows are spliced into its own slot and
         its first token comes from its OWN prefill logits row — admission
         never touches occupied slots (per-slot positions + row splicing;
-        the engine enforces it structurally)."""
+        the engine enforces it structurally). Resilient mode wraps the
+        prefill/splice programs in the retry policy (a still-failing
+        admission re-queues the batch untouched for the next tick) and
+        watchdogs the prefill rows: a NaN row re-queues only that
+        request; its neighbours admit normally."""
         free = [s for s in range(self.slots) if self.slot_req[s] is None]
         take = self.queue[: len(free)]
         if not take:
@@ -203,12 +448,56 @@ class Server:
         for req in take:
             req.admitted_at = now
             req.admitted_tick = self.ticks
-        logits, rows, n = self.engine.prefill(
-            self.params, [r.prompt for r in take])
-        self.cache = self.engine.splice_many(self.cache, free[:n], rows)
-        firsts = (np.asarray(jnp.argmax(logits[:n], axis=-1))
-                  if self.greedy else np.zeros(n, np.int64))
-        for j, (s, req) in enumerate(zip(free, take)):
+            req.status = "active"
+        res = self.resilience
+        if res is None:
+            logits, rows, n = self.engine.prefill(
+                self.params, [r.prompt for r in take])
+            self.cache = self.engine.splice_many(self.cache, free[:n], rows)
+            good = list(range(n))
+        else:
+            try:
+                logits, rows, n = self._attempt(
+                    "prefill", lambda: self.engine.prefill(
+                        self.params, [r.prompt for r in take]))
+            except Exception:                    # noqa: BLE001
+                for req in take:
+                    req.status = "queued"
+                self.queue[:0] = take            # back to the front, in order
+                self._engine_failure()
+                return
+            good = list(range(n))
+            lgn = None
+            if res.watchdog:
+                lgn = np.asarray(jnp.asarray(logits)[:n])
+                finite = np.isfinite(lgn).all(
+                    axis=tuple(range(1, lgn.ndim)))
+                good = [j for j in range(n) if finite[j]]
+                for j in range(n):
+                    if not finite[j]:
+                        self._quarantine_admission(take[j])
+            if not good:
+                return
+            try:
+                self.cache = self._attempt(
+                    "splice", lambda: self.engine.splice_many(
+                        self.cache, [free[i] for i in range(len(good))],
+                        rows, js=good))
+            except Exception:                    # noqa: BLE001
+                for j in good:
+                    take[j].status = "queued"
+                self.queue[:0] = [take[j] for j in good]
+                self._engine_failure()
+                return
+            self._engine_failures = 0
+        if not self.greedy:
+            firsts = np.zeros(n, np.int64)
+        elif res is not None and res.watchdog:
+            firsts = lgn.argmax(axis=-1)       # reuse the watchdog transfer
+        else:
+            firsts = np.asarray(jnp.argmax(logits[:n], axis=-1))
+        for i, j in enumerate(good):
+            s, req = free[i], take[j]
             first = int(firsts[j])
             req.out.append(first)
             req.first_token_at = time.perf_counter()
@@ -221,8 +510,26 @@ class Server:
             if self.slot_remaining[s] <= 0:     # max_new == 1: done already
                 self._release(s)
 
+    def _quarantine_admission(self, req: Request):
+        """A NaN prefill row never reaches a slot: replay from prompt or
+        fail, exactly like a decode-time quarantine (minus the reset —
+        nothing was spliced)."""
+        req.replays += 1
+        self.n_quarantines += 1
+        self.metrics.counter("serve_quarantines").inc()
+        self._instant("quarantine", {"rid": req.rid, "slot": -1,
+                                     "replays": req.replays})
+        if req.replays > self.resilience.max_replays:
+            self._finish(req, "failed")
+        else:
+            req.out = []
+            req.status = "queued"
+            self.queue.insert(0, req)
+
+    # -- the tick -------------------------------------------------------
     def tick(self) -> int:
-        """One decode step for the whole slot batch; returns #active.
+        """One decode step for the whole slot batch; returns #tokens
+        produced this tick (0 on a stalled tick).
 
         With a tracer attached each tick is a ``serve``-category span
         (admission + decode nested inside it) followed by one sample of
@@ -242,15 +549,61 @@ class Server:
         return n
 
     def _tick_inner(self) -> int:
+        if self.chaos is not None:
+            # tick-site faults: latency spikes stall the driver loop;
+            # a raise here IS the mid-workload crash (snapshot/resume)
+            self.chaos.enter("tick")
+        if self.resilience is not None:
+            self._expire_and_shed()
+            if self.degraded:
+                n = self._tick_degraded()
+                self._maybe_snapshot()
+                return n
+        n = self._tick_compiled()
+        self._maybe_snapshot()
+        return n
+
+    def _tick_compiled(self) -> int:
         self._admit()
         active = [s for s in range(self.slots)
                   if self.slot_req[s] is not None]
         if not active:
             return 0
-        logits, self.cache = self.engine.decode(
-            self.params, jnp.asarray(self.tokens), self.cache)
-        nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1)) if self.greedy \
-            else np.zeros(self.slots, np.int64)
+        res = self.resilience
+        if res is None:
+            logits, self.cache = self.engine.decode(
+                self.params, jnp.asarray(self.tokens), self.cache)
+            nxt = (np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+                   if self.greedy else np.zeros(self.slots, np.int64))
+        else:
+            try:
+                logits, cache = self._attempt(
+                    "decode", lambda: self.engine.decode(
+                        self.params, jnp.asarray(self.tokens), self.cache))
+            except Exception:                    # noqa: BLE001
+                # no progress this tick; nothing was committed (the
+                # programs are functional), so the next tick retries
+                # from an unchanged state
+                self._engine_failure()
+                return 0
+            self._engine_failures = 0
+            self.cache = cache
+            # ONE device->host transfer serves both the watchdog and the
+            # argmax (host argmax == XLA argmax: first maximum wins in
+            # both; the chaos differential gate verifies byte-identity
+            # against the jnp.argmax reference path empirically)
+            lgn = np.asarray(jnp.asarray(logits)[:, -1])
+            if res.watchdog:
+                finite = np.isfinite(lgn).all(axis=-1)
+                bad = [s for s in active if not finite[s]]
+                if bad:
+                    for s in bad:
+                        self._quarantine(s)
+                    active = [s for s in active if finite[s]]
+                    if not active:
+                        return 0
+            nxt = (lgn.argmax(axis=-1) if self.greedy
+                   else np.zeros(self.slots, np.int64))
         for s in active:
             req = self.slot_req[s]
             req.out.append(int(nxt[s]))
@@ -260,6 +613,134 @@ class Server:
             if self.slot_remaining[s] <= 0:
                 self._release(s)
         return len(active)
+
+    def _tick_degraded(self) -> int:
+        """Degraded mode: the batched decode program is considered down.
+        Each tick (1) probes it on the live state — results discarded,
+        the programs are functional — and recovers to the compiled path
+        after ``recover_after`` consecutive clean probes; (2) finishes
+        ONE request end to end through the per-request teacher-forced
+        path, so the server keeps draining under a persistent fault."""
+        res = self.resilience
+        try:
+            self.engine.decode(self.params, jnp.asarray(self.tokens),
+                               self.cache)
+            self._probe_ok += 1
+        except Exception as e:                   # noqa: BLE001
+            self._probe_ok = 0
+            self._note_fault("probe", e)
+        if self._probe_ok >= res.recover_after:
+            self.degraded = False
+            self._engine_failures = 0
+            self.n_degraded_transitions += 1
+            self.metrics.counter("serve_degraded_transitions",
+                                 to="compiled").inc()
+            self._instant("recover", {"probes": self._probe_ok})
+            return self._tick_compiled()
+        req = None
+        held = None
+        for s in range(self.slots):
+            if self.slot_req[s] is not None:
+                req, held = self.slot_req[s], s
+                break
+        if req is None and self.queue:
+            req = self.queue.pop(0)
+            req.admitted_at = time.perf_counter()
+            req.admitted_tick = self.ticks
+            req.status = "active"
+            self.tokens_prefill += len(req.prompt)
+            self.metrics.counter("serve_tokens",
+                                 kind="prefill").inc(len(req.prompt))
+        if req is None:
+            return 0
+        try:
+            out = self.engine.decode_single(self.params, req.prompt,
+                                            req.max_new)
+        except Exception as e:                   # noqa: BLE001
+            self._note_fault("fallback", e)
+            if held is None:
+                req.status = "queued"
+                self.queue.insert(0, req)        # retried next tick
+            return 0
+        # the full replay (greedy, deterministic) subsumes any tokens the
+        # compiled path already produced — same stream, bit for bit
+        req.out = list(out)
+        req.first_token_at = time.perf_counter()
+        self.metrics.counter("serve_requests_degraded").inc()
+        if held is not None:
+            self.slot_req[held] = None
+            self.tokens[held, 0] = 0
+            self._reset_slot_safe(held)
+        self._finish(req, "ok")
+        return 1
+
+    # -- serving snapshots ---------------------------------------------
+    def _maybe_snapshot(self):
+        if self._snap is not None and self.snapshot_every and \
+                (self.ticks + 1) % self.snapshot_every == 0:
+            self.snapshot()
+
+    def snapshot(self):
+        """Write a serving snapshot through the checkpoint manager: the
+        slot cache as the (integrity-checked, atomically renamed) array
+        tree, the driver record — finished outputs plus every
+        still-pending request's prompt — as the manifest's extra
+        payload. Restore replays pending requests from their prompts
+        (deterministic, so the resumed run's outputs are bit-identical);
+        the cache array is there for integrity verification and
+        forensics, not resumption."""
+        if self._snap is None:
+            raise RuntimeError("no snapshot_dir configured")
+        pending = [r for r in self.slot_req if r is not None] + self.queue
+        pending.sort(key=lambda r: (r.submitted_tick, r.rid))
+        rec = {
+            "ticks": self.ticks,
+            "submitted": self.submitted,
+            "pending": [{"rid": r.rid, "prompt": list(r.prompt),
+                         "max_new": r.max_new,
+                         "deadline_ticks": r.deadline_ticks}
+                        for r in pending],
+            "finished": [{"rid": r.rid, "prompt": list(r.prompt),
+                          "max_new": r.max_new, "out": list(r.out),
+                          "status": r.status}
+                         for r in self.finished],
+        }
+        self._snap.save(self.ticks, {"cache": self.cache},
+                        extra={"serving": rec})
+        self.metrics.counter("serve_snapshots").inc()
+        self._instant("snapshot", {"step": self.ticks})
+
+    @classmethod
+    def resume(cls, arch: str, snapshot_dir: str, **kw) -> "Server":
+        """Rebuild a server from the newest integrity-clean snapshot in
+        ``snapshot_dir``: finished requests are restored with their
+        outputs and statuses; in-flight and queued requests are
+        re-queued for replay from their prompts. With no verified
+        snapshot the server starts fresh."""
+        srv = cls(arch, snapshot_dir=snapshot_dir, **kw)
+        step, meta = srv._snap.verified_meta()
+        if meta is None or "serving" not in meta:
+            return srv
+        rec = meta["serving"]
+        for f in rec.get("finished", []):
+            req = Request(rid=f["rid"], prompt=list(f["prompt"]),
+                          max_new=f["max_new"])
+            req.out = list(f["out"])
+            req.status = f["status"]
+            srv.finished.append(req)
+        now = time.perf_counter()
+        for p in rec.get("pending", []):
+            req = Request(rid=p["rid"], prompt=list(p["prompt"]),
+                          max_new=p["max_new"],
+                          deadline_ticks=p.get("deadline_ticks"))
+            req.submitted_at = now
+            req.submitted_tick = 0
+            srv.queue.append(req)
+        srv.submitted = int(rec.get("submitted",
+                                    len(srv.finished) + len(srv.queue)))
+        srv._instant("resume", {"snapshot_step": step,
+                                "replayed": len(srv.queue)})
+        return srv
 
     # ------------------------------------------------------------------
     def run_workload(self, requests: List[Request], stagger_ticks: int = 0,
@@ -293,7 +774,14 @@ class Server:
         self.tokens_prefill = 0
         self.tokens_decode = 0
         self.ticks = 0
+        self.submitted = 0
+        self.n_faults = 0
+        self.n_retries = 0
+        self.n_quarantines = 0
+        self.n_degraded_transitions = 0
         self.metrics = Metrics()
+        if self.chaos is not None:
+            self.chaos.observe(self.metrics, self.tracer)
         self._t0 = time.perf_counter()
 
     def reset_state(self):
@@ -304,6 +792,9 @@ class Server:
         self.cache = self.engine.init_state()
         self.slot_remaining[:] = 0
         self.tokens[:] = 0
+        self.degraded = False
+        self._engine_failures = 0
+        self._probe_ok = 0
 
     def stats(self, wall_s: Optional[float] = None,
               ticks: Optional[int] = None) -> Dict:
@@ -313,19 +804,34 @@ class Server:
         p99 — the :func:`repro.obs.metrics.percentile` contract, shared
         with the trace report CLI so the two agree bit for bit).
         Defaults: wall time since construction / last ``reset_stats``,
-        tick count since the same."""
+        tick count since the same.
+
+        Status accounting invariant (tests/test_serve.py): the
+        ``statuses`` counts plus ``queued`` plus ``active`` always sum
+        to ``requests_submitted`` — every submitted request is exactly
+        one of: terminal, waiting, or in a slot. Latency percentiles are
+        computed over ``ok`` requests only (evicted requests have no
+        meaningful first-token/done timestamps)."""
         fin = self.finished
         if wall_s is None:
             wall_s = time.perf_counter() - self._t0
         if ticks is None:
             ticks = self.ticks
-        tokens_out = sum(len(r.out) for r in fin)
+        statuses = {st: 0 for st in TERMINAL_STATUSES}
+        for r in fin:
+            statuses[r.status] = statuses.get(r.status, 0) + 1
+        ok = [r for r in fin if r.status == "ok"]
+        tokens_out = sum(len(r.out) for r in ok)
         total = self.tokens_prefill + tokens_out
-        queue_wait = [r.admitted_at - r.submitted_at for r in fin]
-        ttft = [r.first_token_at - r.submitted_at for r in fin]
-        lat = [r.done_at - r.submitted_at for r in fin]
+        queue_wait = [r.admitted_at - r.submitted_at for r in ok]
+        ttft = [r.first_token_at - r.submitted_at for r in ok]
+        lat = [r.done_at - r.submitted_at for r in ok]
         return {
             "requests": len(fin),
+            "requests_submitted": self.submitted,
+            "statuses": statuses,
+            "queued": len(self.queue),
+            "active": sum(1 for r in self.slot_req if r is not None),
             "ticks": ticks,
             "tokens_prefill": self.tokens_prefill,
             "tokens_decode": self.tokens_decode,
@@ -341,6 +847,11 @@ class Server:
             "p50_latency_s": _pct(lat, 50),
             "p99_latency_s": _pct(lat, 99),
             "prefill_compiles": self.engine.prefill_compiles,
+            "degraded": self.degraded,
+            "faults": self.n_faults,
+            "retries": self.n_retries,
+            "quarantines": self.n_quarantines,
+            "degraded_transitions": self.n_degraded_transitions,
         }
 
     def metrics_dict(self) -> Dict:
@@ -355,9 +866,11 @@ class Server:
 def sequential_reference(arch: str, requests: List[Request],
                          **server_kw) -> List[List[int]]:
     """Decode every request alone on a single-slot server — the byte-level
-    reference the continuous-batching outputs must reproduce. One server
-    is built (the programs compile once); its state is factory-reset
-    between requests so each decodes against a fresh cache."""
+    reference the continuous-batching outputs must reproduce (with or
+    without faults: recovery replays from deterministic prompts). One
+    server is built (the programs compile once); its state is
+    factory-reset between requests so each decodes against a fresh
+    cache."""
     srv = Server(arch, slots=1, **server_kw)
     outs = []
     for req in requests:
@@ -393,6 +906,24 @@ def main():
                          "anything else -> Chrome trace JSON (open in "
                          "Perfetto); summarize with "
                          "python -m repro.obs.report PATH")
+    ap.add_argument("--resilience", action="store_true",
+                    help="enable the serving resilience layer (bounded "
+                         "retries, NaN watchdog, SLO shedding, graceful "
+                         "degradation) with default knobs")
+    ap.add_argument("--chaos", default=None, metavar="SPEC",
+                    help="deterministic fault-injection spec, e.g. "
+                         "'decode@4=raise;decode@7=nan:1;tick@3=latency"
+                         ":0.01' (see repro.runtime.chaos); implies "
+                         "--resilience")
+    ap.add_argument("--deadline", type=int, default=None, metavar="TICKS",
+                    help="per-request SLO deadline in driver ticks since "
+                         "submit; expired requests are evicted, "
+                         "infeasible ones shed")
+    ap.add_argument("--snapshot-dir", default=None,
+                    help="write periodic serving snapshots here "
+                         "(resume a crashed workload with Server.resume)")
+    ap.add_argument("--snapshot-every", type=int, default=8,
+                    help="ticks between snapshots (with --snapshot-dir)")
     args = ap.parse_args()
     mesh = None
     if args.mesh:
@@ -402,21 +933,31 @@ def main():
     if args.trace:
         from repro.obs.trace import Tracer
         tracer = Tracer()
+    chaos = None
+    if args.chaos:
+        from repro.runtime.chaos import ChaosInjector, ChaosPlan
+        chaos = ChaosInjector(ChaosPlan.parse(args.chaos))
+    resilience = (ResilienceConfig()
+                  if (args.resilience or chaos is not None) else None)
     srv = Server(args.arch, smoke=True, slots=args.slots, mesh=mesh,
-                 tracer=tracer)
+                 tracer=tracer, resilience=resilience, chaos=chaos,
+                 snapshot_dir=args.snapshot_dir,
+                 snapshot_every=args.snapshot_every)
     rng = np.random.default_rng(0)
     reqs = [Request(rid=i,
                     prompt=rng.integers(0, srv.cfg.vocab,
                                         rng.integers(2, 6)).tolist(),
-                    max_new=args.max_new)
+                    max_new=args.max_new, deadline_ticks=args.deadline)
             for i in range(args.requests)]
     report = srv.run_workload(reqs, stagger_ticks=args.stagger)
     if args.check:
-        got = {r.rid: r.out for r in srv.finished}
+        got = {r.rid: r.out for r in srv.finished if r.status == "ok"}
         ref = sequential_reference(
             args.arch, [Request(rid=r.rid, prompt=list(r.prompt),
                                 max_new=r.max_new) for r in reqs])
-        ok = all(got[r.rid] == ref[i] for i, r in enumerate(reqs))
+        ok = all(got[rid] == ref[i]
+                 for i, r in enumerate(reqs)
+                 for rid in (r.rid,) if rid in got)
         report["identical_to_sequential"] = ok
         if not ok:
             raise SystemExit("continuous-batching outputs diverge from "

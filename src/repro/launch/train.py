@@ -131,9 +131,24 @@ def main():
     ap.add_argument("--full", action="store_true",
                     help="full config (default: reduced smoke config)")
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--inject-fault", default=None, metavar="STEP[,STEP...]",
+                    help="raise an injected fault at these step numbers "
+                         "(repro.runtime.chaos); the fault-tolerant loop "
+                         "must recover via checkpoints, so --ckpt-dir is "
+                         "required")
     args = ap.parse_args()
+    fault_hook = None
+    if args.inject_fault:
+        if not args.ckpt_dir:
+            ap.error("--inject-fault requires --ckpt-dir (recovery "
+                     "restores from checkpoints)")
+        from repro.runtime.chaos import ChaosInjector, ChaosPlan
+        steps = [int(s) for s in args.inject_fault.split(",") if s.strip()]
+        fault_hook = ChaosInjector(ChaosPlan.for_steps(steps)) \
+            .train_fault_hook()
     report = train(args.arch, steps=args.steps, smoke=not args.full,
-                   batch=args.batch, seq=args.seq, ckpt_dir=args.ckpt_dir)
+                   batch=args.batch, seq=args.seq, ckpt_dir=args.ckpt_dir,
+                   fault_hook=fault_hook)
     print(json.dumps({k: v for k, v in report.items() if k != "losses"}))
     l = report["losses"]
     print(f"loss: first={l[0]:.4f} last={l[-1]:.4f}")

@@ -16,7 +16,10 @@ Reconstructs, from any trace written by :class:`repro.obs.trace.Tracer`:
     counter track averaged against the slot capacity in the trace meta;
   * **profile coverage** — for profiled engine runs, the fraction of the
     latest ``chain`` span's wall time attributed to named child steps
-    (the acceptance bar is >= 0.95).
+    (the acceptance bar is >= 0.95);
+  * **fault timeline** — ``chaos``/``resilience``-category instants
+    (injected faults, retries, quarantines, sheds, degrade/recover
+    transitions) in tick order, with per-event counts.
 
 Prints one JSON object; exits nonzero on unreadable/invalid traces.
 """
@@ -131,6 +134,31 @@ def profile_coverage(trace: Trace) -> Optional[dict]:
             "signature": last["args"].get("signature")}
 
 
+def fault_timeline(trace: Trace) -> Optional[dict]:
+    """Resilience timeline from ``chaos``/``resilience``-category instants
+    (injected faults, retries, quarantines, sheds, degrade/recover
+    transitions, snapshots). ``events`` is the chronological list (tick,
+    event name, site/kind detail); ``counts`` aggregates per event name.
+    None when the trace carries no fault activity — fault-free traces
+    keep their summary unchanged."""
+    marks = [e for e in trace.instants
+             if e["cat"] in ("chaos", "resilience")]
+    if not marks:
+        return None
+    marks.sort(key=lambda e: e["ts"])
+    counts: Dict[str, int] = {}
+    events = []
+    for e in marks:
+        counts[e["name"]] = counts.get(e["name"], 0) + 1
+        a = e["args"]
+        detail = {k: a[k] for k in ("site", "kind", "status", "rid",
+                                    "slot", "error", "index")
+                  if k in a}
+        events.append({"ts_us": round(e["ts"], 1), "event": e["name"],
+                       "tick": a.get("tick"), **detail})
+    return {"counts": dict(sorted(counts.items())), "events": events}
+
+
 def summarize(trace: Trace, top: int = 15) -> dict:
     out = {"schema_version": trace.version, "meta": trace.meta,
            "events": len(trace.events), "spans": len(trace.spans)}
@@ -139,6 +167,7 @@ def summarize(trace: Trace, top: int = 15) -> dict:
     out["slot_utilization"] = slot_utilization(trace)
     out["backend_share"] = backend_share(trace)
     out["profile"] = profile_coverage(trace)
+    out["faults"] = fault_timeline(trace)
     out["top_spans"] = top_spans(trace, top)
     return out
 

@@ -1,0 +1,257 @@
+"""Deterministic fault injection: the chaos plane behind resilient serving.
+
+Production failure modes (device errors, numerically-poisoned state,
+latency spikes) are injected here as *data*, not as monkeypatching: a
+:class:`ChaosPlan` is a set of :class:`FaultSpec` entries keyed by
+``site x invocation index``, and a :class:`ChaosInjector` threads them
+through the execution hooks that ``repro.exec.serving.ServeEngine`` (the
+``decode``/``prefill``/``splice``/``reset`` sites), the serving driver's
+tick loop (``tick``) and the training loop
+(:class:`~repro.runtime.fault_tolerance.FaultTolerantLoop` via the
+``step`` site) already expose. Everything is deterministic:
+
+  * each fault fires exactly once, at a fixed (site, index) key — a
+    retried program sees the next invocation index, so bounded retries
+    deterministically clear a one-shot fault;
+  * the *recovery* contract is byte-identity: prompts are deterministic,
+    replay is bit-identical, so a workload served through an injected
+    fault spec must produce exactly the outputs of the fault-free run
+    (enforced by the ``chaos_micro`` CI gate and tests/test_chaos.py).
+
+Fault kinds:
+
+  ``raise``    raise :class:`InjectedFault` before the site's program
+               runs (a lost device / failed launch);
+  ``nan``      overwrite one logits row (``arg`` = slot for ``decode``,
+               admission row for ``prefill``) with NaN after the program
+               runs (numerically-poisoned output);
+  ``corrupt``  overwrite slot ``arg``'s rows of every floating-point
+               serve-state leaf with NaN after the program runs (a torn
+               KV-cache row — detected one tick later by the watchdog);
+  ``latency``  sleep ``arg`` seconds before the program runs (a
+               straggling device / network stall).
+
+Spec grammar (CLI flags, benchmarks, docs)::
+
+    spec  := fault (";" fault)*
+    fault := site "@" index "=" kind [":" arg]
+    site  := decode | prefill | splice | reset | tick | step
+
+e.g. ``"decode@4=raise;decode@7=nan:1;decode@9=corrupt:0"`` — raise on
+the 4th decode call, NaN slot 1's logits on the 7th, NaN slot 0's cache
+rows on the 9th. Indices count per-site invocations from 0, except the
+``step`` site, which is keyed by the *training step number* the loop
+passes explicitly (so restore-and-replay of a failed step does not
+re-fire its fault).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+SITES = ("decode", "prefill", "splice", "reset", "tick", "step")
+KINDS = ("raise", "nan", "corrupt", "latency")
+
+
+class InjectedFault(RuntimeError):
+    """The error an injected ``raise`` fault throws — a stand-in for a
+    lost device / failed program launch. Deliberately a plain
+    RuntimeError subclass: recovery paths must not special-case it."""
+
+
+@dataclass(frozen=True)
+class FaultSpec:
+    """One fault: ``kind`` at the ``at``-th invocation of ``site``.
+
+    ``arg`` is kind-specific: slot/row index for ``nan``/``corrupt``,
+    seconds for ``latency``, ignored for ``raise``."""
+
+    site: str
+    at: int
+    kind: str
+    arg: float = 0.0
+
+    def __post_init__(self):
+        if self.site not in SITES:
+            raise ValueError(f"unknown fault site {self.site!r} "
+                             f"(sites: {', '.join(SITES)})")
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r} "
+                             f"(kinds: {', '.join(KINDS)})")
+        if self.at < 0:
+            raise ValueError(f"fault index must be >= 0, got {self.at}")
+
+    def __str__(self):
+        base = f"{self.site}@{self.at}={self.kind}"
+        if self.kind == "latency":
+            return f"{base}:{self.arg}"
+        if self.kind in ("nan", "corrupt"):
+            return f"{base}:{int(self.arg)}"
+        return base
+
+
+class ChaosPlan:
+    """An immutable set of fault specs; parseable from the CLI grammar."""
+
+    def __init__(self, faults: Sequence[FaultSpec] = ()):
+        self.faults: Tuple[FaultSpec, ...] = tuple(faults)
+
+    @classmethod
+    def parse(cls, text: str) -> "ChaosPlan":
+        faults = []
+        for part in text.replace(",", ";").split(";"):
+            part = part.strip()
+            if not part:
+                continue
+            try:
+                loc, rhs = part.split("=", 1)
+                site, at = loc.split("@", 1)
+                kind, _, arg = rhs.partition(":")
+                faults.append(FaultSpec(site.strip(), int(at),
+                                        kind.strip(),
+                                        float(arg) if arg else 0.0))
+            except ValueError as e:
+                raise ValueError(
+                    f"bad fault spec {part!r} (want site@index=kind[:arg], "
+                    f"e.g. decode@4=raise): {e}") from None
+        return cls(faults)
+
+    @classmethod
+    def for_steps(cls, steps: Sequence[int]) -> "ChaosPlan":
+        """Training-CLI form: one ``raise`` per listed step number
+        (``launch/train.py --inject-fault STEP[,STEP...]``)."""
+        return cls([FaultSpec("step", int(s), "raise") for s in steps])
+
+    def __len__(self):
+        return len(self.faults)
+
+    def __str__(self):
+        return ";".join(str(f) for f in self.faults)
+
+
+class ChaosInjector:
+    """Stateful per-run injector: consumes a plan's faults exactly once.
+
+    Execution layers call :meth:`enter` at the top of each hooked site;
+    it advances that site's invocation counter, sleeps through
+    ``latency`` faults, raises ``raise`` faults, and returns the data
+    faults (``nan``/``corrupt``) for the caller to apply to the site's
+    outputs via :meth:`apply_decode`. Every fired fault is recorded in
+    ``self.fired`` and counted into the optional metrics registry
+    (``chaos_injected{site,kind}``) / trace (``chaos.inject`` instants),
+    so ``repro.obs.report`` can show the fault timeline.
+    """
+
+    def __init__(self, plan: ChaosPlan, *, metrics=None, tracer=None,
+                 sleep=time.sleep):
+        self.plan = plan
+        self.metrics = metrics
+        self.tracer = tracer
+        self._sleep = sleep
+        self._pending: Dict[Tuple[str, int], List[FaultSpec]] = {}
+        for f in plan.faults:
+            self._pending.setdefault((f.site, f.at), []).append(f)
+        self._counts: Dict[str, int] = {}
+        self.fired: List[FaultSpec] = []
+
+    # -- bookkeeping ----------------------------------------------------
+    def observe(self, metrics, tracer):
+        """Late-bind the driver's metrics registry / tracer (the server
+        owns both and constructs after the injector)."""
+        self.metrics = metrics
+        self.tracer = tracer
+
+    def invocations(self, site: str) -> int:
+        return self._counts.get(site, 0)
+
+    def kinds_fired(self) -> set:
+        return {f.kind for f in self.fired}
+
+    @property
+    def remaining(self) -> int:
+        return sum(len(v) for v in self._pending.values())
+
+    def _record(self, f: FaultSpec, index: int):
+        self.fired.append(f)
+        if self.metrics is not None:
+            self.metrics.counter("chaos_injected", site=f.site,
+                                 kind=f.kind).inc()
+        tr = self.tracer
+        if tr is not None and tr.enabled:
+            tr.instant("chaos.inject", cat="chaos",
+                       attrs={"site": f.site, "kind": f.kind,
+                              "index": index, "arg": f.arg})
+
+    # -- the hook -------------------------------------------------------
+    def enter(self, site: str,
+              index: Optional[int] = None) -> Tuple[FaultSpec, ...]:
+        """Arm the faults keyed at this site invocation. ``index`` is
+        normally the internal per-site counter (advanced here); the
+        training loop passes its step number explicitly so checkpoint
+        replay of a failed step does not re-fire the step's fault.
+
+        Sleeps through ``latency`` faults, raises the first ``raise``
+        fault, returns the data faults for the caller to apply."""
+        if index is None:
+            index = self._counts.get(site, 0)
+            self._counts[site] = index + 1
+        faults = self._pending.pop((site, index), None)
+        if not faults:
+            return ()
+        post = []
+        boom = None
+        for f in faults:
+            self._record(f, index)
+            if f.kind == "latency":
+                self._sleep(f.arg)
+            elif f.kind == "raise":
+                boom = f
+            else:
+                post.append(f)
+        if boom is not None:
+            raise InjectedFault(f"injected fault at {site}@{index}")
+        return tuple(post)
+
+    # -- data-fault application ----------------------------------------
+    def apply_decode(self, faults: Sequence[FaultSpec], logits, state,
+                     axes: Dict[str, int]):
+        """Apply ``nan``/``corrupt`` faults to a (logits, serve-state)
+        pair — decode outputs or prefill (logits, row_state). ``axes``
+        is the model's ``serve_axes`` table (slot axis per leaf)."""
+        import jax.numpy as jnp
+
+        for f in faults:
+            if f.kind == "nan":
+                logits = logits.at[int(f.arg)].set(jnp.nan)
+            elif f.kind == "corrupt":
+                state = _corrupt_slot(state, axes, int(f.arg))
+        return logits, state
+
+    # -- training-side adapter -----------------------------------------
+    def train_fault_hook(self):
+        """``FaultTolerantLoop(fault_hook=...)`` adapter: fires the
+        ``step``-site faults keyed by the loop's step number."""
+        def hook(step: int):
+            self.enter("step", index=step)
+        return hook
+
+
+def _corrupt_slot(state, axes: Dict[str, int], slot: int):
+    """NaN slot ``slot``'s rows of every floating-point leaf (integer
+    leaves — positions — cannot hold NaN and stay intact), mirroring the
+    shape logic of ``ServeEngine._reset_impl``."""
+    import jax
+    import jax.numpy as jnp
+
+    def one(leaf, axis):
+        if not jnp.issubdtype(leaf.dtype, jnp.floating):
+            return leaf
+        shape = list(leaf.shape)
+        shape[axis] = 1
+        rows = jnp.full(shape, jnp.nan, leaf.dtype)
+        start = [0] * leaf.ndim
+        start[axis] = slot
+        return jax.lax.dynamic_update_slice(leaf, rows, start)
+
+    return {k: one(state[k], axes[k]) for k in state}

@@ -38,9 +38,13 @@ class StragglerMonitor:
             self.ema = dt
             return False
         slow = dt > self.threshold * self.ema
-        self.ema = (1 - self.alpha) * self.ema + self.alpha * dt
         if slow:
+            # flagged samples must NOT feed the EMA: absorbing them
+            # inflates the baseline until a sustained straggler stops
+            # being flagged at all (regression: tests/test_chaos.py)
             self.flagged += 1
+        else:
+            self.ema = (1 - self.alpha) * self.ema + self.alpha * dt
         return slow
 
 

@@ -1,0 +1,322 @@
+"""Chaos / resilience regressions: deterministic fault injection through
+``repro.runtime.chaos``, and the serving driver's recovery ladder
+(bounded retries -> NaN watchdog quarantine + replay -> graceful
+degradation -> snapshot/resume).
+
+The recovery contract throughout is BYTE-identity: prompts are
+deterministic and every compiled program is row-independent, so a
+workload served through injected faults must reproduce the fault-free
+``sequential_reference`` outputs bit for bit."""
+import numpy as np
+import pytest
+
+from repro.launch.serve import (Request, ResilienceConfig, Server,
+                                sequential_reference)
+from repro.runtime.chaos import (ChaosInjector, ChaosPlan, FaultSpec,
+                                 InjectedFault)
+
+ARCH = "tinyllama-1.1b"
+
+
+def _reqs(n, max_new=4, seed=0, deadline=None):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    prompt=rng.integers(0, 256,
+                                        int(rng.integers(2, 6))).tolist(),
+                    max_new=max_new, deadline_ticks=deadline)
+            for i in range(n)]
+
+
+@pytest.fixture(scope="module")
+def srv():
+    """One resilient 2-slot server for the whole module (programs compile
+    once); every test re-arms it via _arm, which factory-resets state."""
+    return Server(ARCH, smoke=True, slots=2, max_len=48,
+                  resilience=ResilienceConfig())
+
+
+@pytest.fixture(scope="module")
+def ref():
+    """Fault-free sequential outputs for the canonical _reqs(4) workload."""
+    return sequential_reference(ARCH, _reqs(4), smoke=True, max_len=48)
+
+
+def _arm(srv, spec, **res_kw):
+    """Factory-reset the module server and arm it with a fresh injector
+    (None spec = fault-free) and a fresh ResilienceConfig."""
+    srv.reset_state()
+    srv.tracer = None
+    srv.resilience = ResilienceConfig(**res_kw)
+    inj = ChaosInjector(ChaosPlan.parse(spec)) if spec else None
+    srv.chaos = inj
+    srv.engine.chaos = inj
+    if inj is not None:
+        inj.observe(srv.metrics, srv.tracer)
+    return inj
+
+
+def _run_and_check(srv, ref, n=4, stagger=1, max_new=4):
+    report = srv.run_workload(_reqs(n, max_new=max_new),
+                              stagger_ticks=stagger)
+    got = {r.rid: r.out for r in srv.finished if r.status == "ok"}
+    assert set(got) == set(range(n)), report["statuses"]
+    for i in range(n):
+        assert got[i] == ref[i], f"rid {i} diverged from fault-free ref"
+    return report
+
+
+# ---------------------------------------------------------------------------
+# plan / injector semantics
+# ---------------------------------------------------------------------------
+def test_plan_parse_roundtrip():
+    spec = "decode@4=raise; decode@7=nan:1,splice@0=latency:0.25"
+    plan = ChaosPlan.parse(spec)
+    assert len(plan) == 3
+    assert plan.faults[0] == FaultSpec("decode", 4, "raise")
+    assert plan.faults[1] == FaultSpec("decode", 7, "nan", 1.0)
+    assert plan.faults[2] == FaultSpec("splice", 0, "latency", 0.25)
+    # str() re-parses to the same plan
+    assert ChaosPlan.parse(str(plan)).faults == plan.faults
+
+
+def test_plan_parse_rejects_bad_specs():
+    for bad in ("decode=raise", "decode@x=raise", "nowhere@1=raise",
+                "decode@1=explode", "decode@-1=raise"):
+        with pytest.raises(ValueError):
+            ChaosPlan.parse(bad)
+
+
+def test_plan_for_steps_targets_step_site():
+    plan = ChaosPlan.for_steps([3, 9])
+    assert all(f.site == "step" and f.kind == "raise" for f in plan.faults)
+    assert [f.at for f in plan.faults] == [3, 9]
+
+
+def test_injector_fires_each_fault_exactly_once():
+    inj = ChaosInjector(ChaosPlan.parse("decode@1=raise"))
+    assert inj.enter("decode") == ()                 # invocation 0
+    with pytest.raises(InjectedFault):
+        inj.enter("decode")                          # invocation 1: boom
+    assert inj.enter("decode") == ()                 # 2: fault is spent
+    assert inj.invocations("decode") == 3
+    assert inj.remaining == 0
+    assert inj.kinds_fired() == {"raise"}
+
+
+def test_injector_explicit_index_is_replay_safe():
+    """The training loop keys the step site by step number: replaying a
+    restored step must NOT re-fire its (already fired) fault, and the
+    explicit index must not advance the internal counter."""
+    inj = ChaosInjector(ChaosPlan.for_steps([5]))
+    with pytest.raises(InjectedFault):
+        inj.enter("step", index=5)
+    inj.enter("step", index=5)                       # replay: clean
+    assert inj.invocations("step") == 0
+    assert inj.remaining == 0
+
+
+def test_injector_latency_sleeps_and_data_faults_return():
+    slept = []
+    inj = ChaosInjector(ChaosPlan.parse("decode@0=latency:0.5;"
+                                        "decode@0=nan:1"),
+                        sleep=slept.append)
+    post = inj.enter("decode")
+    assert slept == [0.5]
+    assert [f.kind for f in post] == ["nan"]         # returned, not raised
+
+
+# ---------------------------------------------------------------------------
+# satellite: StragglerMonitor EMA regression
+# ---------------------------------------------------------------------------
+def test_straggler_monitor_keeps_flagging_sustained_straggler():
+    """Flagged samples must not feed the EMA: the old code absorbed them,
+    inflating the baseline until a SUSTAINED straggler stopped being
+    flagged after a couple of observations."""
+    from repro.runtime.fault_tolerance import StragglerMonitor
+
+    m = StragglerMonitor(alpha=0.5, threshold=3.0)
+    assert not m.observe(1.0)                        # baseline
+    for _ in range(5):
+        assert m.observe(10.0), "sustained straggler stopped being flagged"
+    assert m.flagged == 5
+    assert m.ema == 1.0                              # baseline unpolluted
+    assert not m.observe(1.0)                        # healthy still healthy
+
+
+# ---------------------------------------------------------------------------
+# serving recovery ladder, each rung byte-identical to the fault-free ref
+# ---------------------------------------------------------------------------
+def test_raised_decode_fault_retried_in_place(srv, ref):
+    _arm(srv, "decode@1=raise")
+    report = _run_and_check(srv, ref)
+    assert report["retries"] >= 1
+    assert report["faults"] >= 1
+    assert report["quarantines"] == 0                # retry, not replay
+
+
+def test_nan_logits_quarantine_and_replay(srv, ref):
+    _arm(srv, "decode@1=nan:0")                      # slot 0 mid-decode
+    report = _run_and_check(srv, ref)
+    assert report["quarantines"] >= 1
+    assert report["statuses"]["failed"] == 0
+
+
+def test_corrupted_cache_row_detected_next_tick(srv, ref):
+    """A corrupt fault NaNs slot 0's KV rows in the COMMITTED cache; the
+    masked-attention 0*NaN leak surfaces as NaN logits on the next decode
+    tick, where the watchdog quarantines exactly that slot."""
+    _arm(srv, "decode@1=corrupt:0")
+    report = _run_and_check(srv, ref)
+    assert report["quarantines"] >= 1
+
+
+def test_prefill_fault_requeues_admission_batch(srv, ref):
+    _arm(srv, "prefill@0=raise", max_retries=0)      # no in-tick retry
+    report = _run_and_check(srv, ref)
+    assert report["faults"] >= 1
+
+
+def test_replay_budget_exhaustion_fails_request(srv):
+    _arm(srv, "decode@0=nan:0;decode@1=nan:0", max_replays=0)
+    report = srv.run_workload(_reqs(1), stagger_ticks=0)
+    assert report["statuses"]["failed"] == 1
+    assert report["statuses"]["ok"] == 0
+    assert srv.finished[0].status == "failed"
+
+
+def test_infeasible_deadline_is_shed_up_front(srv):
+    _arm(srv, None)
+    # max_new=4 needs 3 ticks after admission; a 1-tick deadline can never
+    # be met -> admission control sheds instead of wasting a slot
+    report = srv.run_workload(_reqs(3, max_new=4, deadline=1),
+                              stagger_ticks=0)
+    assert report["statuses"] == {"ok": 0, "expired": 0, "shed": 3,
+                                  "failed": 0}
+    assert report["requests_submitted"] == 3
+
+
+def test_queued_request_expires_when_shedding_disabled(srv):
+    _arm(srv, None, shed=False)
+    # 3 requests, 2 slots: the third waits; with shed off it sits in the
+    # queue until its deadline passes and is evicted as expired
+    report = srv.run_workload(_reqs(3, max_new=4, deadline=3),
+                              stagger_ticks=0)
+    assert report["statuses"]["ok"] == 2
+    assert report["statuses"]["expired"] == 1
+
+
+@pytest.mark.slow
+def test_degraded_fallback_then_recovery(srv):
+    """Persistent decode failures degrade to the per-request teacher-
+    forced path; once the faults clear, probe successes recover the
+    compiled path. Outputs stay byte-identical throughout."""
+    spec = ";".join(f"decode@{k}=raise" for k in range(6))
+    _arm(srv, spec, max_retries=0, degrade_after=2, recover_after=1)
+    reqs = _reqs(6)
+    report = srv.run_workload(_reqs(6), stagger_ticks=0)
+    assert report["degraded_transitions"] >= 2       # down AND back up
+    assert not report["degraded"]
+    assert report["statuses"]["ok"] == 6
+    ref6 = sequential_reference(ARCH, reqs, smoke=True, max_len=48)
+    got = {r.rid: r.out for r in srv.finished if r.status == "ok"}
+    for i in range(6):
+        assert got[i] == ref6[i]
+
+
+def test_decode_single_matches_sequential_reference(srv, ref):
+    """The degraded-mode fallback path in isolation: decode_single runs
+    the same compiled programs/shapes as a 1-slot server, so its stream
+    is the reference stream bit for bit."""
+    _arm(srv, None)
+    for i, req in enumerate(_reqs(4)):
+        out = srv.engine.decode_single(srv.params, req.prompt, req.max_new)
+        assert out == ref[i]
+
+
+# ---------------------------------------------------------------------------
+# snapshot / resume
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_snapshot_resume_after_crash_is_byte_identical(tmp_path):
+    reqs = _reqs(5, max_new=5, seed=3)
+    chaos = ChaosInjector(ChaosPlan.parse("tick@6=raise"))
+    srv = Server(ARCH, smoke=True, slots=2, max_len=48,
+                 resilience=ResilienceConfig(), chaos=chaos,
+                 snapshot_dir=str(tmp_path), snapshot_every=2)
+    with pytest.raises(InjectedFault):
+        srv.run_workload([Request(rid=r.rid, prompt=list(r.prompt),
+                                  max_new=r.max_new) for r in reqs],
+                         stagger_ticks=1)
+    srv._snap.wait()
+    crashed_ok = {r.rid for r in srv.finished if r.status == "ok"}
+    assert crashed_ok, "crash landed before any request finished"
+
+    res = Server.resume(ARCH, str(tmp_path), smoke=True, slots=2,
+                        max_len=48, resilience=ResilienceConfig())
+    # finished outputs restored, in-flight requests re-queued for replay
+    assert {r.rid for r in res.finished
+            if r.status == "ok"} == crashed_ok
+    assert {r.rid for r in res.queue} == \
+        {r.rid for r in reqs} - crashed_ok
+    report = res.run_until_drained()
+    # statuses count restored + replayed requests: all of them end ok
+    assert report["statuses"]["ok"] == len(reqs)
+    ref = sequential_reference(ARCH, reqs, smoke=True, max_len=48)
+    got = {r.rid: r.out for r in res.finished if r.status == "ok"}
+    for i, r in enumerate(reqs):
+        assert got[r.rid] == ref[i]
+
+
+def test_resume_from_empty_dir_starts_fresh(tmp_path):
+    res = Server.resume(ARCH, str(tmp_path), smoke=True, slots=1,
+                        max_len=48, resilience=ResilienceConfig())
+    assert res.finished == [] and res.queue == []
+
+
+# ---------------------------------------------------------------------------
+# observability: the fault timeline in the trace report
+# ---------------------------------------------------------------------------
+def test_report_fault_timeline(srv, ref, tmp_path):
+    from repro.obs import Tracer, load_trace
+    from repro.obs.report import summarize
+
+    # fault-free traced run: no fault timeline, summary unchanged
+    _arm(srv, None)
+    srv.tracer = tr = Tracer()
+    srv.run_workload(_reqs(2), stagger_ticks=0)
+    clean = tmp_path / "clean.json"
+    tr.write(str(clean))
+    assert summarize(load_trace(str(clean)))["faults"] is None
+
+    # injected fault run: chaos.inject + quarantine instants in order
+    inj = _arm(srv, "decode@1=nan:0")
+    srv.tracer = tr = Tracer()
+    inj.observe(srv.metrics, tr)
+    _run_and_check(srv, ref)
+    srv.tracer = None
+    faulty = tmp_path / "faulty.json"
+    tr.write(str(faulty))
+    faults = summarize(load_trace(str(faulty)))["faults"]
+    assert faults is not None
+    assert faults["counts"].get("chaos.inject", 0) >= 1
+    assert faults["counts"].get("quarantine", 0) >= 1
+    ts = [e["ts_us"] for e in faults["events"]]
+    assert ts == sorted(ts)
+
+
+# ---------------------------------------------------------------------------
+# satellite: training-side injection through the chaos module
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_train_inject_fault_recovers_via_checkpoints(tmp_path):
+    """The --inject-fault CLI mapping: ChaosPlan.for_steps -> the
+    FaultTolerantLoop fault_hook. The injected step fault fires once,
+    the loop restores from the last checkpoint, and the replayed step
+    does NOT re-fire (explicit step keying), so training completes."""
+    from repro.launch.train import train
+
+    hook = ChaosInjector(ChaosPlan.for_steps([6])).train_fault_hook()
+    report = train(ARCH, steps=12, smoke=True, batch=2, seq=16,
+                   ckpt_dir=str(tmp_path), ckpt_every=4, fault_hook=hook)
+    assert report["restarts"] == 1
+    assert report["final_step"] == 12

@@ -1,0 +1,110 @@
+"""CheckpointManager corruption handling: restore must fall back to the
+newest INTEGRITY-VERIFIED older step when the latest checkpoint on disk
+is truncated or bit-flipped, and must return None (never garbage) when
+every checkpoint is corrupt. ``verified_meta`` walks back identically
+without loading arrays — the serving snapshot/resume path depends on it."""
+import glob
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+
+
+def _tree(step):
+    return {"w": np.full((4, 3), float(step), np.float32),
+            "b": np.arange(6, dtype=np.int32) + step}
+
+
+def _mgr(tmp_path, steps=(1, 2, 3)):
+    mgr = CheckpointManager(str(tmp_path), keep_n=10, async_write=False)
+    for s in steps:
+        mgr.save(s, _tree(s), extra={"tag": f"step{s}"})
+    return mgr
+
+
+def _leaf_files(tmp_path, step):
+    files = sorted(glob.glob(os.path.join(str(tmp_path), f"step_{step}",
+                                          "*.npy")))
+    assert files
+    return files
+
+
+def _truncate(path):
+    size = os.path.getsize(path)
+    with open(path, "r+b") as f:
+        f.truncate(size // 2)
+
+
+def _bit_flip(path):
+    with open(path, "r+b") as f:
+        f.seek(-1, os.SEEK_END)
+        byte = f.read(1)
+        f.seek(-1, os.SEEK_END)
+        f.write(bytes([byte[0] ^ 0xFF]))
+
+
+@pytest.mark.parametrize("corrupt", [_truncate, _bit_flip],
+                         ids=["truncate", "bit_flip"])
+def test_restore_falls_back_over_corrupt_latest(tmp_path, corrupt):
+    mgr = _mgr(tmp_path)
+    corrupt(_leaf_files(tmp_path, 3)[0])
+    step, tree = mgr.restore(_tree(0))
+    assert step == 2                      # newest VERIFIED, not newest
+    np.testing.assert_array_equal(tree["w"], _tree(2)["w"])
+    np.testing.assert_array_equal(tree["b"], _tree(2)["b"])
+
+
+def test_restore_walks_back_over_multiple_corrupt_steps(tmp_path):
+    mgr = _mgr(tmp_path)
+    _bit_flip(_leaf_files(tmp_path, 3)[0])
+    _truncate(_leaf_files(tmp_path, 2)[1])
+    step, tree = mgr.restore(_tree(0))
+    assert step == 1
+    np.testing.assert_array_equal(tree["w"], _tree(1)["w"])
+
+
+def test_restore_returns_none_when_all_corrupt(tmp_path):
+    mgr = _mgr(tmp_path)
+    for s in (1, 2, 3):
+        _bit_flip(_leaf_files(tmp_path, s)[0])
+    step, tree = mgr.restore(_tree(0))
+    assert step is None
+    # the caller's tree comes back untouched, not half-loaded garbage
+    np.testing.assert_array_equal(tree["w"], _tree(0)["w"])
+
+
+def test_restore_skips_missing_meta_and_shape_mismatch(tmp_path):
+    mgr = _mgr(tmp_path)
+    os.remove(os.path.join(str(tmp_path), "step_3", "meta.json"))
+    # shape drift: rewrite a leaf with the wrong shape but a "valid" file
+    f = _leaf_files(tmp_path, 2)[0]
+    np.save(f, np.zeros((2, 2), np.float32))
+    step, _tree_out = mgr.restore(_tree(0))
+    assert step == 1
+
+
+def test_verified_meta_walks_back_and_carries_extra(tmp_path):
+    mgr = _mgr(tmp_path)
+    step, meta = mgr.verified_meta()
+    assert (step, meta["tag"]) == (3, "step3")
+    _truncate(_leaf_files(tmp_path, 3)[0])
+    step, meta = mgr.verified_meta()
+    assert (step, meta["tag"]) == (2, "step2")
+    for s in (1, 2):
+        _bit_flip(_leaf_files(tmp_path, s)[0])
+    assert mgr.verified_meta() == (None, None)
+
+
+def test_verified_meta_rejects_tampered_meta_json(tmp_path):
+    mgr = _mgr(tmp_path, steps=(1, 2))
+    meta_path = os.path.join(str(tmp_path), "step_2", "meta.json")
+    with open(meta_path) as f:
+        meta = json.load(f)
+    next(iter(meta["manifest"].values()))["crc32"] ^= 0x1
+    with open(meta_path, "w") as f:
+        json.dump(meta, f)
+    step, meta = mgr.verified_meta()
+    assert (step, meta["tag"]) == (1, "step1")

@@ -279,3 +279,61 @@ def test_untraced_server_has_no_tracer_and_metrics_schema():
     assert d["schema"] == "repro.obs.metrics" and d["version"] == 1
     fam = d["metrics"]["serve_requests"]["series"]
     assert fam[0]["value"] == 1.0
+
+
+# ---------------------------------------------------------------------------
+# resilient-mode status accounting (satellite of the resilience PR; the
+# fault-path behaviors themselves live in tests/test_chaos.py)
+# ---------------------------------------------------------------------------
+def test_stats_status_counts_sum_to_submitted():
+    """Every submitted request is exactly one of: terminal (ok/expired/
+    shed/failed), queued, or active — at ANY point in the server's life."""
+    from repro.launch.serve import ResilienceConfig
+
+    srv = _mk(slots=2, resilience=ResilienceConfig())
+
+    def invariant():
+        st = srv.stats()
+        assert (sum(st["statuses"].values()) + st["queued"] + st["active"]
+                == st["requests_submitted"])
+
+    invariant()                                      # zero submitted
+    feasible = [Request(rid=i, prompt=[1 + i, 2, 3], max_new=3)
+                for i in range(3)]
+    doomed = [Request(rid=10 + i, prompt=[5, 6], max_new=4,
+                      deadline_ticks=1) for i in range(2)]
+    for r in feasible + doomed:
+        srv.submit(r)
+    invariant()                                      # all still queued
+    while srv.queue or any(r is not None for r in srv.slot_req):
+        srv.tick()
+        invariant()                                  # mid-flight, every tick
+    st = srv.stats()
+    assert st["statuses"]["ok"] == 3
+    assert st["statuses"]["shed"] == 2
+    assert st["requests_submitted"] == 5
+    assert st["queued"] == 0 and st["active"] == 0
+
+
+def test_stats_well_formed_when_every_request_is_shed():
+    from repro.launch.serve import ResilienceConfig
+
+    srv = _mk(slots=2, resilience=ResilienceConfig())
+    n = 4
+    for i in range(n):
+        # max_new=6 needs 5 post-admission ticks; deadline 2 is infeasible
+        srv.submit(Request(rid=i, prompt=[1, 2], max_new=6,
+                           deadline_ticks=2))
+    report = srv.run_until_drained()
+    assert report["statuses"] == {"ok": 0, "expired": 0, "shed": n,
+                                  "failed": 0}
+    assert report["requests"] == n and report["requests_submitted"] == n
+    # no ok requests -> empty percentile inputs -> 0.0 (never NaN/raise)
+    for k in ("p50_queue_wait_s", "p99_ttft_s", "p50_latency_s"):
+        assert report[k] == 0.0
+    assert report["tokens_out"] == 0
+    # the labeled serve_requests counter agrees with the stats surface
+    d = srv.metrics_dict()
+    shed = [s for s in d["metrics"]["serve_requests"]["series"]
+            if s["labels"].get("status") == "shed"]
+    assert shed and shed[0]["value"] == float(n)
