@@ -27,10 +27,10 @@ import time
 # "obs_micro" (the FAST-tier smokes) likewise only run via --only.
 ALL = ("table1", "fig12", "fig13", "fig14", "fig15", "fusion", "fig18",
        "fig20", "kernels", "roofline", "exec", "exec_sharded", "dse",
-       "serve")
+       "serve", "syssim")
 
 MICRO = ("exec_micro", "dse_micro", "serve_micro", "exec_sharded_micro",
-         "obs_micro", "chaos_micro")
+         "obs_micro", "chaos_micro", "syssim_micro")
 
 
 def _run(name, fn):
@@ -160,7 +160,7 @@ def main():
         want = list(ALL)
 
     from benchmarks import (chaos_bench, dse_bench, exec_bench, obs_bench,
-                            serve_bench)
+                            serve_bench, syssim_bench)
     from benchmarks import paper_tables as pt
     from repro.obs import Metrics, provenance
 
@@ -180,6 +180,8 @@ def main():
         "serve_micro": serve_bench.serve_micro,
         "obs_micro": obs_bench.obs_micro,
         "chaos_micro": chaos_bench.chaos_micro,
+        "syssim": syssim_bench.syssim_bench,
+        "syssim_micro": syssim_bench.syssim_micro,
     }
     # harness wall-times go through the unified metrics registry so the
     # committed artifact carries the same schema every other subsystem emits
@@ -256,6 +258,13 @@ def main():
             "spec, a spec'd fault never fired, a request landed in the "
             "wrong terminal status, or the resilience layer cost more "
             "than 5% on the fault-free serve path")
+    if "syssim_micro" in results and not results["syssim_micro"][1].get(
+            "ok"):
+        raise SystemExit(
+            "syssim_micro: the degenerate 1-unit uncontended system "
+            "diverged from repro.sim (movement/energy/cycles drift or "
+            "analytic agreement out of tolerance), or the serve-trace "
+            "replay dropped recorded requests")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,131 @@
+"""System-simulator benchmarks: heterogeneous utilization + trace replay.
+
+``syssim`` — full cell (via ``benchmarks.run``): per-unit utilization and
+contention-stall share of the 2-unit heterogeneous system (GCONV array +
+vector/SIMD unit) serving concurrent chains on a couple of zoo networks,
+plus an end-to-end replay of a freshly recorded serve trace; the per-unit
+breakdown lands in ``results/benchmarks.json``.
+
+``syssim_micro`` — FAST-tier CI gate. Two invariants, both of which must
+hold for ``ok``:
+
+  * **degenerate fidelity** — the 1-unit uncontended system reproduces
+    ``repro.sim.simulate_chain`` exactly (movement/energy to
+    ``DRIFT_TOL``, cycles bit-for-bit) on a reduced zoo slice across the
+    Table-4 accelerators, and stays inside the analytic-vs-sim
+    ``CYCLES_RATIO_TOL`` contract;
+  * **lossless replay** — a recorded serve trace replays on the
+    heterogeneous ER system with zero dropped requests.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+
+ARCH = "tinyllama-1.1b"
+
+# reduced zoo slice for the FAST gate: one depthwise-heavy and one
+# plain-conv net keeps both routing classes (vector + array) exercised
+MICRO_NETS = ("MN", "AN")
+FULL_NETS = ("AN", "MN", "GLN")
+N_JOBS = 2
+
+
+def _record_trace(trace_path, n=4, max_new=4):
+    """Tiny staggered traced serve workload (same shape as obs_micro)."""
+    from benchmarks.serve_bench import _workload
+    from repro.launch.serve import Server
+    from repro.obs import Tracer
+
+    tr = Tracer()
+    srv = Server(ARCH, smoke=True, slots=2, max_len=64, tracer=tr)
+    srv.run_workload(_workload(n, srv.cfg.vocab, max_new=max_new),
+                     stagger_ticks=1)
+    tr.write(trace_path)
+    return trace_path
+
+
+def _replay_rows(reduced):
+    """Replay a freshly recorded trace on the hetero ER system."""
+    from repro.syssim import hetero, replay_trace
+
+    with tempfile.TemporaryDirectory() as td:
+        path = _record_trace(os.path.join(td, "serve_trace.json"))
+        res = replay_trace(path, hetero("ER"), reduced=reduced)
+    rep = res.report
+    row = dict(
+        check="trace_replay", accel="ER",
+        requests_recorded=res.requests_recorded,
+        requests_simulated=res.requests_simulated,
+        dropped=res.dropped,
+        goodput_tokens_per_kcycle=round(rep.goodput, 6),
+        p50_latency_cycles=round(rep.latency_percentile(50), 1),
+        p99_latency_cycles=round(rep.latency_percentile(99), 1),
+        aggregate_utilization=round(rep.aggregate_utilization, 4),
+        contention_stall_share=round(rep.contention_stall_share, 6),
+        unit_utilization={u.name: round(u.utilization(rep.makespan), 4)
+                          for u in rep.units},
+        ok=bool(res.dropped == 0),
+    )
+    return row
+
+
+def syssim_bench():
+    """Full cell: hetero vs array-only utilization on zoo nets + replay."""
+    from repro.syssim import hetero_utilization_gain
+
+    rows = []
+    gains = []
+    for net in FULL_NETS:
+        g = hetero_utilization_gain(net, accel="ER", n_jobs=N_JOBS)
+        gains.append(g)
+        rows.append(dict(
+            check="hetero_utilization", net=net, accel="ER",
+            n_jobs=N_JOBS, vector_tasks=g["vector_tasks"],
+            hetero_utilization=round(g["hetero_utilization"], 4),
+            array_only_utilization=round(g["array_only_utilization"], 4),
+            gain=round(g["gain"], 4),
+            makespan_speedup=round(g["array_only_makespan"]
+                                   / max(g["hetero_makespan"], 1e-12), 4),
+            strictly_higher=g["strictly_higher"]))
+    replay = _replay_rows(reduced=False)
+    rows.append(replay)
+    summary = dict(
+        nets=len(gains),
+        hetero_higher_on=sum(1 for g in gains if g["strictly_higher"]),
+        mean_utilization_gain=round(
+            sum(g["gain"] for g in gains) / len(gains), 4),
+        replay_dropped=replay["dropped"],
+        replay_contention_stall_share=replay["contention_stall_share"],
+        replay_unit_utilization=replay["unit_utilization"],
+        ok=bool(any(g["strictly_higher"] for g in gains)
+                and replay["dropped"] == 0),
+    )
+    return rows, summary
+
+
+def syssim_micro():
+    """FAST-tier gate: exact degenerate parity with repro.sim on the
+    reduced zoo slice x Table-4 accelerators, and a lossless replay of a
+    recorded serve trace on the heterogeneous system."""
+    from repro.syssim import validate_degenerate
+
+    deg_rows, deg = validate_degenerate(nets=MICRO_NETS, reduced=True)
+    rows = [dict(check="degenerate", net=r["net"], accel=r["accel"],
+                 cycles_drift=r["cycles_drift"],
+                 movement_drift=r["movement_drift"],
+                 energy_drift=r["energy_drift"],
+                 cycles_ratio=round(r["cycles_ratio"], 4),
+                 exact=r["exact"]) for r in deg_rows]
+    replay = _replay_rows(reduced=True)
+    rows.append(replay)
+    summary = dict(
+        degenerate_pairs=deg["pairs"],
+        degenerate_exact=deg["all_exact"],
+        degenerate_within_tolerance=deg["all_within_tolerance"],
+        max_cycles_drift=deg["max_cycles_drift"],
+        replay_dropped=replay["dropped"],
+        ok=bool(deg["all_exact"] and deg["all_within_tolerance"]
+                and replay["dropped"] == 0),
+    )
+    return rows, summary

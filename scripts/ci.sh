@@ -32,7 +32,12 @@
 #                                   fails if recovered outputs diverge
 #                                   byte-for-byte from the fault-free
 #                                   reference or the resilience layer
-#                                   costs >5% on the fault-free path)
+#                                   costs >5% on the fault-free path) and
+#                                   the system-simulator smoke (fails if
+#                                   the degenerate 1-unit uncontended
+#                                   system diverges from repro.sim or the
+#                                   serve-trace replay drops recorded
+#                                   requests)
 #   CI_INSTALL=1 ./scripts/ci.sh    pip install -e '.[dev]' first (networked
 #                                   CI; the dev extras declare pytest and
 #                                   hypothesis — without them the property
@@ -66,8 +71,10 @@ if [ "${FAST:-0}" = "1" ]; then
   # disagreeing with Server.stats(), or disabled-mode tracing overhead
   # above 2% on the exec micro cell (obs_micro), or when serving through
   # the fixed chaos spec loses byte-identity with the fault-free
-  # reference / the resilience layer costs >5% fault-free (chaos_micro)
+  # reference / the resilience layer costs >5% fault-free (chaos_micro),
+  # or when the system simulator's degenerate 1-unit case diverges from
+  # repro.sim / the serve-trace replay drops requests (syssim_micro)
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m benchmarks.run \
-    --only exec_micro,dse_micro,serve_micro,exec_sharded_micro,obs_micro,chaos_micro
+    --only exec_micro,dse_micro,serve_micro,exec_sharded_micro,obs_micro,chaos_micro,syssim_micro
 fi

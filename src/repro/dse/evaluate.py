@@ -48,7 +48,10 @@ W_CAPEX = 0.5
 W_OPEX = 0.5
 
 LM_CHAINS = ("lm_dense", "lm_moe")
-SUITES = ("zoo", "lm", "all")
+# "serve" scores the LM chains analytically during the search (the served
+# traffic is LM serving) and promotes frontier points into the syssim
+# trace-replay fidelity (repro.dse.run --suite serve --trace PATH)
+SUITES = ("zoo", "lm", "all", "serve")
 
 
 def suite_names(suite: str) -> Tuple[str, ...]:
@@ -58,7 +61,8 @@ def suite_names(suite: str) -> Tuple[str, ...]:
     from repro.models import cnn
 
     zoo = tuple(cnn.ZOO)
-    return {"zoo": zoo, "lm": LM_CHAINS, "all": zoo + LM_CHAINS}[suite]
+    return {"zoo": zoo, "lm": LM_CHAINS, "all": zoo + LM_CHAINS,
+            "serve": LM_CHAINS}[suite]
 
 
 def area_proxy(spec: AcceleratorSpec) -> float:
@@ -119,6 +123,7 @@ class EvalRecord:
     per_chain: Dict[str, Dict[str, float]] = field(default_factory=dict)
     fidelity: str = "analytic"
     sim: Optional[dict] = None     # filled in by Evaluator.promote
+    syssim: Optional[dict] = None  # filled in by Evaluator.promote_syssim
 
     def objectives(self) -> Tuple[float, float, float]:
         """(latency, energy, area) — the Pareto axes, all minimized."""
@@ -131,6 +136,8 @@ class EvalRecord:
                  fidelity=self.fidelity, per_chain=self.per_chain)
         if self.sim is not None:
             d["sim"] = self.sim
+        if self.syssim is not None:
+            d["syssim"] = self.syssim
         return d
 
 
@@ -274,5 +281,64 @@ class Evaluator:
                 movement_drift=max_mov_drift,
                 energy_drift=max_e_drift,
                 cycles_ratio_tol=CYCLES_RATIO_TOL,
+            )
+        return list(records)
+
+    # ------------------------------------------------------------------
+    def promote_syssim(self, records: Sequence[EvalRecord], trace,
+                       reduced: bool = False, use_vector: bool = True,
+                       lanes: int = 64,
+                       bandwidth: float = 16.0) -> List[EvalRecord]:
+        """System-under-traffic fidelity: replay a recorded serve trace
+        (``repro.syssim.replay``) on each record's system.
+
+        The whole-life framing carries over with the per-chain geomean
+        latency replaced by the *makespan serving the recorded traffic*
+        (a deployment needs ``#chips ∝ makespan`` to keep up with it) and
+        energy by the replay's total energy, both normalized against the
+        ER reference system replaying the same trace. The replay clock
+        (``tick_cycles``) is calibrated once on the ER reference and held
+        fixed across candidates so every record sees the identical
+        arrival schedule. Mutates the records in place (``rec.syssim``)
+        and returns them."""
+        from repro.obs.trace import Trace, load_trace
+        from repro.syssim import hetero, replay_trace, single_array
+        from repro.syssim.replay import default_chain
+
+        if not isinstance(trace, Trace):
+            trace = load_trace(trace)
+        chain = default_chain(trace, reduced=reduced)
+
+        def system_for(spec):
+            if use_vector:
+                return hetero(spec, lanes=lanes, bandwidth=bandwidth)
+            return single_array(spec)
+
+        ref = replay_trace(trace, system_for(acc.get("ER")), chain=chain,
+                           use_vector=use_vector)
+        tick_cycles = ref.tick_cycles
+        ref_makespan = ref.report.makespan
+        ref_energy = ref.report.energy
+        for rec in records:
+            spec = (self.space.to_spec(rec.point) if rec.point is not None
+                    else acc.get(rec.spec_name))
+            res = replay_trace(trace, system_for(spec), chain=chain,
+                               tick_cycles=tick_cycles,
+                               use_vector=use_vector)
+            rep = res.report
+            rec.syssim = dict(
+                wlc=(self.w_capex * (rep.makespan / ref_makespan)
+                     * (rec.area / self._ref_area)
+                     + self.w_opex * (rep.energy / ref_energy)),
+                makespan_cycles=rep.makespan,
+                goodput_tokens_per_kcycle=rep.goodput,
+                p50_latency_cycles=rep.latency_percentile(50),
+                p99_latency_cycles=rep.latency_percentile(99),
+                energy=rep.energy,
+                aggregate_utilization=rep.aggregate_utilization,
+                contention_stall_share=rep.contention_stall_share,
+                requests=res.requests_simulated,
+                dropped=res.dropped,
+                tick_cycles=tick_cycles,
             )
         return list(records)

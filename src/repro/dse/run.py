@@ -59,11 +59,21 @@ def dominates_at_budget(rec: EvalRecord, base: EvalRecord) -> bool:
 def run_dse(suite: str = "zoo", budget: int = 200, seed: int = 0,
             strategy: str = "genetic", topk: int = 8,
             map_budget: int = 32, out_dir: Optional[str] = RESULTS_DIR,
-            reduced: bool = False, quiet: bool = False) -> dict:
+            reduced: bool = False, quiet: bool = False,
+            trace: Optional[str] = None) -> dict:
     """Programmatic entry point; returns the ``best.json`` payload plus the
-    frontier and evaluator (used by benchmarks and tests)."""
+    frontier and evaluator (used by benchmarks and tests).
+
+    ``trace`` (required for ``--suite serve``, optional elsewhere) scores
+    the promoted frontier and the baselines against a recorded serve
+    trace via ``repro.syssim`` — the best point is then chosen by the
+    system-under-traffic WLC, and the trace's identity + provenance are
+    recorded into ``best.json``."""
     if budget < 1:
         raise ValueError(f"--budget must be >= 1, got {budget}")
+    if suite == "serve" and trace is None:
+        raise ValueError("--suite serve needs --trace PATH "
+                         "(a launch/serve.py --trace recording)")
     t0 = time.perf_counter()
     say = (lambda *a: None) if quiet else print
     chains = load_suite(suite, reduced=reduced)
@@ -106,15 +116,34 @@ def run_dse(suite: str = "zoo", budget: int = 200, seed: int = 0,
     all_promoted: List[EvalRecord] = []   # every sim promotion feeds the gate
     promoted = ev.promote(frontier[:max(1, topk)])
     all_promoted += promoted
-    best = min(promoted,
-               key=lambda r: ((r.sim or {}).get("wlc", r.wlc), r.key))
     say(f"dse: promoted {len(promoted)} frontier points to cycle-level sim")
+
+    # ---- system-under-traffic promotion: recorded trace -> repro.syssim ---
+    loaded_trace = None
+    if trace is not None:
+        from repro.obs.trace import load_trace
+
+        loaded_trace = load_trace(trace)
+        ev.promote_syssim(promoted, loaded_trace, reduced=reduced)
+        say(f"dse: replayed {trace} on {len(promoted)} promoted points "
+            f"({len(loaded_trace.serve_requests())} recorded requests)")
+
+    def _rank(r: EvalRecord):
+        # the deepest fidelity available decides: trace replay beats
+        # per-chain sim beats analytic
+        if r.syssim is not None:
+            return (r.syssim["wlc"], r.key)
+        return ((r.sim or {}).get("wlc", r.wlc), r.key)
+
+    best = min(promoted, key=_rank)
 
     # ---- baselines, sim-checked the same way ------------------------------
     base_recs: Dict[str, EvalRecord] = {}
     for name in BASELINES:
         rec = ev.score_spec(acc.get(name))
         all_promoted += ev.promote([rec])
+        if loaded_trace is not None:
+            ev.promote_syssim([rec], loaded_trace, reduced=reduced)
         base_recs[name] = rec
     domination = {}
     for name, base in base_recs.items():
@@ -158,7 +187,8 @@ def run_dse(suite: str = "zoo", budget: int = 200, seed: int = 0,
     wall_s = time.perf_counter() - t0
     payload = dict(
         config=dict(suite=suite, budget=budget, seed=seed, strategy=strategy,
-                    topk=topk, map_budget=map_budget, reduced=reduced),
+                    topk=topk, map_budget=map_budget, reduced=reduced,
+                    trace=trace),
         n_evals=ev.n_evals, wall_s=round(wall_s, 3),
         search_s=round(search_s, 3),
         points_per_sec=round(ev.n_evals / max(search_s, 1e-9), 2),
@@ -173,6 +203,21 @@ def run_dse(suite: str = "zoo", budget: int = 200, seed: int = 0,
         trajectory=dict(points=len(trajectory), best_wlc=best_so_far,
                         evals_to_best=evals_to_best),
     )
+    if loaded_trace is not None:
+        # the served-traffic claim is only as good as the trace it was
+        # scored on: stamp the trace's identity (path + content hash +
+        # recorded meta) and this run's provenance into best.json
+        import hashlib
+
+        from repro.obs import provenance
+
+        with open(trace, "rb") as f:
+            digest = hashlib.sha256(f.read()).hexdigest()
+        payload["trace"] = dict(
+            path=os.path.abspath(trace), sha256=digest,
+            meta=dict(loaded_trace.meta),
+            requests=len(loaded_trace.serve_requests()),
+            provenance=provenance())
 
     if out_dir:
         os.makedirs(out_dir, exist_ok=True)
@@ -217,11 +262,19 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     ap.add_argument("--out", default=RESULTS_DIR)
     ap.add_argument("--reduced", action="store_true",
                     help="test-scale chain variants (CI smoke)")
+    ap.add_argument("--trace", default=None,
+                    help="recorded serve trace (launch/serve.py --trace); "
+                         "scores the promoted frontier against the "
+                         "recorded traffic via repro.syssim and records "
+                         "the trace's provenance into best.json "
+                         "(required for --suite serve)")
     args = ap.parse_args(argv)
+    if args.suite == "serve" and args.trace is None:
+        ap.error("--suite serve requires --trace PATH")
     payload = run_dse(suite=args.suite, budget=args.budget, seed=args.seed,
                       strategy=args.strategy, topk=args.topk,
                       map_budget=args.map_budget, out_dir=args.out,
-                      reduced=args.reduced)
+                      reduced=args.reduced, trace=args.trace)
     # the headline claim counts only sim-confirmed domination (the analytic
     # verdict alone could flip inside the sim agreement tolerance)
     dominated = [k for k, v in payload["domination"].items()

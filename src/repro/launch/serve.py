@@ -539,7 +539,11 @@ class Server:
         if tr is not None and tr.enabled:
             with tr.span("tick", cat="serve", attrs={"tick": self.ticks}):
                 n = self._tick_inner()
-            tr.counter("slots", {"active": n, "queued": len(self.queue)})
+            # the tick index rides on the counter sample so the
+            # Trace.serve_ticks() iterator is self-indexing (replay does
+            # not need to join against the tick spans)
+            tr.counter("slots", {"active": n, "queued": len(self.queue),
+                                 "tick": self.ticks})
         else:
             n = self._tick_inner()
         self.ticks += 1

@@ -75,14 +75,14 @@ def backend_share(trace: Trace) -> Dict[str, float]:
 
 
 def request_stats(trace: Trace) -> dict:
-    """Request count + latency percentiles from lifecycle spans. Keys are
-    well-formed for zero and one finished request (percentile() contract)."""
-    reqs = [s for s in trace.spans
-            if s["cat"] == "request" and s["name"] == "request"]
-    qw = [s["args"]["queue_wait_s"] for s in reqs
-          if "queue_wait_s" in s["args"]]
-    ttft = [s["args"]["ttft_s"] for s in reqs if "ttft_s" in s["args"]]
-    lat = [s["args"]["latency_s"] for s in reqs if "latency_s" in s["args"]]
+    """Request count + latency percentiles from the stable
+    :meth:`Trace.serve_requests` lifecycle iterator (shared with the
+    ``repro.syssim`` replay frontend). Keys are well-formed for zero and
+    one finished request (percentile() contract)."""
+    reqs = trace.serve_requests()
+    qw = [r.queue_wait_s for r in reqs if r.queue_wait_s is not None]
+    ttft = [r.ttft_s for r in reqs if r.ttft_s is not None]
+    lat = [r.latency_s for r in reqs if r.latency_s is not None]
     return {
         "requests": len(reqs),
         "p50_queue_wait_s": percentile(qw, 50),
@@ -91,29 +91,28 @@ def request_stats(trace: Trace) -> dict:
         "p99_ttft_s": percentile(ttft, 99),
         "p50_latency_s": percentile(lat, 50),
         "p99_latency_s": percentile(lat, 99),
-        "tokens_out": sum(int(s["args"].get("out_len", 0)) for s in reqs),
+        "tokens_out": sum(int(r.out_len or 0) for r in reqs),
     }
 
 
 def phase_breakdown(trace: Trace) -> Dict[str, dict]:
     """p50/total seconds per request-lifecycle phase (queue/prefill/
-    decode child spans under ``request`` spans)."""
+    decode child spans folded into each ``ServeRequest``)."""
     phases: Dict[str, List[float]] = {}
-    for s in trace.spans:
-        if s["cat"] == "request" and s["name"] != "request":
-            phases.setdefault(s["name"], []).append(s["dur"] / 1e6)
+    for r in trace.serve_requests():
+        for name, secs in r.phases.items():
+            phases.setdefault(name, []).append(secs)
     return {name: {"count": len(xs), "p50_s": percentile(xs, 50),
                    "total_s": round(sum(xs), 6)}
             for name, xs in sorted(phases.items())}
 
 
 def slot_utilization(trace: Trace) -> Optional[float]:
-    samples = [c["values"].get("active") for c in trace.counters
-               if c["name"] == "slots" and "active" in c["values"]]
-    if not samples:
+    ticks = trace.serve_ticks()
+    if not ticks:
         return None
     slots = trace.meta.get("slots")
-    mean_active = sum(samples) / len(samples)
+    mean_active = sum(t.active for t in ticks) / len(ticks)
     return round(mean_active / slots, 4) if slots else round(mean_active, 4)
 
 
@@ -172,6 +171,39 @@ def summarize(trace: Trace, top: int = 15) -> dict:
     return out
 
 
+def render_text(out: dict) -> str:
+    """Terminal-friendly rendering of a :func:`summarize` dict."""
+    lines = [f"trace: schema v{out['schema_version']}, "
+             f"{out['events']} events, {out['spans']} spans",
+             f"meta: {json.dumps(out['meta'], default=str)}",
+             f"requests: {out['requests']}  "
+             f"tokens_out: {out['tokens_out']}"]
+    for k in ("queue_wait", "ttft", "latency"):
+        p50, p99 = out[f"p50_{k}_s"], out[f"p99_{k}_s"]
+        if p50 is not None:
+            lines.append(f"  {k}: p50 {p50:.6f}s  p99 {p99:.6f}s")
+    for name, ph in (out.get("phases") or {}).items():
+        lines.append(f"  phase {name}: x{ph['count']} "
+                     f"p50 {ph['p50_s']:.6f}s total {ph['total_s']:.6f}s")
+    if out.get("slot_utilization") is not None:
+        lines.append(f"slot_utilization: {out['slot_utilization']}")
+    if out.get("backend_share"):
+        lines.append("backend_share: " + ", ".join(
+            f"{b}={v:.2%}" for b, v in out["backend_share"].items()))
+    if out.get("profile"):
+        pr = out["profile"]
+        lines.append(f"profile: {pr['chain']} coverage {pr['coverage']:.2%}"
+                     f" over {pr['steps']} steps")
+    if out.get("faults"):
+        lines.append("faults: " + json.dumps(out["faults"]["counts"]))
+    lines.append(f"top spans (self time, top {len(out['top_spans'])}):")
+    for a in out["top_spans"]:
+        lines.append(f"  {a['self_us']:>12.1f}us self "
+                     f"{a['total_us']:>12.1f}us total x{a['calls']:<6} "
+                     f"{a['name']} [{a['cat']}]")
+    return "\n".join(lines)
+
+
 def main(argv: Optional[Sequence[str]] = None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.obs.report",
@@ -179,15 +211,22 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     ap.add_argument("trace", help="path written by Tracer.write / --trace")
     ap.add_argument("--top", type=int, default=15,
                     help="span-name rows in the self-time table")
+    ap.add_argument("--format", choices=("json", "text"), default="json",
+                    help="json (default): one machine-readable object, "
+                         "consumed by benchmark cells and syssim tooling; "
+                         "text: terminal rendering of the same summary")
     args = ap.parse_args(argv)
     try:
         trace = load_trace(args.trace)
     except (OSError, ValueError) as e:
         print(f"report: invalid trace {args.trace!r}: {e}", file=sys.stderr)
         return 1
+    out = summarize(trace, top=args.top)
     try:
-        print(json.dumps(summarize(trace, top=args.top), indent=1,
-                         default=float))
+        if args.format == "text":
+            print(render_text(out))
+        else:
+            print(json.dumps(out, indent=1, default=float))
     except BrokenPipeError:            # | head etc. closed stdout
         pass
     return 0

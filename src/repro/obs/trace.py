@@ -43,6 +43,7 @@ from __future__ import annotations
 import json
 import time
 from collections import deque
+from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
 SCHEMA = "repro.obs.trace"
@@ -221,6 +222,54 @@ class Tracer:
 # ---------------------------------------------------------------------------
 # loading + validation
 # ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class ServeRequest:
+    """One recorded request lifecycle (the serving driver's ``request``
+    span). Tick fields are driver tick indices — the replay clock the
+    system simulator schedules against; seconds fields are the measured
+    wall-clock latencies. Missing args load as ``None`` so partial traces
+    still iterate."""
+
+    rid: Optional[int]
+    prompt_len: Optional[int]
+    max_new: Optional[int]
+    out_len: Optional[int]
+    submit_tick: Optional[int]
+    admit_tick: Optional[int]
+    done_tick: Optional[int]
+    queue_wait_s: Optional[float]
+    ttft_s: Optional[float]
+    latency_s: Optional[float]
+    phases: Dict[str, float] = field(default_factory=dict)  # name -> secs
+    args: Dict[str, object] = field(default_factory=dict)
+
+    @property
+    def tokens(self) -> float:
+        """Prompt + generated tokens (generated falls back to the
+        ``max_new`` budget when ``out_len`` was not recorded)."""
+        out = self.out_len if self.out_len is not None else (self.max_new
+                                                            or 0)
+        return float((self.prompt_len or 0) + out)
+
+    @property
+    def service_ticks(self) -> Optional[int]:
+        if self.admit_tick is None or self.done_tick is None:
+            return None
+        return max(1, self.done_tick - self.admit_tick)
+
+
+@dataclass(frozen=True)
+class ServeTick:
+    """One serving-driver tick: slot occupancy sampled from the ``slots``
+    counter track (``index`` prefers the recorded tick number, falling
+    back to sample order for pre-tick-stamp traces)."""
+
+    index: int
+    active: int
+    queued: int
+    ts: float
+
+
 class Trace:
     """A loaded, schema-validated trace (either export format)."""
 
@@ -240,6 +289,57 @@ class Trace:
     @property
     def counters(self) -> List[dict]:
         return [e for e in self.events if e["type"] == "counter"]
+
+    # -- serve-schema iterators ----------------------------------------
+    # The stable request/tick API shared by repro.obs.report and the
+    # repro.syssim replay frontend (so the two cannot drift on how the
+    # lifecycle schema is interpreted).
+    def serve_requests(self) -> List[ServeRequest]:
+        """Recorded request lifecycles, sorted by (submit_tick, rid).
+        Child ``queue``/``prefill``/``decode`` spans are folded into
+        ``phases`` (seconds)."""
+        spans = self.spans
+        kids: Dict[object, List[dict]] = {}
+        for s in spans:
+            p = s.get("parent")
+            if p is not None:
+                kids.setdefault(p, []).append(s)
+        out = []
+        for s in spans:
+            if s["cat"] != "request" or s["name"] != "request":
+                continue
+            a = s["args"]
+            phases = {c["name"]: c["dur"] / 1e6
+                      for c in kids.get(s.get("id"), ())
+                      if c["cat"] == "request"}
+            out.append(ServeRequest(
+                rid=a.get("rid"), prompt_len=a.get("prompt_len"),
+                max_new=a.get("max_new"), out_len=a.get("out_len"),
+                submit_tick=a.get("submit_tick"),
+                admit_tick=a.get("admit_tick"),
+                done_tick=a.get("done_tick"),
+                queue_wait_s=a.get("queue_wait_s"),
+                ttft_s=a.get("ttft_s"), latency_s=a.get("latency_s"),
+                phases=phases, args=dict(a)))
+        inf = float("inf")
+        out.sort(key=lambda r: (r.submit_tick if r.submit_tick is not None
+                                else inf,
+                                r.rid if r.rid is not None else inf))
+        return out
+
+    def serve_ticks(self) -> List[ServeTick]:
+        """Per-tick slot occupancy from the ``slots`` counter track, in
+        emission order."""
+        out = []
+        for c in self.counters:
+            if c["name"] != "slots":
+                continue
+            v = c["values"]
+            out.append(ServeTick(index=int(v.get("tick", len(out))),
+                                 active=int(v.get("active", 0)),
+                                 queued=int(v.get("queued", 0)),
+                                 ts=float(c["ts"])))
+        return out
 
 
 _REQUIRED = {

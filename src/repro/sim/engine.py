@@ -138,6 +138,25 @@ def _simulate_movement(node, chain: Chain,
                         energy=nc.energy)
 
 
+def handoff_credit(prev_name: Optional[str],
+                   prev_stats: Optional[NodeSimStats],
+                   node, node_stats: NodeSimStats,
+                   contention: str = "ports") -> float:
+    """Producer-drain/consumer-fill overlap credited at a back-to-back
+    GCONV handoff: a consumer scheduled right after its producer starts
+    filling its first tile while the producer's last window drains. Only
+    possible with per-type ports — on a shared bus the drain and the fill
+    serialize by definition, so no credit. Shared with ``repro.syssim``
+    (which applies it only when both nodes land back-to-back on the same
+    unit) so the two engines charge the identical rule."""
+    if (contention == "ports" and prev_stats is not None
+            and isinstance(node, GConv)
+            and node.input == prev_name
+            and prev_stats.kind == "gconv"):
+        return min(prev_stats.drain_cycles, node_stats.fill_cycles)
+    return 0.0
+
+
 def simulate_chain(chain: Chain, spec: AcceleratorSpec,
                    fuse: bool = True, consistent: bool = True,
                    energy_overhead: float = 0.19,
@@ -181,15 +200,8 @@ def simulate_chain(chain: Chain, spec: AcceleratorSpec,
                                k_actual_elems=_k_elems(chain, node),
                                energy_overhead=energy_overhead,
                                contention=contention)
-        # handoff: a consumer scheduled right after its producer starts
-        # filling its first tile while the producer's last window drains.
-        # Only possible with per-type ports — on a shared bus the drain and
-        # the fill serialize by definition, so no credit.
-        if (contention == "ports" and prev_stats is not None
-                and isinstance(node, GConv)
-                and node.input == prev_name
-                and prev_stats.kind == "gconv"):
-            handoff += min(prev_stats.drain_cycles, ns.fill_cycles)
+        handoff += handoff_credit(prev_name, prev_stats, node, ns,
+                                  contention=contention)
         nodes.append(ns)
         prev_name, prev_stats = name, ns
     return ChainSimStats(chain_name=chain.name, accel=spec.name, nodes=nodes,

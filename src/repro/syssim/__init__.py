@@ -1,0 +1,33 @@
+"""System-level simulator: heterogeneous units, shared interconnect,
+multi-chain concurrency, serve-trace replay.
+
+Layers on top of the single-chain cycle-level simulator (``repro.sim``):
+an :class:`~repro.syssim.system.ArrayUnit` charges the exact per-node
+``repro.sim`` costs, a :class:`~repro.syssim.system.VectorUnit` services
+the movement-dominated fusion groups, the router follows the execution
+plan's backend metadata, and the engine arbitrates a shared interconnect
+across concurrently in-flight chains. The degenerate 1-unit uncontended
+configuration reproduces ``repro.sim.simulate_chain`` exactly
+(:mod:`repro.syssim.validate`), and the replay frontend
+(:mod:`repro.syssim.replay`) scores a candidate system against recorded
+serving traffic — the fidelity ``repro.dse`` promotes Pareto points into
+for the whole-life-cost-under-traffic objective.
+"""
+from .engine import ChainJob, simulate_system
+from .interconnect import Interconnect, maxmin_fair
+from .replay import ReplayResult, calibrate_tick_cycles, replay_trace
+from .route import RoutedChain, Task, route_chain
+from .stats import JobStats, SystemReport, UnitStats
+from .system import (ArrayUnit, SystemSpec, VectorUnit, hetero,
+                     single_array)
+from .validate import (degenerate_pair, hetero_utilization_gain,
+                       validate_degenerate)
+
+__all__ = [
+    "ArrayUnit", "ChainJob", "Interconnect", "JobStats", "ReplayResult",
+    "RoutedChain", "SystemReport", "SystemSpec", "Task", "UnitStats",
+    "VectorUnit", "calibrate_tick_cycles", "degenerate_pair", "hetero",
+    "hetero_utilization_gain", "maxmin_fair", "replay_trace",
+    "route_chain", "simulate_system", "single_array",
+    "validate_degenerate",
+]

@@ -1,0 +1,173 @@
+"""Serve-trace replay: recorded traffic -> system simulation.
+
+    PYTHONPATH=src python -m repro.syssim.replay TRACE [--accel ER]
+
+Loads a ``launch/serve.py --trace`` file through
+``repro.obs.trace.load_trace`` and re-simulates the recorded tick/request
+schedule on a candidate system:
+
+  * every recorded request (``Trace.serve_requests()``) becomes one
+    :class:`~repro.syssim.engine.ChainJob` — the served model's block
+    chain (from the trace's ``arch`` meta), linearly weighted by the
+    request's recorded token count;
+  * the recorded ``submit_tick`` is the arrival clock; one driver tick is
+    ``tick_cycles`` accelerator cycles, calibrated (by default) so the
+    template chain's isolated service time spreads over the recorded mean
+    per-request service ticks — replayed traffic intensity then matches
+    the recorded one. Pass an explicit ``tick_cycles`` when comparing
+    candidate systems (``repro.dse`` calibrates once on the ER reference
+    and holds it fixed across candidates).
+
+The result carries goodput/latency/energy *under production traffic*
+plus the full per-unit utilization and contention breakdown, and the
+invariant that no recorded request is dropped (``dropped == 0``) is a CI
+gate (``syssim_micro``).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Union
+
+from repro.obs.trace import ServeRequest, Trace, load_trace
+
+from .engine import ChainJob, simulate_system
+from .route import RoutedChain, route_chain
+from .stats import SystemReport
+from .system import SystemSpec, hetero, single_array
+
+DEFAULT_ARCH = "tinyllama-1.1b"
+
+
+def default_chain(trace: Trace, reduced: bool = False):
+    """The served model's transformer block chain (the workload each
+    recorded request replays), from the trace's ``arch`` meta."""
+    from repro import configs
+    from repro.models.lm_chain import block_chain
+
+    arch = trace.meta.get("arch") or DEFAULT_ARCH
+    try:
+        cfg = configs.get(arch)
+    except (KeyError, ValueError):
+        cfg = configs.get(DEFAULT_ARCH)
+    seq = 16 if reduced else 128
+    return block_chain(cfg, batch=1, seq=seq)
+
+
+def calibrate_tick_cycles(requests: Sequence[ServeRequest],
+                          routed: RoutedChain) -> float:
+    """Cycles per driver tick such that the mean-weight request's
+    isolated service time spans the recorded mean service ticks."""
+    ticks = [r.service_ticks for r in requests
+             if r.service_ticks is not None]
+    mean_ticks = (sum(ticks) / len(ticks)) if ticks else 1.0
+    return max(routed.work / max(mean_ticks, 1.0), 1e-9)
+
+
+@dataclass
+class ReplayResult:
+    report: SystemReport
+    requests_recorded: int
+    tick_cycles: float
+    trace_meta: dict
+
+    @property
+    def requests_simulated(self) -> int:
+        return len(self.report.jobs)
+
+    @property
+    def dropped(self) -> int:
+        return self.requests_recorded - self.requests_simulated
+
+    def summary(self) -> dict:
+        out = self.report.summary()
+        out.update(requests_recorded=self.requests_recorded,
+                   requests_simulated=self.requests_simulated,
+                   dropped=self.dropped,
+                   tick_cycles=round(self.tick_cycles, 3),
+                   trace_meta=self.trace_meta)
+        return out
+
+
+def replay_trace(trace: Union[str, Trace], system: SystemSpec,
+                 chain=None, tick_cycles: Optional[float] = None,
+                 reduced: bool = False, use_vector: bool = True,
+                 energy_overhead: float = 0.19) -> ReplayResult:
+    """Simulate the recorded request schedule on ``system``."""
+    if isinstance(trace, str):
+        trace = load_trace(trace)
+    requests = trace.serve_requests()
+    if not requests:
+        raise ValueError("trace records no finished requests "
+                         "(no 'request' lifecycle spans)")
+    if chain is None:
+        chain = default_chain(trace, reduced=reduced)
+    routed = route_chain(chain, system, energy_overhead=energy_overhead,
+                         use_vector=use_vector)
+    if tick_cycles is None:
+        tick_cycles = calibrate_tick_cycles(requests, routed)
+
+    tokens = [r.tokens for r in requests]
+    base_tokens = max(sum(tokens) / len(tokens), 1.0)
+    submit0 = min((r.submit_tick for r in requests
+                   if r.submit_tick is not None), default=0)
+    jobs: List[ChainJob] = []
+    for r in requests:
+        weight = max(r.tokens, 1.0) / base_tokens
+        arrival = ((r.submit_tick - submit0) * tick_cycles
+                   if r.submit_tick is not None else 0.0)
+        jobs.append(ChainJob(routed=routed.scaled(weight),
+                             arrival=arrival, tokens=max(r.tokens, 1.0),
+                             name=f"rid{r.rid}" if r.rid is not None
+                             else routed.name,
+                             rid=r.rid))
+    report = simulate_system(jobs, system)
+    return ReplayResult(report=report, requests_recorded=len(requests),
+                        tick_cycles=tick_cycles,
+                        trace_meta=dict(trace.meta))
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.syssim.replay",
+        description="Replay a recorded serve trace on a candidate "
+                    "accelerator system.")
+    ap.add_argument("trace", help="path written by launch/serve.py --trace")
+    ap.add_argument("--accel", default="ER",
+                    help="Table-4 accelerator spec for the GCONV array")
+    ap.add_argument("--no-vector", action="store_true",
+                    help="route everything to the GCONV array "
+                         "(homogeneous baseline)")
+    ap.add_argument("--lanes", type=int, default=64,
+                    help="SIMD lanes of the vector unit")
+    ap.add_argument("--bandwidth", type=float, default=16.0,
+                    help="vector unit link words/cycle")
+    ap.add_argument("--interconnect-bw", type=float, default=None,
+                    help="shared interconnect words/cycle "
+                         "(default: aggregate link width)")
+    ap.add_argument("--tick-cycles", type=float, default=None,
+                    help="cycles per recorded driver tick "
+                         "(default: calibrated from the trace)")
+    ap.add_argument("--reduced", action="store_true",
+                    help="test-scale replay chain (CI smoke)")
+    args = ap.parse_args(argv)
+    system = (single_array(args.accel, interconnect_bw=args.interconnect_bw)
+              if args.no_vector else
+              hetero(args.accel, lanes=args.lanes,
+                     bandwidth=args.bandwidth,
+                     interconnect_bw=args.interconnect_bw))
+    try:
+        res = replay_trace(args.trace, system, reduced=args.reduced,
+                           tick_cycles=args.tick_cycles,
+                           use_vector=not args.no_vector)
+    except (OSError, ValueError) as e:
+        print(f"replay: {e}", file=sys.stderr)
+        return 1
+    print(json.dumps(res.summary(), indent=1, default=float))
+    return 0 if res.dropped == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,205 @@
+"""Fusion-group router: chain nodes -> unit-tagged task lists.
+
+Routing is driven by the *execution plan's* backend metadata
+(``repro.exec.dispatch.plan_chain``), not re-derived structure: the §4.3
+fusion pass collapses streaming members into their host node, then the
+plan classifies each surviving node (``matmul:*``, ``conv:*``,
+``elementwise``, ``reduce``, ``segment:norm:*``, ...). Movement-dominated
+tags go to a SIMD :class:`~repro.syssim.system.VectorUnit` when the
+system has one; everything compute-shaped stays on the GCONV array.
+Segment members tagged ``fused:<out>`` follow their segment's output so a
+fused softmax/norm/attention group never straddles two units.
+
+Task costs:
+  * array tasks are the ``repro.sim`` per-node stats verbatim (shared
+    ``chain_mappings`` result, same handoff-credit rule) — the degenerate
+    1-unit system is *by construction* the cycle-level simulator;
+  * vector tasks charge ``ceil(macs / lanes)`` compute cycles against a
+    streaming ``words / bandwidth`` transfer, whichever dominates, with
+    the same word counts and energy units as the analytic model.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from repro.core.chain import Chain, Concat, Movement
+from repro.core.costmodel import (E_GB, _k_elems, chain_mappings,
+                                  gconv_energy, kernel_movement_scale)
+from repro.core.fusion import fuse_chain
+from repro.core.gconv import GConv
+from repro.sim.engine import handoff_credit, simulate_chain
+from repro.sim.stats import ChainSimStats
+
+from .system import SystemSpec, Unit, VectorUnit
+
+# Backend-tag prefixes that a vector/SIMD unit can service: the
+# movement-dominated groups whose arithmetic runs at streaming rate.
+VECTOR_ROUTABLE = ("elementwise", "reduce", "concat", "movement",
+                   "segment:norm", "segment:softmax")
+
+
+@dataclass
+class Task:
+    """One routed fusion group on one unit."""
+
+    chain: str
+    name: str
+    unit: str
+    backend: str
+    work: float                  # isolated service cycles on its unit
+    compute: float               # arithmetic-busy cycles (<= work)
+    bus_words: float             # interconnect words (demand = words/work)
+    movement: Dict[str, float]
+    energy: float
+    # producer-drain/consumer-fill overlap vs the chain predecessor,
+    # honored only when both run back-to-back on the same unit
+    handoff_credit: float = 0.0
+    pred: Optional[str] = None
+
+
+@dataclass
+class RoutedChain:
+    """A chain lowered to per-unit tasks (one job template)."""
+
+    name: str
+    tasks: List[Task]
+    dispatch: Dict[str, str]
+    sim: ChainSimStats           # the 1-array reference costing
+
+    @property
+    def work(self) -> float:
+        return sum(t.work for t in self.tasks)
+
+    @property
+    def energy(self) -> float:
+        return sum(t.energy for t in self.tasks)
+
+    @property
+    def movement_words(self) -> float:
+        return sum(t.bus_words for t in self.tasks)
+
+    def scaled(self, w: float) -> "RoutedChain":
+        """Linearly scale every task (trace replay weights a request by
+        its token count relative to the template chain)."""
+        if w == 1.0:
+            return self
+        tasks = [Task(chain=t.chain, name=t.name, unit=t.unit,
+                      backend=t.backend, work=t.work * w,
+                      compute=t.compute * w, bus_words=t.bus_words * w,
+                      movement={k: v * w for k, v in t.movement.items()},
+                      energy=t.energy * w,
+                      handoff_credit=t.handoff_credit * w, pred=t.pred)
+                 for t in self.tasks]
+        return RoutedChain(name=self.name, tasks=tasks,
+                           dispatch=self.dispatch, sim=self.sim)
+
+
+def _plan_tags(fused: Chain) -> Dict[str, str]:
+    """Backend tag per surviving node from the execution plan; falls back
+    to a structural classification when the chain carries no executable
+    inputs (plan building needs shapes)."""
+    try:
+        from repro.exec.dispatch import plan_chain
+
+        return dict(plan_chain(fused).dispatch)
+    except Exception:                                     # noqa: BLE001
+        tags: Dict[str, str] = {}
+        for name, node in fused.nodes.items():
+            if isinstance(node, Concat):
+                tags[name] = "concat"
+            elif isinstance(node, Movement):
+                tags[name] = "movement"
+            elif isinstance(node, GConv) and node.main == "none" \
+                    and node.reduce == "none":
+                tags[name] = "elementwise"
+            else:
+                tags[name] = "oracle"
+        return tags
+
+
+def _vector_routable(tag: str) -> bool:
+    return tag.startswith(VECTOR_ROUTABLE)
+
+
+def _vector_cost(node, chain: Chain, vu: VectorUnit):
+    """(work, compute, movement, energy) of one group on the SIMD unit."""
+    if isinstance(node, (Concat, Movement)):
+        elems = float(node.out_elems)
+        movement = {"I": elems, "O": elems}
+        compute = 0.0
+        energy = 2.0 * elems * E_GB * (1.0 + vu.energy_overhead)
+    else:
+        kwords = node.k_elems * kernel_movement_scale(
+            node, _k_elems(chain, node))
+        movement = {"I": float(node.in_elems), "O": float(node.out_elems)}
+        if kwords > 0:
+            movement["K"] = float(kwords)
+        compute = float(math.ceil(node.macs / max(1, vu.lanes)))
+        energy = gconv_energy(node, movement, vu.energy_overhead)
+    words = sum(movement.values())
+    work = max(compute, words / vu.link_bw)
+    return work, compute, movement, energy
+
+
+def route_chain(chain: Chain, system: SystemSpec,
+                energy_overhead: float = 0.19,
+                use_vector: bool = True) -> RoutedChain:
+    """Fuse, cost, and route one chain onto ``system``'s units.
+
+    ``use_vector=False`` forces every group onto the GCONV array (the
+    homogeneous baseline the heterogeneous-utilization claim is measured
+    against)."""
+    array = system.arrays[0]
+    fused, _report = fuse_chain(chain)
+    pre = chain_mappings(fused, array.spec)
+    sim = simulate_chain(fused, array.spec, fuse=False,
+                         energy_overhead=energy_overhead, precomputed=pre)
+    node_stats = {ns.name: ns for ns in sim.nodes}
+    tags = _plan_tags(fused)
+    # segment members follow their segment's output tag
+    for name, tag in list(tags.items()):
+        if tag.startswith("fused:"):
+            tags[name] = tags.get(tag[len("fused:"):], tag)
+
+    # least-loaded assignment within a unit class keeps multi-array /
+    # multi-vector systems deterministic (ties break on unit order)
+    load = {u.name: 0.0 for u in system.units}
+
+    def pick(units) -> Unit:
+        return min(units, key=lambda u: (load[u.name],
+                                         system.units.index(u)))
+
+    tasks: List[Task] = []
+    prev_name: Optional[str] = None
+    prev_unit: Optional[str] = None
+    prev_stats = None
+    for name, node in fused.nodes.items():
+        tag = tags.get(name, "oracle")
+        ns = node_stats[name]
+        vectors = system.vectors if use_vector else ()
+        if vectors and _vector_routable(tag):
+            vu = pick(vectors)
+            work, compute, movement, energy = _vector_cost(node, fused, vu)
+            task = Task(chain=chain.name, name=name, unit=vu.name,
+                        backend=tag, work=work, compute=compute,
+                        bus_words=sum(movement.values()),
+                        movement=movement, energy=energy, pred=prev_name)
+        else:
+            au = pick(system.arrays)
+            credit = 0.0
+            if prev_unit == au.name:
+                credit = handoff_credit(prev_name, prev_stats, node, ns)
+            task = Task(chain=chain.name, name=name, unit=au.name,
+                        backend=tag, work=float(ns.total_cycles),
+                        compute=float(ns.compute_cycles),
+                        bus_words=float(sum(ns.movement.values())),
+                        movement={k: float(v)
+                                  for k, v in ns.movement.items()},
+                        energy=float(ns.energy),
+                        handoff_credit=credit, pred=prev_name)
+        load[task.unit] += task.work
+        tasks.append(task)
+        prev_name, prev_unit, prev_stats = name, task.unit, ns
+    return RoutedChain(name=chain.name, tasks=tasks, dispatch=tags, sim=sim)

@@ -1,0 +1,198 @@
+"""Result dataclasses for the system-level simulator.
+
+Cycle counts are accelerator cycles and energy the same relative units as
+``repro.core.costmodel`` / ``repro.sim``, so a syssim number is directly
+comparable to both evaluation engines. Like ``repro.sim.stats``, the
+report emits through the unified :mod:`repro.obs.metrics` registry
+(``syssim_*`` families) and ``summary()`` is derived from that registry,
+so the flat dicts and the versioned metrics schema cannot drift.
+
+Stall attribution per unit splits into two causes:
+  * ``queue`` — cycles a ready task waited for its unit (occupancy);
+  * ``interconnect`` — cycles lost to bandwidth arbitration (the task was
+    running but progressed below its isolated rate).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from repro.obs.metrics import Metrics, percentile
+
+from .interconnect import Interconnect
+
+
+@dataclass
+class UnitStats:
+    name: str
+    kind: str                          # "array" | "vector"
+    tasks: int = 0
+    busy_cycles: float = 0.0           # task-occupied cycles
+    compute_cycles: float = 0.0        # arithmetic-busy cycles
+    queue_cycles: float = 0.0          # ready tasks waiting for the unit
+    contention_stall_cycles: float = 0.0   # arbitration-induced slip
+    injected_words: float = 0.0        # fluid accounting (Interconnect)
+    offered_words: float = 0.0         # exact task traffic
+    energy: float = 0.0
+
+    def utilization(self, makespan: float) -> float:
+        return self.busy_cycles / makespan if makespan > 0 else 0.0
+
+
+@dataclass
+class JobStats:
+    name: str
+    arrival: float
+    finish: float
+    tokens: float = 1.0
+    energy: float = 0.0
+    rid: Optional[int] = None
+
+    @property
+    def latency(self) -> float:
+        return self.finish - self.arrival
+
+
+@dataclass
+class SystemReport:
+    system: str
+    units: List[UnitStats]
+    jobs: List[JobStats]
+    interconnect: Interconnect
+    makespan: float = 0.0
+    handoff_overlap_cycles: float = 0.0
+
+    # ------------------------------------------------------------------
+    @property
+    def total_cycles(self) -> float:
+        return self.makespan
+
+    @property
+    def energy(self) -> float:
+        return sum(u.energy for u in self.units)
+
+    @property
+    def movement_words(self) -> float:
+        return sum(u.offered_words for u in self.units)
+
+    @property
+    def aggregate_utilization(self) -> float:
+        """Busy unit-cycles per wall cycle — the average number of busy
+        units (> 1 means the heterogeneous units genuinely overlap)."""
+        if self.makespan <= 0:
+            return 0.0
+        return sum(u.busy_cycles for u in self.units) / self.makespan
+
+    @property
+    def contention_stall_cycles(self) -> float:
+        return sum(u.contention_stall_cycles for u in self.units)
+
+    @property
+    def contention_stall_share(self) -> float:
+        """Arbitration-lost cycles per busy unit-cycle."""
+        busy = sum(u.busy_cycles for u in self.units)
+        return self.contention_stall_cycles / busy if busy > 0 else 0.0
+
+    @property
+    def word_conservation_err(self) -> float:
+        """Relative gap between fluid-injected and offered words (the
+        conservation invariant; ~1e-9 float noise in practice)."""
+        offered = self.movement_words
+        injected = self.interconnect.forwarded_words
+        return abs(injected - offered) / max(offered, 1e-12)
+
+    @property
+    def tokens(self) -> float:
+        return sum(j.tokens for j in self.jobs)
+
+    @property
+    def goodput(self) -> float:
+        """Tokens per kilocycle over the whole run."""
+        if self.makespan <= 0:
+            return 0.0
+        return self.tokens / self.makespan * 1e3
+
+    def latency_percentile(self, q: float) -> float:
+        return percentile([j.latency for j in self.jobs], q)
+
+    # ------------------------------------------------------------------
+    def to_metrics(self, reg: Optional[Metrics] = None,
+                   **labels) -> Metrics:
+        reg = Metrics() if reg is None else reg
+        lbl = dict(system=self.system, **labels)
+        reg.counter("syssim_cycles", phase="makespan", **lbl).inc(
+            self.makespan)
+        reg.counter("syssim_cycles", phase="handoff_overlap", **lbl).inc(
+            self.handoff_overlap_cycles)
+        for u in self.units:
+            ul = dict(unit=u.name, kind=u.kind, **lbl)
+            reg.counter("syssim_tasks", **ul).inc(u.tasks)
+            reg.counter("syssim_unit_cycles", phase="busy", **ul).inc(
+                u.busy_cycles)
+            reg.counter("syssim_unit_cycles", phase="compute", **ul).inc(
+                u.compute_cycles)
+            reg.counter("syssim_stall_cycles", cause="queue", **ul).inc(
+                u.queue_cycles)
+            reg.counter("syssim_stall_cycles", cause="interconnect",
+                        **ul).inc(u.contention_stall_cycles)
+            reg.counter("syssim_words", dir="injected", **ul).inc(
+                u.injected_words)
+            reg.counter("syssim_words", dir="offered", **ul).inc(
+                u.offered_words)
+            reg.counter("syssim_energy", **ul).inc(u.energy)
+            reg.gauge("syssim_utilization", **ul).set(
+                round(u.utilization(self.makespan), 6))
+        reg.counter("syssim_forwarded_words", **lbl).inc(
+            self.interconnect.forwarded_words)
+        reg.counter("syssim_requests", **lbl).inc(len(self.jobs))
+        reg.counter("syssim_tokens", **lbl).inc(self.tokens)
+        reg.gauge("syssim_aggregate_utilization", **lbl).set(
+            round(self.aggregate_utilization, 6))
+        reg.gauge("syssim_contention_stall_share", **lbl).set(
+            round(self.contention_stall_share, 6))
+        return reg
+
+    def summary(self) -> dict:
+        reg = self.to_metrics()
+        lbl = dict(system=self.system)
+        units = {}
+        for u in self.units:
+            ul = dict(unit=u.name, kind=u.kind, **lbl)
+            units[u.name] = dict(
+                kind=u.kind,
+                tasks=int(reg.value("syssim_tasks", **ul)),
+                busy_cycles=reg.value("syssim_unit_cycles", phase="busy",
+                                      **ul),
+                compute_cycles=reg.value("syssim_unit_cycles",
+                                         phase="compute", **ul),
+                queue_stall_cycles=reg.value("syssim_stall_cycles",
+                                             cause="queue", **ul),
+                contention_stall_cycles=reg.value(
+                    "syssim_stall_cycles", cause="interconnect", **ul),
+                injected_words=reg.value("syssim_words", dir="injected",
+                                         **ul),
+                offered_words=reg.value("syssim_words", dir="offered",
+                                        **ul),
+                energy=reg.value("syssim_energy", **ul),
+                utilization=reg.value("syssim_utilization", **ul))
+        return dict(
+            system=self.system,
+            makespan_cycles=reg.value("syssim_cycles", phase="makespan",
+                                      **lbl),
+            handoff_overlap_cycles=reg.value(
+                "syssim_cycles", phase="handoff_overlap", **lbl),
+            requests=int(reg.value("syssim_requests", **lbl)),
+            tokens=reg.value("syssim_tokens", **lbl),
+            goodput_tokens_per_kcycle=round(self.goodput, 6),
+            p50_latency_cycles=self.latency_percentile(50),
+            p99_latency_cycles=self.latency_percentile(99),
+            energy=self.energy,
+            movement_words=self.movement_words,
+            forwarded_words=reg.value("syssim_forwarded_words", **lbl),
+            word_conservation_err=self.word_conservation_err,
+            aggregate_utilization=reg.value(
+                "syssim_aggregate_utilization", **lbl),
+            contention_stall_share=reg.value(
+                "syssim_contention_stall_share", **lbl),
+            interconnect=self.interconnect.summary(),
+            units=units)

@@ -1,0 +1,133 @@
+"""System descriptions for the multi-unit simulator.
+
+A :class:`SystemSpec` is a set of heterogeneous compute units sharing one
+interconnect to the global buffer / DRAM:
+
+  * :class:`ArrayUnit` — the paper's GCONV tile array, described by an
+    :class:`repro.core.accelerators.AcceleratorSpec`.  Per-task costs are
+    *delegated* to the cycle-level node simulator (``repro.sim``), so a
+    single-array system with an uncontended interconnect reproduces
+    ``repro.sim.simulate_chain`` exactly (the degenerate-case contract
+    checked by :mod:`repro.syssim.validate`).
+  * :class:`VectorUnit` — an MPNA-style SIMD lane array for the
+    movement-dominated fusion groups (elementwise, reductions,
+    normalization/softmax segments, concat/movement traffic) with its own
+    throughput/bandwidth cost model (:mod:`repro.syssim.route`).
+
+The interconnect capacity defaults to the sum of every unit's link
+bandwidth: a unit alone can never contend against itself (its average
+injection rate is bounded by its own link), and contention only appears
+when several units are simultaneously active or the capacity is set
+below the aggregate link width.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Tuple, Union
+
+from repro.core import accelerators as acc
+from repro.core.accelerators import AcceleratorSpec
+
+
+@dataclass(frozen=True)
+class ArrayUnit:
+    """GCONV tile array; costs come from ``repro.sim.simulate_node``."""
+
+    spec: AcceleratorSpec
+    name: str = "array0"
+    kind: str = field(default="array", init=False)
+
+    @property
+    def link_bw(self) -> float:
+        """Words/cycle of the unit's interconnect link (its GB ports)."""
+        return float(sum(self.spec.gb_bandwidth.values()))
+
+
+@dataclass(frozen=True)
+class VectorUnit:
+    """SIMD vector unit: ``lanes`` MAC/ALU ops per cycle, one shared
+    ``bandwidth``-words/cycle streaming port to the interconnect."""
+
+    name: str = "vec0"
+    lanes: int = 64
+    bandwidth: float = 16.0
+    energy_overhead: float = 0.0
+    kind: str = field(default="vector", init=False)
+
+    @property
+    def link_bw(self) -> float:
+        return float(self.bandwidth)
+
+
+Unit = Union[ArrayUnit, VectorUnit]
+
+
+@dataclass(frozen=True)
+class SystemSpec:
+    """Units + shared interconnect. ``interconnect_bw`` of ``None`` means
+    the full aggregate link width (contention-free unless oversubscribed
+    by construction)."""
+
+    name: str
+    units: Tuple[Unit, ...]
+    interconnect_bw: float | None = None
+
+    def __post_init__(self):
+        if not self.units:
+            raise ValueError("SystemSpec needs at least one unit")
+        names = [u.name for u in self.units]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate unit names: {names}")
+        if not self.arrays:
+            raise ValueError("SystemSpec needs at least one ArrayUnit "
+                             "(the GCONV array hosts un-routable groups)")
+        if self.capacity <= 0:
+            raise ValueError("interconnect capacity must be positive")
+
+    @property
+    def arrays(self) -> Tuple[ArrayUnit, ...]:
+        return tuple(u for u in self.units if u.kind == "array")
+
+    @property
+    def vectors(self) -> Tuple[VectorUnit, ...]:
+        return tuple(u for u in self.units if u.kind == "vector")
+
+    @property
+    def capacity(self) -> float:
+        if self.interconnect_bw is not None:
+            return float(self.interconnect_bw)
+        return sum(u.link_bw for u in self.units)
+
+    def unit(self, name: str) -> Unit:
+        for u in self.units:
+            if u.name == name:
+                return u
+        raise KeyError(name)
+
+
+def _spec(spec_or_name: Union[str, AcceleratorSpec]) -> AcceleratorSpec:
+    if isinstance(spec_or_name, str):
+        return acc.get(spec_or_name)
+    return spec_or_name
+
+
+def single_array(spec_or_name: Union[str, AcceleratorSpec],
+                 interconnect_bw: float | None = None) -> SystemSpec:
+    """The degenerate 1-unit system: one GCONV array, uncontended
+    interconnect — must reproduce ``repro.sim`` exactly."""
+    spec = _spec(spec_or_name)
+    return SystemSpec(name=f"{spec.name}-sys1",
+                      units=(ArrayUnit(spec=spec),),
+                      interconnect_bw=interconnect_bw)
+
+
+def hetero(spec_or_name: Union[str, AcceleratorSpec],
+           lanes: int = 64, bandwidth: float = 16.0,
+           interconnect_bw: float | None = None) -> SystemSpec:
+    """GCONV array + one SIMD vector unit (the MPNA deployment shape)."""
+    spec = _spec(spec_or_name)
+    return SystemSpec(
+        name=f"{spec.name}-sys2",
+        units=(ArrayUnit(spec=spec),
+               VectorUnit(lanes=lanes, bandwidth=bandwidth)),
+        interconnect_bw=interconnect_bw)

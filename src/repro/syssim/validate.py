@@ -1,0 +1,122 @@
+"""Degenerate-case contract: 1 unit + no contention == ``repro.sim``.
+
+The system simulator's costing authority is the cycle-level simulator —
+an uncontended single-array system must reproduce
+``repro.sim.simulate_chain`` *exactly* (movement and energy to
+``DRIFT_TOL``, cycles bit-for-bit; the analytic model stays within
+``CYCLES_RATIO_TOL`` as everywhere else). This module sweeps the zoo x
+accelerator grid with the same tolerances as ``repro.sim.validate`` and
+is reused by tests/test_syssim.py and the ``syssim_micro`` CI gate.
+
+It also carries the heterogeneous-utilization check: a 2-unit
+(array + SIMD) system serving concurrent requests must overlap units —
+strictly higher aggregate utilization than routing every group to the
+GCONV array alone.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+from repro.core import accelerators as acc
+from repro.core.costmodel import gconv_chain_cost
+from repro.sim.validate import (CYCLES_RATIO_TOL, DEFAULT_ACCELS, DRIFT_TOL,
+                                agreement)
+
+from .engine import ChainJob, simulate_system
+from .route import route_chain
+from .system import hetero, single_array
+
+
+def _build(net: str, reduced: bool):
+    from repro.models import cnn
+
+    return cnn.build(net, reduced=reduced)
+
+
+def degenerate_pair(chain, spec) -> dict:
+    """Compare the 1-unit uncontended system against ``repro.sim`` (and
+    the analytic model) on one (chain, spec) pair."""
+    system = single_array(spec)
+    routed = route_chain(chain, system)
+    report = simulate_system([ChainJob(routed=routed)], system)
+    sim = routed.sim                       # the repro.sim reference costing
+    analytic = gconv_chain_cost(chain, spec)
+    agree = agreement(report.makespan, analytic)
+    cycles_drift = abs(report.makespan
+                       / max(sim.total_cycles, 1e-12) - 1)
+    movement_drift = abs(report.movement_words
+                         / max(sim.movement_words, 1e-12) - 1)
+    energy_drift = abs(report.energy / max(sim.energy, 1e-12) - 1)
+    return dict(
+        net=chain.name, accel=spec.name,
+        syssim_cycles=report.makespan, sim_cycles=sim.total_cycles,
+        cycles_drift=cycles_drift,
+        movement_drift=movement_drift, energy_drift=energy_drift,
+        contention_stall_cycles=report.contention_stall_cycles,
+        word_conservation_err=report.word_conservation_err,
+        cycles_ratio=agree["cycles_ratio"],
+        within_tolerance=bool(agree["within_tolerance"]),
+        exact=bool(cycles_drift <= DRIFT_TOL
+                   and movement_drift <= DRIFT_TOL
+                   and energy_drift <= DRIFT_TOL
+                   and report.contention_stall_cycles == 0.0
+                   and report.word_conservation_err <= 1e-6),
+    )
+
+
+def validate_degenerate(nets: Optional[Sequence[str]] = None,
+                        accels: Sequence[str] = DEFAULT_ACCELS,
+                        reduced: bool = False) -> Tuple[list, dict]:
+    """Sweep the degenerate contract over ``nets x accels``."""
+    from repro.models import cnn
+
+    nets = tuple(nets) if nets is not None else tuple(cnn.ZOO)
+    rows = []
+    for net in nets:
+        chain = _build(net, reduced)
+        for name in accels:
+            rows.append(degenerate_pair(chain, acc.get(name)))
+    summary = dict(
+        pairs=len(rows),
+        all_exact=bool(all(r["exact"] for r in rows)),
+        all_within_tolerance=bool(all(r["within_tolerance"]
+                                      for r in rows)),
+        max_cycles_drift=max(r["cycles_drift"] for r in rows),
+        max_movement_drift=max(r["movement_drift"] for r in rows),
+        max_energy_drift=max(r["energy_drift"] for r in rows),
+        max_cycles_ratio=max(r["cycles_ratio"] for r in rows),
+        cycles_ratio_tol=CYCLES_RATIO_TOL, drift_tol=DRIFT_TOL,
+    )
+    return rows, summary
+
+
+def hetero_utilization_gain(net: str, accel: str = "ER",
+                            n_jobs: int = 2, reduced: bool = False,
+                            lanes: int = 64,
+                            bandwidth: float = 16.0) -> dict:
+    """Aggregate utilization of the 2-unit heterogeneous system vs the
+    same concurrent workload with every group routed to the array."""
+    chain = _build(net, reduced)
+    spec = acc.get(accel)
+    system = hetero(spec, lanes=lanes, bandwidth=bandwidth)
+
+    def run(use_vector: bool):
+        routed = route_chain(chain, system, use_vector=use_vector)
+        jobs = [ChainJob(routed=routed, arrival=0.0, name=f"{net}#{i}")
+                for i in range(n_jobs)]
+        return simulate_system(jobs, system), routed
+
+    het, routed_het = run(True)
+    homo, _ = run(False)
+    vector_tasks = sum(1 for t in routed_het.tasks
+                       if system.unit(t.unit).kind == "vector")
+    return dict(
+        net=net, accel=accel, n_jobs=n_jobs,
+        vector_tasks=vector_tasks,
+        hetero_utilization=het.aggregate_utilization,
+        array_only_utilization=homo.aggregate_utilization,
+        hetero_makespan=het.makespan, array_only_makespan=homo.makespan,
+        gain=het.aggregate_utilization - homo.aggregate_utilization,
+        strictly_higher=bool(het.aggregate_utilization
+                             > homo.aggregate_utilization),
+    )

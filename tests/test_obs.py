@@ -278,6 +278,104 @@ def test_report_cli_exit_codes(tmp_path):
     assert main([str(tmp_path / "missing.json")]) == 1
 
 
+def test_report_cli_text_format(tmp_path, capsys):
+    from repro.obs.report import main
+    tr = _synthetic_serve_trace()
+    path = tmp_path / "t.json"
+    tr.write(str(path))
+    assert main([str(path), "--format", "json"]) == 0
+    out = json.loads(capsys.readouterr().out)     # default stays machine-readable
+    assert out["requests"] == 3
+    assert main([str(path), "--format", "text"]) == 0
+    text = capsys.readouterr().out
+    assert "requests" in text and "p50" in text
+    with pytest.raises(SystemExit):
+        main([str(path), "--format", "yaml"])
+
+
+# ---------------------------------------------------------------------------
+# serve-schema iterators (shared by report + syssim replay)
+# ---------------------------------------------------------------------------
+def _ticked_serve_trace():
+    """Synthetic trace carrying the full tick-stamped lifecycle schema."""
+    tr = Tracer()
+    tr.meta.update(kind="serve", slots=2)
+    base = time.perf_counter()
+    lifecycle = [  # rid, submit, admit, done, prompt, out
+        (1, 0, 0, 4, 8, 4),
+        (0, 0, 1, 3, 6, 2),
+        (2, 2, 2, 2, 4, 3),   # done == admit -> service_ticks floors at 1
+    ]
+    for rid, sub, adm, done, plen, out in lifecycle:
+        t0 = base + rid
+        pid = tr.add_span("request", "request", t0, t0 + 1.0,
+                          attrs={"rid": rid, "prompt_len": plen,
+                                 "out_len": out, "max_new": 8,
+                                 "submit_tick": sub, "admit_tick": adm,
+                                 "done_tick": done, "ttft_s": 0.1,
+                                 "latency_s": 1.0, "queue_wait_s": 0.05})
+        tr.add_span("queue", "request", t0, t0 + 0.25, parent=pid)
+        tr.add_span("decode", "request", t0 + 0.25, t0 + 1.0, parent=pid)
+    for i, (active, queued) in enumerate([(1, 2), (2, 1), (2, 0), (1, 0)]):
+        tr.counter("slots", {"active": active, "queued": queued, "tick": i})
+    return trace_mod.Trace(dict(tr.meta), list(tr.events),
+                           trace_mod.SCHEMA_VERSION)
+
+
+def test_serve_requests_iterator_schema_and_order():
+    reqs = _ticked_serve_trace().serve_requests()
+    assert [r.rid for r in reqs] == [0, 1, 2]   # (submit_tick, rid) order
+    r0 = reqs[0]
+    assert r0.submit_tick == 0 and r0.admit_tick == 1 and r0.done_tick == 3
+    assert r0.tokens == 6 + 2                   # prompt + recorded out_len
+    assert r0.service_ticks == 2
+    assert r0.phases["queue"] == pytest.approx(0.25, rel=1e-6)
+    assert r0.phases["decode"] == pytest.approx(0.75, rel=1e-6)
+    assert reqs[2].service_ticks == 1           # floored, never zero
+    # out_len falls back to the max_new budget when not recorded
+    partial = trace_mod.ServeRequest(
+        rid=9, prompt_len=4, max_new=8, out_len=None, submit_tick=None,
+        admit_tick=None, done_tick=None, queue_wait_s=None, ttft_s=None,
+        latency_s=None)
+    assert partial.tokens == 12 and partial.service_ticks is None
+
+
+def test_serve_ticks_iterator():
+    ticks = _ticked_serve_trace().serve_ticks()
+    assert [t.index for t in ticks] == [0, 1, 2, 3]
+    assert [t.active for t in ticks] == [1, 2, 2, 1]
+    assert [t.queued for t in ticks] == [2, 1, 0, 0]
+    # pre-tick-stamp traces fall back to sample order
+    legacy = _synthetic_serve_trace()
+    lt = trace_mod.Trace(dict(legacy.meta), list(legacy.events),
+                         trace_mod.SCHEMA_VERSION).serve_ticks()
+    assert [t.index for t in lt] == [0, 1, 2, 3]
+    assert [t.active for t in lt] == [1, 2, 1, 0]
+
+
+def test_recorded_server_trace_round_trips_iterators(tmp_path):
+    """A real Server run carries the tick-stamped schema end to end."""
+    from benchmarks.serve_bench import _workload
+    from repro.launch.serve import Server
+
+    tr = Tracer()
+    srv = Server("tinyllama-1.1b", smoke=True, slots=2, max_len=64,
+                 tracer=tr)
+    srv.run_workload(_workload(3, srv.cfg.vocab, max_new=3),
+                     stagger_ticks=1)
+    path = tmp_path / "serve.json"
+    tr.write(str(path))
+    trace = load_trace(str(path))
+    reqs = trace.serve_requests()
+    assert len(reqs) == 3
+    for r in reqs:
+        assert r.submit_tick is not None and r.done_tick is not None
+        assert r.service_ticks >= 1 and r.tokens > 0
+    ticks = trace.serve_ticks()
+    assert ticks and [t.index for t in ticks] == list(range(len(ticks)))
+    assert max(t.active for t in ticks) <= 2
+
+
 # ---------------------------------------------------------------------------
 # profiled compiled engine
 # ---------------------------------------------------------------------------
