@@ -7,13 +7,11 @@ paper's claims. All seven CNNs x five Table-4 accelerators.
 from __future__ import annotations
 
 import os
-import time
 from typing import Dict, List, Tuple
 
 from repro.core import accelerators as acc
-from repro.core.chain import Chain, Concat, Movement
-from repro.core.costmodel import (E_GB, E_OFFLOAD, baseline_cost,
-                                  gconv_chain_cost, lip_utilization, speedup)
+from repro.core.chain import Chain
+from repro.core.costmodel import (baseline_cost, gconv_chain_cost, lip_utilization, speedup)
 from repro.core.fusion import fuse_chain
 from repro.core.gconv import GConv
 from repro.models import cnn

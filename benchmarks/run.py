@@ -27,10 +27,10 @@ import time
 # "obs_micro" (the FAST-tier smokes) likewise only run via --only.
 ALL = ("table1", "fig12", "fig13", "fig14", "fig15", "fusion", "fig18",
        "fig20", "kernels", "roofline", "exec", "exec_sharded", "dse",
-       "serve", "syssim")
+       "serve", "syssim", "lint")
 
 MICRO = ("exec_micro", "dse_micro", "serve_micro", "exec_sharded_micro",
-         "obs_micro", "chaos_micro", "syssim_micro")
+         "obs_micro", "chaos_micro", "syssim_micro", "lint_micro")
 
 
 def _run(name, fn):
@@ -52,7 +52,6 @@ def bench_kernels():
     the derived column is max |err| vs the jnp oracle)."""
     import jax
     import jax.numpy as jnp
-    import numpy as np
 
     from repro.kernels import ref
     from repro.kernels.chain_norm import chain_norm
@@ -159,8 +158,8 @@ def main():
     else:
         want = list(ALL)
 
-    from benchmarks import (chaos_bench, dse_bench, exec_bench, obs_bench,
-                            serve_bench, syssim_bench)
+    from benchmarks import (chaos_bench, dse_bench, exec_bench, lint_bench,
+                            obs_bench, serve_bench, syssim_bench)
     from benchmarks import paper_tables as pt
     from repro.obs import Metrics, provenance
 
@@ -182,6 +181,8 @@ def main():
         "chaos_micro": chaos_bench.chaos_micro,
         "syssim": syssim_bench.syssim_bench,
         "syssim_micro": syssim_bench.syssim_micro,
+        "lint": lint_bench.lint_scan,
+        "lint_micro": lint_bench.lint_micro,
     }
     # harness wall-times go through the unified metrics registry so the
     # committed artifact carries the same schema every other subsystem emits
@@ -265,6 +266,13 @@ def main():
             "diverged from repro.sim (movement/energy/cycles drift or "
             "analytic agreement out of tolerance), or the serve-trace "
             "replay dropped recorded requests")
+    if "lint_micro" in results and not results["lint_micro"][1].get("ok"):
+        raise SystemExit(
+            "lint_micro: the static-verifier CLI failed its exit-code "
+            "contract — the clean reduced sweep must exit 0 with zero "
+            "error findings, and the --mutants run must exit nonzero "
+            "with every seeded mutant caught by its intended rule and "
+            "no false positives on the clean bases")
 
 
 if __name__ == "__main__":

@@ -5,6 +5,11 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "src"))
 # test-local helpers (e.g. the hypothesis degradation shim) import flat
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "tests"))
 
+# every compile_chain() in the test suite runs the repro.lint static
+# passes and fails on error-severity findings (compile_chain reads this
+# when its lint= option is None); export REPRO_LINT=off to opt out
+os.environ.setdefault("REPRO_LINT", "error")
+
 
 def pytest_configure(config):
     config.addinivalue_line(

@@ -74,7 +74,20 @@ if [ "${FAST:-0}" = "1" ]; then
   # reference / the resilience layer costs >5% fault-free (chaos_micro),
   # or when the system simulator's degenerate 1-unit case diverges from
   # repro.sim / the serve-trace replay drops requests (syssim_micro)
+  # ... and the static-analysis smoke: the repro.lint CLI must exit 0
+  # with zero error findings on the clean reduced corpus, and exit
+  # nonzero on the seeded mutation corpus with every mutant caught by
+  # its intended rule (lint_micro)
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m benchmarks.run \
-    --only exec_micro,dse_micro,serve_micro,exec_sharded_micro,obs_micro,chaos_micro,syssim_micro
+    --only exec_micro,dse_micro,serve_micro,exec_sharded_micro,obs_micro,chaos_micro,syssim_micro,lint_micro
+fi
+
+# pyflakes-class static checks (config in pyproject [tool.ruff]); the
+# runtime container does not ship ruff (no-install constraint), so this
+# gate only arms where the dev extras are installed
+if command -v ruff >/dev/null 2>&1; then
+  ruff check .
+else
+  echo "ruff not installed; skipping static check (pip install -e '.[dev]')"
 fi

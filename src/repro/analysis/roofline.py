@@ -24,10 +24,9 @@ decode replicated across the data axis shows up as a low ratio).
 """
 from __future__ import annotations
 
-import json
 import re
-from dataclasses import asdict, dataclass, field
-from typing import Dict, List, Optional, Tuple
+from dataclasses import asdict, dataclass
+from typing import Dict
 
 # TPU v5e per-chip constants (assignment-specified)
 PEAK_FLOPS = 197e12          # bf16

@@ -13,8 +13,8 @@ non-traditional layers to a host CPU (ARM A53 over PCIe 4.0 in §6.2).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Dict, Tuple
 
 
 @dataclass(frozen=True)

@@ -20,11 +20,10 @@ over the batch axis).
 """
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass, field
-from typing import Dict, Iterable, List, Mapping, Optional, Sequence, Tuple, Union
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
-from .gconv import DimSpec, GConv, Op
+from .gconv import GConv
 
 
 @dataclass
@@ -120,10 +119,12 @@ class Chain:
         return name
 
     def fresh(self, base: str) -> str:
-        if base not in self.nodes and base not in self.inputs and base not in self.params:
+        if not self.known(base):
             return base
         i = 1
-        while f"{base}_{i}" in self.nodes:
+        # probe all three namespaces: a candidate colliding with an input
+        # or param would make add() raise "duplicate node name"
+        while self.known(f"{base}_{i}"):
             i += 1
         return f"{base}_{i}"
 

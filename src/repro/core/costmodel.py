@@ -23,7 +23,6 @@ convention); offload costs 146x an on-chip GB access (paper §2.3).
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 

@@ -23,11 +23,10 @@ buffer; the eliminated movement is returned for the Fig.-18-style benchmark.
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Tuple
 
-from .chain import Chain, Concat, Movement
+from .chain import Chain
 from .gconv import GConv, Op
 
 # main operators expressible as a unary op with a tensor operand

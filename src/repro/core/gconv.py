@@ -27,7 +27,7 @@ DESIGN.md §1 (erratum).
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Sequence, Tuple
 
 DEFAULTS = dict(ng=1, nop=1, nopc=1, nks=1, stride=1, pad=0)

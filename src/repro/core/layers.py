@@ -12,7 +12,6 @@ is a "non-traditional" layer that baseline CIPs must offload.
 """
 from __future__ import annotations
 
-import math
 from typing import Optional, Sequence, Tuple
 
 from .chain import Chain, Concat, Movement

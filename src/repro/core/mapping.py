@@ -16,11 +16,11 @@ scratchpads; remaining loops are appended outside the reuse pointers. Per
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from .accelerators import AcceleratorSpec, SpatialDim
-from .gconv import DimSpec, GConv
+from .accelerators import AcceleratorSpec
+from .gconv import GConv
 
 PARAMS = ("ks", "opc", "op", "g")
 # Algorithm 1 iterates dimensions in ["W","H","C","B"] order; we generalize to

@@ -15,7 +15,6 @@ from typing import Callable, Dict, Optional
 import jax
 import jax.numpy as jnp
 
-from .gconv import Op
 
 # ---------------------------------------------------------------------------
 # pre/post unary operators: fn(x, const, operand) -> array

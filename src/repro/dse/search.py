@@ -21,9 +21,9 @@ from __future__ import annotations
 import math
 import random
 from dataclasses import dataclass, field, replace
-from typing import Callable, Dict, List, Optional, Protocol, Sequence, Tuple
+from typing import Callable, Dict, List, Protocol, Sequence, Tuple
 
-from repro.core.costmodel import chain_mappings, gconv_chain_cost
+from repro.core.costmodel import gconv_chain_cost
 from repro.core.gconv import GConv
 from repro.core.mapping import Mapping, map_gconv
 

@@ -27,7 +27,7 @@ exactly as they are on one device (row independence, see exec.lowering).
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, Hashable, List, Tuple
+from typing import Callable, Dict, Hashable, List
 
 import jax
 import jax.numpy as jnp

@@ -39,6 +39,10 @@ class Step:
     name: str
     backend: str
     run: Callable                        # fn(env) -> array
+    # static contract the lowering declares about `run` (e.g. the tensor-
+    # parallel tp_mode/psum/constrained facts from lower_grouped_matmul);
+    # audited by the repro.lint shard passes, never read at execution time
+    meta: Dict[str, object] = field(default_factory=dict)
 
 
 @dataclass

@@ -55,6 +55,11 @@ class CompileOptions:
     jit: bool = True
     profile: bool = False        # per-step timed spans into a repro.obs
                                  # tracer (see CompiledChain docstring)
+    lint: Optional[str] = None   # off|info|warn|error: run the repro.lint
+                                 # passes post-compile and raise LintError
+                                 # at/above that severity. None reads the
+                                 # REPRO_LINT env var (tests default it to
+                                 # "error" in conftest.py; "off" elsewhere)
 
 
 class CompiledChain:
@@ -71,6 +76,7 @@ class CompiledChain:
         self.steps = plan.steps
         self.dispatch: Dict[str, str] = plan.dispatch
         self.options = options
+        self.lint_report = None          # set by compile_chain when linted
         # mesh-aware mode: the ShardPlan plus the step list with the
         # tensor-parallel matmuls re-lowered to their column/row split
         self.shard_plan = shard_plan
@@ -324,7 +330,17 @@ def compile_chain(chain: Chain, mesh=None, tracer=None,
     ``engine.tracer.write(path)`` and summarize with ``python -m
     repro.obs.report``. With the default ``profile=False`` the hot path
     is untouched beyond one flag check per call.
+
+    ``lint="error"``: run the `repro.lint` static passes over the compiled
+    artifacts (chain + plan + shard plan) and raise
+    :class:`~repro.lint.LintError` on findings at/above the given
+    severity; the full report lands on ``engine.lint_report`` either way.
+    ``lint=None`` (default) reads the ``REPRO_LINT`` env var ("off" when
+    unset; conftest.py defaults it to "error" so every test-compiled
+    chain is verified).
     """
+    import os
+
     opts = CompileOptions(**options)
     chain.validate()
     fused, report, parts = partition_chain(chain, fuse=opts.fuse)
@@ -339,5 +355,13 @@ def compile_chain(chain: Chain, mesh=None, tracer=None,
     for host, members in report.groups.items():
         for m in members:
             plan.dispatch.setdefault(m, f"fused:{host}")
-    return CompiledChain(chain, fused, report, parts, plan, opts,
-                         shard_plan, tracer)
+    eng = CompiledChain(chain, fused, report, parts, plan, opts,
+                        shard_plan, tracer)
+    level = opts.lint if opts.lint is not None \
+        else os.environ.get("REPRO_LINT", "off")
+    if level and level != "off":
+        from ..lint import LintError, lint_compiled
+        eng.lint_report = lint_compiled(eng)
+        if eng.lint_report.at_least(level):
+            raise LintError(eng.lint_report, level)
+    return eng

@@ -53,7 +53,7 @@ order but stays within the engine's differential-test tolerance.
 from __future__ import annotations
 
 import string
-from typing import Callable, List, Optional, Sequence, Tuple
+from typing import Callable, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -458,6 +458,16 @@ def lower_grouped_matmul(node: GConv, plan, *,
             return y
         return _finish(node, y, lookup)
 
+    if tp is not None:
+        # declare the tensor-parallel contract of this lowering where the
+        # static verifier can see it: the branch conditions mirror
+        # _tp_matmul exactly (row splits psum partial products; both modes
+        # pin operand replication with with_sharding_constraint). The
+        # repro.lint shard passes audit this against the ShardPlan.
+        _mesh, _ax, _mode, _dp_g, _dp_m = tp
+        fn.tp_meta = {"tp_mode": _mode, "axis": _ax,
+                      "psum": _mode == "row", "constrained": True,
+                      "dp_g": _dp_g, "dp_m": _dp_m}
     return fn
 
 

@@ -33,7 +33,7 @@ prefill is masked (causally, then by ``pos``) so pad rows are inert.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp

@@ -172,5 +172,6 @@ def wrap_steps(chain: Chain, steps, plan: ShardPlan):
         fn = low.lower_grouped_matmul(
             node, mplan, tp=(plan.mesh, plan.tp, mode, dp_g, dp_m))
         out.append(Step(s.name, f"{s.backend}+tp:{mode}",
-                        _gconv_step(node, fn)))
+                        _gconv_step(node, fn),
+                        meta=dict(getattr(fn, "tp_meta", {}))))
     return out

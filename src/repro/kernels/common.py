@@ -5,7 +5,6 @@ import functools
 import os
 
 import jax
-import jax.numpy as jnp
 
 
 @functools.lru_cache(maxsize=1)
@@ -55,3 +54,16 @@ def pick_block(n: int, target: int, align: int = 128) -> int:
     b = min(target, round_up(n, align))
     b = (b // align) * align
     return max(align, b)
+
+
+def block_contract_ok(n: int, b: int, align: int) -> bool:
+    """Audit form of the :func:`pick_block` contract above — ``True`` iff
+    ``1 <= b <= round_up(n, align)`` and, for ``n > align``,
+    ``b % align == 0``. Used by the ``plan.pallas-block-contract`` rule
+    in `repro.lint` so a future block-picking change that overshoots an
+    axis or breaks tile alignment fails at compile time, not in Mosaic."""
+    if not 1 <= b <= round_up(n, align):
+        return False
+    if n > align and b % align != 0:
+        return False
+    return True

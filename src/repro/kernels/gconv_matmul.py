@@ -136,13 +136,20 @@ def _pad_operand(arr, G, Mp, Lp):
     return arr
 
 
+# default tile targets + alignments (MXU wants 128-multiples on the
+# contraction/output dims, VPU sublanes 8-multiples on M). Single source
+# for the kernel signature below AND the repro.lint block-contract audit.
+BLOCK_M, BLOCK_N, BLOCK_K = 256, 256, 512
+M_ALIGN, N_ALIGN, K_ALIGN = 8, 128, 128
+
+
 def gconv_matmul(x: jax.Array, w: jax.Array, *, post: str = "id",
                  scale: float = 1.0,
                  prologue: Tuple[FusedOp, ...] = (),
                  epilogue: Tuple[FusedOp, ...] = (),
                  operands: Tuple[jax.Array, ...] = (),
-                 block_m: int = 256, block_n: int = 256,
-                 block_k: int = 512,
+                 block_m: int = BLOCK_M, block_n: int = BLOCK_N,
+                 block_k: int = BLOCK_K,
                  interpret: Optional[bool] = None) -> jax.Array:
     """out[g] = epilogue(scale * (prologue(x)[g] @ w[g])), f32 accumulation.
 
@@ -178,9 +185,9 @@ def _gconv_matmul(x, w, *, post, scale, prologue, epilogue, operands,
     G, M, K = x.shape
     G2, K2, N = w.shape
     assert G == G2 and K == K2, (x.shape, w.shape)
-    bm = min(block_m, pick_block(M, block_m, 8))
-    bn = min(block_n, pick_block(N, block_n, 128))
-    bk = min(block_k, pick_block(K, block_k, 128))
+    bm = min(block_m, pick_block(M, block_m, M_ALIGN))
+    bn = min(block_n, pick_block(N, block_n, N_ALIGN))
+    bk = min(block_k, pick_block(K, block_k, K_ALIGN))
     # pick_block contract: a block may undershoot the axis; pad to tile
     # multiples (making the padded extents divisible by construction) —
     # boundary-block contents are implementation-defined in Pallas, and a

@@ -11,8 +11,6 @@ from __future__ import annotations
 import os
 from typing import Optional
 
-import jax
-import jax.numpy as jnp
 
 from . import ref
 from .chain_norm import chain_norm

@@ -25,8 +25,6 @@ import time
 import traceback
 
 import jax
-import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import configs
 from repro.analysis import roofline as rl

@@ -17,11 +17,9 @@ Strategy (DESIGN.md §4):
 """
 from __future__ import annotations
 
-import re
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Tuple
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.models.common import ModelConfig

@@ -9,12 +9,10 @@ from __future__ import annotations
 import argparse
 import functools
 import json
-import time
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import configs
@@ -24,7 +22,7 @@ from repro.models import api
 from repro.optim import adamw
 from repro.runtime.fault_tolerance import FaultTolerantLoop
 from . import sharding as shlib
-from .mesh import dp_axes, make_debug_mesh, make_production_mesh
+from .mesh import make_debug_mesh
 
 
 def make_train_step(model, opt_cfg: adamw.OptConfig, mesh):

@@ -1,0 +1,239 @@
+"""Chain-IR passes: whole-chain re-validation beyond the add-time checks.
+
+These run on the *source* chain (plus the fused chain, for liveness, when
+one is available): structural integrity (dangling outputs, use-before-def,
+shape re-check), reachability (dead nodes, unused inputs/params), no-op
+``Movement`` detection, the dtype-propagation audit (``out_dtype``
+quantization points §4.3 fusion refuses to absorb — the ROADMAP int8
+item's work list), and an interval-based liveness analysis whose
+peak-live-words is checked against each Table-4 accelerator's global
+buffer (the static half of the paged-KV roadmap item).
+"""
+from __future__ import annotations
+
+import copy
+
+from ..core.chain import Chain, Movement
+from ..core.fusion import _MAIN_AS_UNARY
+from ..core.gconv import GConv
+from .registry import lint_pass, make_finding, rule
+
+R_DANGLING = rule("chain.dangling-output", "chain", "error",
+                  "a chain output names no node")
+R_USE_BEFORE_DEF = rule("chain.use-before-def", "chain", "error",
+                        "a node references a tensor produced later "
+                        "(or never)")
+R_SHAPE = rule("chain.shape-mismatch", "chain", "error",
+               "a node's operand shapes violate the GCONV dim contract")
+R_DEAD = rule("chain.dead-node", "chain", "warn",
+              "a node is unreachable from the chain outputs")
+R_UNUSED_INPUT = rule("chain.unused-input", "chain", "warn",
+                      "a chain input is referenced by no node")
+R_UNUSED_PARAM = rule("chain.unused-param", "chain", "warn",
+                      "a chain param is referenced by no node")
+R_NOOP_MOVE = rule("chain.noop-movement", "chain", "warn",
+                   "a Movement node is an identity (no reshape, "
+                   "transpose, flip, or gather)")
+R_QUANT = rule("chain.quant-fusion-barrier", "chain", "info",
+               "an out_dtype quantization point blocks §4.3 fusion "
+               "(int8 roadmap work list)")
+R_PEAK = rule("chain.peak-live-bytes", "chain", "info",
+              "interval-liveness peak live footprint of the chain")
+R_GB = rule("chain.gb-capacity", "chain", "warn",
+            "peak live words exceed a Table-4 accelerator's global buffer")
+
+_DTYPE_BYTES = {"float64": 8, "int64": 8, "float32": 4, "int32": 4,
+                "float16": 2, "bfloat16": 2, "int16": 2,
+                "int8": 1, "uint8": 1, "fp8": 1, "bool": 1}
+
+
+def _dtype_bytes(dtype) -> int:
+    return _DTYPE_BYTES.get(str(dtype), 4)
+
+
+def _node_dtype(node) -> str:
+    if isinstance(node, GConv) and node.out_dtype is not None:
+        return str(node.out_dtype)
+    return "float32"
+
+
+def _implicit_outputs(chain: Chain):
+    if chain.outputs:
+        return [o for o in chain.outputs if o in chain.nodes]
+    names = list(chain.nodes)
+    return names[-1:] if names else []
+
+
+@lint_pass("chain")
+def check_structure(ctx):
+    """Dangling outputs, use-before-def, full shape re-check (the
+    ``validate()`` invariants, reported as findings instead of raising
+    on the first hit). Runs on a deepcopy: ``_check_shapes`` canonicalizes
+    Concat/Movement out_shapes in place."""
+    c = copy.deepcopy(ctx.source)
+    seen = set(c.inputs) | set(c.params)
+    for name, node in c.nodes.items():
+        for ref in Chain._refs(node):
+            if ref not in seen:
+                yield make_finding(
+                    ctx, R_USE_BEFORE_DEF, node=name, ref=ref,
+                    message=f"consumes {ref!r} before production")
+        try:
+            c._check_shapes(node)
+        except (ValueError, KeyError) as e:
+            yield make_finding(ctx, R_SHAPE, node=name, message=str(e))
+        seen.add(name)
+    for o in c.outputs:
+        if o not in c.nodes:
+            yield make_finding(ctx, R_DANGLING, node=o,
+                               message=f"output {o!r} is not a node")
+
+
+@lint_pass("chain")
+def check_reachability(ctx):
+    """Dead nodes (unreachable from the outputs) and unused
+    inputs/params (referenced by no node at all)."""
+    c = ctx.source
+    live = set()
+    stack = list(_implicit_outputs(c))
+    while stack:
+        n = stack.pop()
+        if n in live:
+            continue
+        live.add(n)
+        node = c.nodes.get(n)
+        if node is not None:
+            stack.extend(r for r in Chain._refs(node) if r in c.nodes)
+    for name in c.nodes:
+        if name not in live:
+            yield make_finding(ctx, R_DEAD, node=name,
+                               message="unreachable from the chain outputs")
+    refs = set()
+    for node in c.nodes.values():
+        refs.update(Chain._refs(node))
+    for name in c.inputs:
+        if name not in refs:
+            yield make_finding(ctx, R_UNUSED_INPUT, node=name,
+                               message="input referenced by no node")
+    for name in c.params:
+        if name not in refs:
+            yield make_finding(ctx, R_UNUSED_PARAM, node=name,
+                               message="param referenced by no node")
+
+
+def _movement_is_noop(chain: Chain, node: Movement) -> bool:
+    if node.gather or node.flip:
+        return False
+    try:
+        shape = tuple(chain.shape_of(node.input))
+    except KeyError:
+        return False
+    if node.pre_shape is not None and tuple(node.pre_shape) != shape:
+        return False
+    if node.perm is not None \
+            and tuple(node.perm) != tuple(range(len(shape))):
+        return False
+    return not node.out_shape or tuple(node.out_shape) == shape
+
+
+@lint_pass("chain")
+def check_noop_movement(ctx):
+    for name, node in ctx.source.nodes.items():
+        if isinstance(node, Movement) and _movement_is_noop(ctx.source, node):
+            yield make_finding(
+                ctx, R_NOOP_MOVE, node=name,
+                message="identity movement (same shape, identity perm); "
+                        "drop it or fold it into a neighbor")
+
+
+@lint_pass("chain")
+def check_quant_barriers(ctx):
+    """Nodes that WOULD be §4.3-fusible but for their ``out_dtype``: the
+    quantization point is semantic (fusion's pre/post vocabulary carries
+    no dtype change), so the intermediate materializes. These are exactly
+    the sites a quantized-kernel path (int8/fp8 epilogues) would absorb."""
+    for name, node in ctx.source.nodes.items():
+        if not isinstance(node, GConv) or node.out_dtype is None:
+            continue
+        fusible_otherwise = (
+            node.reduce == "none"
+            and all(d.nks == 1 and d.nop == 1 for d in node.dims)
+            and (node.main == "none" or node.main in _MAIN_AS_UNARY))
+        if fusible_otherwise:
+            yield make_finding(
+                ctx, R_QUANT, node=name, out_dtype=str(node.out_dtype),
+                message=f"quantization point (out_dtype="
+                        f"{node.out_dtype}) blocks fusion of an "
+                        f"otherwise-fusible node")
+
+
+@lint_pass("chain")
+def check_liveness(ctx):
+    """Interval-based liveness over the program that actually runs (the
+    fused chain when available): each tensor is live from its definition
+    step to its last use (chain outputs to the end). Reports the peak as
+    info and flags every Table-4 accelerator whose total global buffer
+    (I+O+K words) the peak exceeds."""
+    c = ctx.fused if ctx.fused is not None else ctx.source
+    order = list(c.nodes)
+    if not order:
+        return
+    pos = {n: i + 1 for i, n in enumerate(order)}   # inputs/params at 0
+    end = len(order) + 1
+    last_use = {}
+    for name, node in c.nodes.items():
+        for ref in Chain._refs(node):
+            last_use[ref] = max(last_use.get(ref, 0), pos[name])
+    for o in _implicit_outputs(c):
+        last_use[o] = end
+
+    def tensor_cost(ref):
+        if ref in c.inputs:
+            info = c.inputs[ref]
+            shape, dtype = info.shape, info.dtype
+        elif ref in c.params:
+            info = c.params[ref]
+            shape, dtype = info.shape, info.dtype
+        else:
+            node = c.nodes[ref]
+            shape, dtype = tuple(node.out_shape), _node_dtype(node)
+        elems = 1
+        for s in shape:
+            elems *= s
+        return elems, elems * _dtype_bytes(dtype)
+
+    # sweep: +size at start, -size after last use
+    deltas_w = [0] * (end + 2)
+    deltas_b = [0] * (end + 2)
+    for ref in list(c.inputs) + list(c.params) + order:
+        start = pos.get(ref, 0)
+        stop = last_use.get(ref, start)
+        words, nbytes = tensor_cost(ref)
+        deltas_w[start] += words
+        deltas_w[stop + 1] -= words
+        deltas_b[start] += nbytes
+        deltas_b[stop + 1] -= nbytes
+    peak_w = peak_b = cur_w = cur_b = 0
+    peak_step = 0
+    for i in range(end + 1):
+        cur_w += deltas_w[i]
+        cur_b += deltas_b[i]
+        if cur_w > peak_w:
+            peak_w, peak_b, peak_step = cur_w, cur_b, i
+    at = order[peak_step - 1] if 0 < peak_step <= len(order) else None
+    yield make_finding(
+        ctx, R_PEAK, node=at, peak_words=peak_w, peak_bytes=peak_b,
+        peak_step=peak_step,
+        message=f"peak live footprint {peak_w} words "
+                f"({peak_b} bytes) at step {peak_step}/{end - 1}")
+
+    from ..core.accelerators import TABLE4
+    for name, spec in TABLE4.items():
+        cap = sum(spec.gb.values())
+        if peak_w > cap:
+            yield make_finding(
+                ctx, R_GB, node=at, accelerator=name, capacity_words=cap,
+                peak_words=peak_w,
+                message=f"peak {peak_w} words exceeds {name}'s global "
+                        f"buffer ({cap} words) — needs tiling/paging "
+                        f"beyond whole-tensor residency")

@@ -1,0 +1,161 @@
+"""``python -m repro.lint`` — sweep the zoo + LM chains through the
+static verifier with a severity-gated exit code.
+
+    python -m repro.lint                         # reduced zoo + LM,
+                                                 # backends auto+pallas,
+                                                 # no-mesh + faked 4x2
+    python -m repro.lint --scale full            # paper-scale networks
+    python -m repro.lint --mutants               # + seeded mutation corpus
+    python -m repro.lint --rules                 # print the rule catalog
+
+Exit codes: 0 — no findings at/above ``--fail-on`` (default ``error``)
+anywhere in the sweep; 1 — such findings exist (with ``--mutants`` this
+is the EXPECTED outcome: the corpus deliberately contains broken
+artifacts); 2 — the verifier itself is broken (a mutant was missed, a
+clean base produced a false positive, or a clean corpus chain has
+errors). The last stdout line is a one-line JSON summary for machine
+consumers (the ``lint_micro`` CI gate).
+
+The "mesh" column needs no devices: shard-plan derivation only reads
+axis geometry, so the sweep fakes an 8-device DxM=4x2 mesh in-process
+(:func:`repro.lint.fake_mesh`) — no subprocess, no
+``--xla_force_host_platform_device_count``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import List
+
+from . import fake_mesh, lint_chain
+from .findings import LintReport
+from .registry import RULES
+
+
+def _tiny_lm_cfg(kind: str):
+    from ..models.common import ModelConfig
+    base = dict(name=f"tiny-{kind}", family="dense", n_layers=1,
+                d_model=16, n_heads=2, n_kv_heads=2, d_ff=32, vocab=64)
+    if kind == "moe":
+        base.update(family="moe", n_experts=4, top_k=2)
+    return ModelConfig(**base)
+
+
+def corpus_chains(scale: str = "reduced") -> list:
+    """The sweep corpus: all 7 zoo nets + the LM dense/MoE block chains."""
+    from ..models import cnn, lm_chain
+    reduced = scale != "full"
+    chains = []
+    for name in cnn.ZOO:
+        kw = {"batch": 2} if reduced else {}
+        chains.append(cnn.build(name, reduced=reduced, **kw))
+    for kind in ("dense", "moe"):
+        chains.append(lm_chain.block_chain(_tiny_lm_cfg(kind), 2, 8,
+                                           name=f"lm_{kind}"))
+    return chains
+
+
+def sweep(scale: str = "reduced", backends=("auto", "pallas"),
+          mesh_specs=(None, "4x2")) -> List[LintReport]:
+    reports = []
+    for chain in corpus_chains(scale):
+        for backend in backends:
+            for spec in mesh_specs:
+                mesh = fake_mesh(spec) if spec else None
+                reports.append(lint_chain(chain, backend=backend,
+                                          mesh=mesh))
+    return reports
+
+
+def _print_rules():
+    width = max(len(r) for r in RULES)
+    for rid, info in sorted(RULES.items()):
+        print(f"{rid:{width}s}  {info.layer:5s} {info.severity:5s} "
+              f"{info.summary}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.lint",
+        description="static verifier sweep over the zoo + LM chains")
+    ap.add_argument("--scale", choices=("reduced", "full"),
+                    default="reduced")
+    ap.add_argument("--backends", default="auto,pallas",
+                    help="comma list of dispatch backends to sweep")
+    ap.add_argument("--mesh", default="4x2",
+                    help="faked mesh spec ('D' or 'DxM'; 'none' disables "
+                         "the mesh column — the no-mesh column always "
+                         "runs)")
+    ap.add_argument("--fail-on", choices=("info", "warn", "error"),
+                    default="error", help="exit 1 on findings at/above "
+                                          "this severity")
+    ap.add_argument("--show", choices=("info", "warn", "error"),
+                    default="warn", help="minimum severity to print")
+    ap.add_argument("--format", choices=("text", "json"), default="text")
+    ap.add_argument("--mutants", action="store_true",
+                    help="also run the seeded mutation corpus (exit 2 if "
+                         "any mutant is missed or a clean base "
+                         "false-positives)")
+    ap.add_argument("--rules", action="store_true",
+                    help="print the rule catalog and exit")
+    args = ap.parse_args(argv)
+
+    if args.rules:
+        _print_rules()
+        return 0
+
+    backends = [b for b in args.backends.split(",") if b]
+    meshes = [None] + ([args.mesh] if args.mesh.lower() != "none" else [])
+    reports = sweep(args.scale, backends, meshes)
+
+    gated = sum(len(r.at_least(args.fail_on)) for r in reports)
+    counts = {s: sum(r.counts()[s] for r in reports)
+              for s in ("error", "warn", "info")}
+
+    mut_rows, mut_ok = None, True
+    if args.mutants:
+        from .mutations import corpus_ok, run_corpus
+        mut_rows = run_corpus()
+        mut_ok = corpus_ok(mut_rows)
+
+    if args.format == "text":
+        for r in reports:
+            print(r.to_text(min_severity=args.show))
+        if mut_rows is not None:
+            print(f"\nmutation corpus: {len(mut_rows)} mutants, "
+                  f"{sum(r['caught'] for r in mut_rows)} caught, "
+                  f"{sum(r['false_positive'] for r in mut_rows)} false "
+                  f"positives")
+            for r in mut_rows:
+                mark = "caught" if r["caught"] else "MISSED"
+                fp = "" if not r["false_positive"] else "  FALSE-POSITIVE"
+                print(f"  {r['mutant']:28s} -> {r['rule']:32s} {mark}{fp}")
+
+    # the verifier itself is broken if a mutant is missed or a clean
+    # mutant base false-positives
+    broken = not mut_ok
+    summary = dict(
+        scale=args.scale, backends=backends,
+        meshes=[m or "none" for m in meshes], chains=len(reports),
+        counts=counts, gated=gated, fail_on=args.fail_on,
+        clean=gated == 0,
+        mutants=(None if mut_rows is None else dict(
+            total=len(mut_rows),
+            caught=sum(r["caught"] for r in mut_rows),
+            false_positives=sum(r["false_positive"] for r in mut_rows),
+            all_caught=mut_ok)),
+        ok=not broken)
+    print(json.dumps(summary))
+    if broken:
+        return 2
+    # with --mutants the corpus is present, so the gated sweep findings
+    # plus the (deliberately broken) mutants make nonzero the expected
+    # outcome; without it, nonzero means the real corpus is dirty
+    if args.mutants:
+        return 1
+    return 1 if gated else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

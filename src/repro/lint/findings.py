@@ -1,0 +1,157 @@
+"""Findings model for the static verifier (`repro.lint`).
+
+A :class:`Finding` is one rule violation anchored to a chain (and
+optionally a node or fusion group) with a stable dotted rule ID
+(``chain.dangling-output``, ``plan.oracle-hot``, ``shard.missing-psum``,
+...). A :class:`LintReport` collects the findings of one analyzed chain
+and renders them as text, JSON, or `repro.obs` metrics
+(``lint_findings{rule,severity}`` + ``dispatch_oracle_nodes{chain}``).
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+from typing import Dict, List, Mapping, Optional
+
+SEVERITIES = ("info", "warn", "error")
+_RANK = {s: i for i, s in enumerate(SEVERITIES)}
+
+
+def severity_rank(severity: str) -> int:
+    if severity not in _RANK:
+        raise ValueError(f"unknown severity {severity!r}; "
+                         f"expected one of {SEVERITIES}")
+    return _RANK[severity]
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One rule violation, anchored to chain / node / fusion group."""
+
+    rule: str                            # stable dotted ID, e.g. chain.dead-node
+    severity: str                        # info | warn | error
+    layer: str                           # chain | plan | shard
+    chain: str                           # chain name the finding is about
+    message: str
+    node: Optional[str] = None           # anchoring node, when one exists
+    group: Optional[str] = None          # fusion-group host / step anchor
+    data: Mapping = field(default_factory=dict)
+
+    def to_dict(self) -> dict:
+        d = dict(rule=self.rule, severity=self.severity, layer=self.layer,
+                 chain=self.chain, message=self.message)
+        if self.node is not None:
+            d["node"] = self.node
+        if self.group is not None:
+            d["group"] = self.group
+        if self.data:
+            d["data"] = dict(self.data)
+        return d
+
+    def format(self) -> str:
+        anchor = self.chain
+        if self.node:
+            anchor += f"/{self.node}"
+        if self.group:
+            anchor += f" (group {self.group})"
+        return f"{self.severity:5s} {self.rule} [{anchor}]: {self.message}"
+
+
+class LintReport:
+    """The findings of one analyzed chain (one config: backend + mesh)."""
+
+    def __init__(self, chain: str = "", findings=(), config: str = ""):
+        self.chain = chain
+        self.config = config             # e.g. "backend=auto mesh=4x2"
+        self.findings: List[Finding] = list(findings)
+
+    # -- collection -----------------------------------------------------
+    def add(self, finding: Finding):
+        self.findings.append(finding)
+
+    def extend(self, findings):
+        self.findings.extend(findings)
+
+    def __len__(self) -> int:
+        return len(self.findings)
+
+    def __iter__(self):
+        return iter(self.findings)
+
+    # -- queries --------------------------------------------------------
+    def counts(self) -> Dict[str, int]:
+        out = {s: 0 for s in SEVERITIES}
+        for f in self.findings:
+            out[f.severity] += 1
+        return out
+
+    def by_rule(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for f in self.findings:
+            out[f.rule] = out.get(f.rule, 0) + 1
+        return out
+
+    def errors(self) -> List[Finding]:
+        return [f for f in self.findings if f.severity == "error"]
+
+    def at_least(self, severity: str) -> List[Finding]:
+        floor = severity_rank(severity)
+        return [f for f in self.findings if _RANK[f.severity] >= floor]
+
+    @property
+    def max_severity(self) -> Optional[str]:
+        if not self.findings:
+            return None
+        return max(self.findings, key=lambda f: _RANK[f.severity]).severity
+
+    def oracle_nodes(self) -> int:
+        return sum(1 for f in self.findings
+                   if f.rule in ("plan.oracle-fallback", "plan.oracle-hot"))
+
+    # -- rendering ------------------------------------------------------
+    def to_dict(self) -> dict:
+        return dict(chain=self.chain, config=self.config,
+                    counts=self.counts(),
+                    findings=[f.to_dict() for f in self.findings])
+
+    def to_json(self, indent: Optional[int] = None) -> str:
+        return json.dumps(self.to_dict(), indent=indent)
+
+    def to_text(self, min_severity: str = "info") -> str:
+        c = self.counts()
+        head = (f"{self.chain}"
+                + (f" [{self.config}]" if self.config else "")
+                + f": {c['error']} error / {c['warn']} warn "
+                  f"/ {c['info']} info")
+        lines = [head]
+        lines += [f"  {f.format()}" for f in self.at_least(min_severity)]
+        return "\n".join(lines)
+
+    def to_metrics(self, reg=None):
+        """Emit ``lint_findings{rule,severity}`` counters and the
+        ``dispatch_oracle_nodes{chain}`` gauge into a `repro.obs`
+        registry (a fresh one unless ``reg`` is given)."""
+        from ..obs.metrics import Metrics
+        reg = Metrics() if reg is None else reg
+        for f in self.findings:
+            reg.counter("lint_findings", rule=f.rule,
+                        severity=f.severity).inc()
+        reg.gauge("dispatch_oracle_nodes",
+                  chain=self.chain).set(self.oracle_nodes())
+        return reg
+
+
+class LintError(RuntimeError):
+    """Raised by ``compile_chain(..., lint=<severity>)`` when the report
+    carries findings at or above the gate severity."""
+
+    def __init__(self, report: LintReport, level: str):
+        self.report = report
+        self.level = level
+        hits = report.at_least(level)
+        lines = [f.format() for f in hits[:8]]
+        if len(hits) > 8:
+            lines.append(f"... ({len(hits)} findings total)")
+        super().__init__(
+            f"lint gate ({level}) failed for chain {report.chain!r}:\n  "
+            + "\n  ".join(lines))

@@ -1,0 +1,107 @@
+"""Rule catalog + pass registry + analysis context for `repro.lint`.
+
+A *rule* is a stable dotted ID with a fixed layer and severity (the
+catalog below is rendered by ``python -m repro.lint --rules`` and the
+README "Static analysis" section). A *pass* is a function
+``pass(ctx) -> iterable[Finding]`` registered for one layer; passes for
+a layer only run when the context carries that layer's artifacts
+(``plan`` for plan passes, ``shard_plan`` for shard passes), so the same
+registry serves chain-only lints and fully-compiled engines.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+from .findings import Finding, LintReport, severity_rank
+
+LAYERS = ("chain", "plan", "shard")
+
+
+@dataclass(frozen=True)
+class Rule:
+    id: str
+    layer: str
+    severity: str
+    summary: str
+
+
+RULES: Dict[str, Rule] = {}
+
+
+def rule(rule_id: str, layer: str, severity: str, summary: str) -> str:
+    """Register a rule in the catalog (module-import time)."""
+    if layer not in LAYERS:
+        raise ValueError(f"unknown layer {layer!r}")
+    severity_rank(severity)              # validates
+    if rule_id in RULES:
+        raise ValueError(f"duplicate rule {rule_id!r}")
+    RULES[rule_id] = Rule(rule_id, layer, severity, summary)
+    return rule_id
+
+
+_PASSES: List[Tuple[str, Callable]] = []
+
+
+def lint_pass(layer: str):
+    """Decorator registering a pass for one layer."""
+    if layer not in LAYERS:
+        raise ValueError(f"unknown layer {layer!r}")
+
+    def wrap(fn):
+        _PASSES.append((layer, fn))
+        return fn
+
+    return wrap
+
+
+def passes(layers=None):
+    return [(layer, fn) for layer, fn in _PASSES
+            if layers is None or layer in layers]
+
+
+# defaults for the oracle-fallback hot-path thresholds: a node is "hot"
+# when it carries >= HOT_MACS macs AND >= HOT_FRAC of the chain's total —
+# tiny deliberately-oracle test chains stay info-level
+HOT_MACS = 1 << 20
+HOT_FRAC = 0.01
+
+
+@dataclass
+class LintContext:
+    """Everything the passes may inspect. Only ``source`` is mandatory;
+    plan/shard passes skip themselves when their artifacts are absent."""
+
+    source: object                       # the original Chain
+    fused: object = None                 # the fused chain actually run
+    fusion: object = None                # core.fusion.FusionReport
+    partitions: list = None              # exec.partition ExecGroups
+    plan: object = None                  # exec.dispatch.Plan
+    backend: str = "auto"
+    mxu_min: int = 128
+    shard_plan: object = None            # exec.shardplan.ShardPlan
+    sharded_steps: list = None           # wrap_steps output (Step w/ meta)
+    hot_macs: int = HOT_MACS
+    hot_frac: float = HOT_FRAC
+    config: str = ""                     # report label, e.g. "backend=auto"
+    data: dict = field(default_factory=dict)   # pass-to-pass scratch
+
+
+def make_finding(ctx: LintContext, rule_id: str, message: str,
+                 node: Optional[str] = None, group: Optional[str] = None,
+                 **data) -> Finding:
+    info = RULES[rule_id]
+    return Finding(rule=rule_id, severity=info.severity, layer=info.layer,
+                   chain=ctx.source.name, message=message, node=node,
+                   group=group, data=data)
+
+
+def run_passes(ctx: LintContext, layers=None) -> LintReport:
+    rep = LintReport(chain=ctx.source.name, config=ctx.config)
+    for layer, fn in passes(layers):
+        if layer == "plan" and ctx.plan is None:
+            continue
+        if layer == "shard" and ctx.shard_plan is None:
+            continue
+        rep.extend(fn(ctx))
+    return rep

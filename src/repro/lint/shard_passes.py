@@ -1,0 +1,152 @@
+"""Shard-plan passes: mesh-aware invariants, no devices needed.
+
+``ShardPlan`` derivation and ``wrap_steps`` only touch ``mesh.shape`` /
+``mesh.axis_names`` (see `repro.shardpolicy`), so everything here runs
+against a :class:`repro.lint.FakeMesh` — the PR 5 bug class (a
+tensor-parallel lowering that forgets its explicit psum or skips the
+``with_sharding_constraint`` pinning operand replication) is caught at
+compile time instead of by the 8-fake-device runtime sweep. Each
+tensor-parallel lowering declares its contract as ``Step.meta``
+(``tp_mode`` / ``psum`` / ``constrained``, attached by
+``lowering.lower_grouped_matmul``); the passes check that declaration
+against the plan.
+"""
+from __future__ import annotations
+
+from ..core.gconv import GConv
+from ..exec.shardplan import COLUMN, ROW, _matmul_geometry
+from .. import shardpolicy as policy
+from .registry import lint_pass, make_finding, rule
+
+R_TP_DIV = rule("shard.tp-divisibility", "shard", "error",
+                "a tensor-parallel split's N/K does not divide the "
+                "model axis (or the node is not a grouped matmul)")
+R_TP_STEP = rule("shard.tp-step-missing", "shard", "error",
+                 "a planned tensor-parallel split has no matching "
+                 "re-lowered step (or the step declares a different "
+                 "split mode)")
+R_PSUM = rule("shard.missing-psum", "shard", "error",
+              "a row-split matmul does not declare its explicit psum "
+              "over the model axis (the partial products would be "
+              "silently wrong)")
+R_CONSTRAIN = rule("shard.unconstrained-replication", "shard", "error",
+                   "a tensor-parallel step does not pin its operand "
+                   "shardings with with_sharding_constraint (shard_map "
+                   "TRUSTS replication; under data parallelism the "
+                   "operands arrive data-sharded — the PR 5 bug)")
+R_IN_DIV = rule("shard.input-spec-divisibility", "shard", "error",
+                "an input PartitionSpec axis does not divide the "
+                "corresponding array dim")
+R_PARAM_REP = rule("shard.param-not-replicated", "shard", "warn",
+                   "a param spec deviates from the engine's "
+                   "params-replicate contract")
+R_DRIFT = rule("shard.spec-policy-drift", "shard", "warn",
+               "an input spec deviates from the shared "
+               "leading-batch-spec policy")
+
+
+@lint_pass("shard")
+def check_tp_divisibility(ctx):
+    """Every planned column split's N (row split's K) must divide the
+    model axis, and the split must sit on a jnp grouped-matmul node (the
+    Pallas path keeps its single-device kernel)."""
+    sp = ctx.shard_plan
+    tp_n = sp.tp_size
+    fused = ctx.fused if ctx.fused is not None else ctx.source
+    for name, mode in sp.step_tp.items():
+        node = fused.nodes.get(name)
+        if not isinstance(node, GConv):
+            yield make_finding(ctx, R_TP_DIV, node=name,
+                               message="tensor-parallel split on a "
+                                       "non-GCONV (or unknown) node")
+            continue
+        geo = _matmul_geometry(node, fused)
+        if geo is None:
+            yield make_finding(ctx, R_TP_DIV, node=name,
+                               message="tensor-parallel split on a node "
+                                       "without grouped-matmul geometry")
+            continue
+        _mplan, _G, _M, N, K = geo
+        if mode == COLUMN and N % tp_n != 0:
+            yield make_finding(
+                ctx, R_TP_DIV, node=name, N=N, tp=tp_n,
+                message=f"column split: N={N} does not divide the "
+                        f"model axis ({tp_n})")
+        elif mode == ROW and K % tp_n != 0:
+            yield make_finding(
+                ctx, R_TP_DIV, node=name, K=K, tp=tp_n,
+                message=f"row split: K={K} does not divide the model "
+                        f"axis ({tp_n})")
+        tag = ctx.plan.dispatch.get(name) if ctx.plan is not None else None
+        if tag is not None and tag != "matmul:jnp":
+            yield make_finding(
+                ctx, R_TP_DIV, node=name, tag=tag,
+                message=f"tensor-parallel split on backend {tag!r} "
+                        f"(only matmul:jnp splits explicitly)")
+
+
+@lint_pass("shard")
+def check_tp_lowering(ctx):
+    """The PR 5 rules: every planned split has a re-lowered step whose
+    declared contract matches — row splits carry their explicit psum, and
+    every split pins operand replication with sharding constraints."""
+    sp = ctx.shard_plan
+    steps = {s.name: s for s in (ctx.sharded_steps or [])}
+    for name, mode in sp.step_tp.items():
+        st = steps.get(name)
+        meta = dict(getattr(st, "meta", None) or {}) if st else {}
+        if st is None or not meta:
+            yield make_finding(
+                ctx, R_TP_STEP, node=name, mode=mode,
+                message=f"planned {mode} split has no re-lowered "
+                        f"tensor-parallel step")
+            continue
+        if meta.get("tp_mode") != mode:
+            yield make_finding(
+                ctx, R_TP_STEP, node=name, want=mode,
+                got=meta.get("tp_mode"),
+                message=f"step declares {meta.get('tp_mode')!r} split "
+                        f"but the plan says {mode!r}")
+        if mode == ROW and not meta.get("psum"):
+            yield make_finding(
+                ctx, R_PSUM, node=name,
+                message="row-split matmul without its explicit psum "
+                        "over the model axis")
+        if not meta.get("constrained"):
+            yield make_finding(
+                ctx, R_CONSTRAIN, node=name,
+                message="operands not pinned with "
+                        "with_sharding_constraint before shard_map")
+
+
+@lint_pass("shard")
+def check_specs(ctx):
+    """Input specs must divide their dims and follow the shared
+    leading-batch policy; params must replicate (engine contract)."""
+    sp = ctx.shard_plan
+    chain = ctx.fused if ctx.fused is not None else ctx.source
+    for name, spec in sp.in_specs.items():
+        info = chain.inputs.get(name)
+        if info is None:
+            continue
+        axes = tuple(spec) + (None,) * len(info.shape)
+        for i, (dim, axis) in enumerate(zip(info.shape, axes)):
+            if axis is not None and not policy.divides(sp.mesh, axis, dim):
+                yield make_finding(
+                    ctx, R_IN_DIV, node=name, dim=dim, axis=str(axis),
+                    message=f"input dim {i} (={dim}) is sharded over "
+                            f"{axis!r} (size "
+                            f"{policy.axis_size(sp.mesh, axis)}) which "
+                            f"does not divide it")
+        want = policy.leading_batch_spec(sp.mesh, info.shape, sp.dp)
+        if tuple(spec) != tuple(want):
+            yield make_finding(
+                ctx, R_DRIFT, node=name, got=str(spec), want=str(want),
+                message=f"input spec {spec} deviates from the "
+                        f"leading-batch policy {want}")
+    for name, spec in sp.param_specs.items():
+        if tuple(spec) != ():
+            yield make_finding(
+                ctx, R_PARAM_REP, node=name, got=str(spec),
+                message=f"param spec {spec} breaks the params-replicate "
+                        f"contract")

@@ -25,12 +25,9 @@ Serving extras (consumed by repro.exec.serving):
 """
 from __future__ import annotations
 
-import functools
 from types import SimpleNamespace
-from typing import Any, Dict, Optional
 
 import jax
-import jax.numpy as jnp
 
 from . import encdec, hymba, rwkv6, transformer
 from .common import ModelConfig, kv_cache_init

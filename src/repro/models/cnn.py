@@ -18,7 +18,6 @@ example (batch norm, Table 2) via :func:`training_block_chain`.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Tuple
 
 from repro.core import layers as L
 from repro.core.chain import Chain, Movement

@@ -20,14 +20,12 @@ these patterns gets the fused paths automatically.
 from __future__ import annotations
 
 import dataclasses
-import functools
 import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
 
 # ---------------------------------------------------------------------------

@@ -8,15 +8,12 @@ encoder output. "12L" is realized as 12 encoder + 12 decoder layers
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
 
-from .common import (ModelConfig, apply_rope, attention, attention_naive,
-                     cdtype, dense_init, ffn, ffn_param_shapes, norm,
-                     softmax_xent)
+from .common import (ModelConfig, apply_rope, attention, cdtype, dense_init, ffn, ffn_param_shapes, norm, softmax_xent)
 
 _noshard = lambda x, tag=None: x
 

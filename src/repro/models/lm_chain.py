@@ -18,7 +18,6 @@ model side too).
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
 
 from repro.core import layers as L
 from repro.core.chain import Chain

@@ -25,7 +25,7 @@ from typing import Any, Dict, Tuple
 import jax
 import jax.numpy as jnp
 
-from .common import ModelConfig, cdtype, dense_init, ffn, ffn_param_shapes
+from .common import ModelConfig, ffn, ffn_param_shapes
 
 _noshard = lambda x, tag=None: x
 

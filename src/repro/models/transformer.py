@@ -17,9 +17,7 @@ from typing import Any, Callable, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from .common import (ModelConfig, apply_rope, attention, attention_naive,
-                     cdtype, dense_init, ffn, ffn_param_shapes, kv_cache_init,
-                     norm, softmax_xent, stacked_init)
+from .common import (ModelConfig, apply_rope, attention, cdtype, dense_init, ffn, ffn_param_shapes, norm, softmax_xent, stacked_init)
 from .common import safe_unroll as _safe_unroll
 
 Params = Dict[str, Any]
@@ -284,7 +282,6 @@ def prefill(cfg: ModelConfig, params: Params, tokens, shard_fn=_noshard,
     overwritten) during decode. Windowed models must prefill exact-length
     (the trailing-window crop would otherwise capture pad rows).
     """
-    from .common import kv_cache_init
 
     B, T = tokens.shape
     if lengths is not None and cfg.sliding_window:

@@ -17,7 +17,7 @@ input scratchpads (``ls == 1``) don't care about formats.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict
 
 from repro.core.accelerators import AcceleratorSpec

@@ -21,7 +21,7 @@ Task costs:
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional
 
 from repro.core.chain import Chain, Concat, Movement

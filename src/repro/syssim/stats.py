@@ -14,8 +14,8 @@ Stall attribution per unit splits into two causes:
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from dataclasses import dataclass
+from typing import List, Optional
 
 from repro.obs.metrics import Metrics, percentile
 

@@ -7,7 +7,6 @@ import pytest
 
 from repro import configs
 from repro.models import api
-from repro.models.api import param_count
 
 
 @pytest.mark.parametrize("arch", configs.ARCHS)
@@ -93,7 +92,6 @@ def test_decode_matches_forward_dense():
 def test_rwkv_chunked_equals_scan():
     """The chunk-parallel WKV form must equal the token scan exactly."""
     from repro.models import rwkv6
-    from repro.models.common import ModelConfig
 
     B, T, H, N = 2, 64, 2, 8
     key = jax.random.PRNGKey(0)
@@ -127,7 +125,7 @@ def test_rwkv_decode_matches_forward():
 
 def test_moe_routing_conservation():
     """Every kept token's gates sum to ~1; dropped tokens contribute 0."""
-    from repro.models.moe import capacity, moe_ffn
+    from repro.models.moe import moe_ffn
 
     cfg = configs.get("olmoe-1b-7b", smoke=True)
     from repro.models import transformer

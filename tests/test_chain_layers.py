@@ -8,7 +8,6 @@ import pytest
 
 from repro.core import layers as L
 from repro.core.chain import Chain
-from repro.core.gconv import DimSpec, GConv, Op
 from repro.core.interpreter import ChainExecutor
 
 jax.config.update("jax_enable_x64", False)
@@ -253,6 +252,19 @@ def test_movement_view():
     env, _ = run_chain(chain, {"x": xv})
     np.testing.assert_allclose(
         env[z], xv.reshape(2, 3, 2, 4).transpose(0, 2, 1, 3))
+
+
+def test_fresh_probes_all_namespaces():
+    # fresh() must avoid inputs and params too, not just nodes: a
+    # collision with either makes the subsequent add() raise
+    chain = Chain("t")
+    chain.add_input("x", (2, 4))
+    chain.add_param("x_1", (2, 4))
+    L.relu(chain, "x", name="x_2")
+    name = chain.fresh("x")
+    assert name == "x_3"
+    L.relu(chain, "x", name=name)       # must not raise "duplicate"
+    assert chain.fresh("y") == "y"
 
 
 def test_chain_stats_traditional_split():

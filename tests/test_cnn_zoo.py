@@ -9,7 +9,7 @@ import numpy as np
 import pytest
 
 from repro.core import accelerators as acc
-from repro.core.costmodel import baseline_cost, gconv_chain_cost, speedup
+from repro.core.costmodel import speedup
 from repro.core.fusion import fuse_chain
 from repro.exec import compile_chain
 from repro.models import cnn

@@ -15,7 +15,6 @@ from repro.core.mapping import Entry, Mapping, MappingError, map_gconv
 from repro.dse import (Evaluator, EvalRecord, SpecSpace, baseline_points,
                        load_suite, pareto_front, search_mapping)
 from repro.dse.search import STRATEGIES
-from repro.dse.space import FIELDS
 
 
 @pytest.fixture(scope="module")

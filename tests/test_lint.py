@@ -1,0 +1,216 @@
+"""repro.lint: the static verifier itself.
+
+Covers the three acceptance claims: the real corpus is clean at error
+severity, every seeded mutant is caught by its intended rule with no
+false positives on the clean bases, and the ``compile_chain(...,
+lint=...)`` gate raises/records as documented.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.core import layers as L
+from repro.core.chain import Chain, Movement
+from repro.lint import (FakeMesh, build_context, fake_mesh, lint_chain,
+                        lint_compiled)
+from repro.lint.findings import LintError, severity_rank
+from repro.lint.registry import RULES, run_passes
+from repro.lint.mutations import MUTANTS, corpus_ok, run_corpus
+
+
+def small_chain(name="t"):
+    c = Chain(name)
+    x = c.add_input("x", (8, 64))
+    h = L.fc(c, x, out_f=64, name="fc1")
+    h = L.relu(c, h, name="act1")
+    h = L.fc(c, h, out_f=64, name="fc2")
+    c.mark_output(h)
+    return c
+
+
+# ---------------------------------------------------------------------------
+# clean corpus
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("mesh_spec", [None, "4x2"])
+@pytest.mark.parametrize("zoo_name", ["AN", "MN"])
+def test_zoo_reduced_clean(zoo_name, mesh_spec):
+    from repro.models import cnn
+    chain = cnn.build(zoo_name, reduced=True, batch=2)
+    mesh = fake_mesh(mesh_spec) if mesh_spec else None
+    rep = lint_chain(chain, mesh=mesh)
+    assert rep.errors() == [], rep.to_text()
+
+
+@pytest.mark.parametrize("mesh_spec", [None, "4x2"])
+def test_lm_dense_clean(mesh_spec):
+    from repro.lint.cli import _tiny_lm_cfg
+    from repro.models import lm_chain
+    chain = lm_chain.block_chain(_tiny_lm_cfg("dense"), 2, 8)
+    mesh = fake_mesh(mesh_spec) if mesh_spec else None
+    rep = lint_chain(chain, mesh=mesh)
+    assert rep.errors() == [], rep.to_text()
+
+
+# ---------------------------------------------------------------------------
+# mutation corpus: every rule fires, two-sided
+# ---------------------------------------------------------------------------
+def test_mutation_corpus_all_caught():
+    rows = run_corpus()
+    assert len(rows) >= 10
+    missed = [r["mutant"] for r in rows if not r["caught"]]
+    fps = [r["mutant"] for r in rows if r["false_positive"]]
+    dirty = [r["mutant"] for r in rows if r["clean_errors"]]
+    assert not missed, f"mutants not flagged by their rule: {missed}"
+    assert not fps, f"intended rule fired on the CLEAN base: {fps}"
+    assert not dirty, f"clean bases with error findings: {dirty}"
+    assert corpus_ok(rows)
+
+
+def test_mutation_corpus_spans_all_layers():
+    layers = {m[4] for m in MUTANTS}
+    assert layers == {"chain", "plan", "shard"}
+    # the PR 5 bug class is reconstructed explicitly
+    rules = {m[1] for m in MUTANTS}
+    assert "shard.missing-psum" in rules
+    assert "shard.unconstrained-replication" in rules
+
+
+def test_every_finding_rule_is_registered():
+    rows = run_corpus()
+    for row in rows:
+        for rid in row["fired"]:
+            assert rid in RULES, f"unregistered rule id {rid!r}"
+
+
+# ---------------------------------------------------------------------------
+# compile_chain gate
+# ---------------------------------------------------------------------------
+def test_compile_chain_lint_gate():
+    from repro.exec.engine import compile_chain
+    c = small_chain()
+    c.add_param("w_unused", (4, 4))        # a warn-severity finding
+    with pytest.raises(LintError) as ei:
+        compile_chain(c, lint="warn")
+    assert "chain.unused-param" in str(ei.value)
+    eng = compile_chain(c, lint="error")   # warn does not trip "error"
+    assert eng.lint_report is not None
+    assert any(f.rule == "chain.unused-param"
+               for f in eng.lint_report.findings)
+    assert eng.lint_report.errors() == []
+
+
+def test_compile_chain_lint_env(monkeypatch):
+    from repro.exec.engine import compile_chain
+    c = small_chain()
+    c.add_param("w_unused", (4, 4))
+    monkeypatch.setenv("REPRO_LINT", "warn")
+    with pytest.raises(LintError):
+        compile_chain(c)
+    monkeypatch.setenv("REPRO_LINT", "off")
+    eng = compile_chain(c)
+    assert eng.lint_report is None
+
+
+def test_lint_compiled_matches_lint_chain():
+    from repro.exec.engine import compile_chain
+    c = small_chain()
+    eng = compile_chain(c, lint="error")
+    rep = lint_compiled(eng)
+    assert rep.errors() == []
+    assert {f.rule for f in rep.findings} \
+        == {f.rule for f in lint_chain(c).findings}
+
+
+# ---------------------------------------------------------------------------
+# individual passes
+# ---------------------------------------------------------------------------
+def test_noop_movement_flagged_but_real_movement_not():
+    c = small_chain()
+    mv = c.add(Movement("mv", input="fc2", perm=(1, 0),
+                        out_shape=(64, 8)))
+    c.outputs = [mv]
+    rep = lint_chain(c)
+    assert not any(f.rule == "chain.noop-movement" for f in rep.findings)
+    c2 = small_chain()
+    mv2 = c2.add(Movement("mv", input="fc2", perm=(0, 1),
+                          out_shape=(8, 64)))
+    c2.outputs = [mv2]
+    rep2 = lint_chain(c2)
+    assert any(f.rule == "chain.noop-movement" for f in rep2.findings)
+
+
+def test_liveness_peak_handcrafted():
+    # x(8,64) + fc1.w are live together at step 1: peak must cover both
+    c = Chain("live")
+    x = c.add_input("x", (4, 8))
+    h = L.relu(c, x, name="r1")
+    h = L.relu(c, h, name="r2")
+    c.mark_output(h)
+    rep = lint_chain(c)
+    peaks = [f for f in rep.findings if f.rule == "chain.peak-live-bytes"]
+    assert len(peaks) == 1
+    # input + one relu output live simultaneously = 64 words; the other
+    # relu never overlaps both
+    assert peaks[0].data["peak_words"] == 64
+    assert peaks[0].data["peak_bytes"] == 64 * 4
+
+
+def test_shard_passes_on_fake_mesh():
+    # column (N=512 divides model=2) and row (K=512, N=511) plans both
+    # derive + verify clean without a single real device
+    from repro.lint.mutations import base_col, base_row
+    for builder, mode in ((base_col, "column"), (base_row, "row")):
+        ctx = build_context(builder(), mesh=fake_mesh("4x2"))
+        assert ctx.shard_plan is not None
+        assert list(ctx.shard_plan.step_tp.values()) == [mode]
+        rep = run_passes(ctx)
+        assert rep.errors() == [], rep.to_text()
+
+
+def test_fake_mesh_shape():
+    m = fake_mesh("4x2")
+    assert m.shape == {"data": 4, "model": 2}
+    assert not m.empty and m.size == 8
+    assert FakeMesh({}).empty
+
+
+def test_severity_rank_ordering():
+    assert severity_rank("info") < severity_rank("warn") \
+        < severity_rank("error")
+    with pytest.raises(ValueError):
+        severity_rank("fatal")
+
+
+def test_broken_chain_does_not_crash_lint():
+    c = small_chain()
+    c.outputs.append("ghost")
+    rep = lint_chain(c)    # build_context would raise; lint_chain degrades
+    assert any(f.rule == "chain.dangling-output" for f in rep.errors())
+
+
+# ---------------------------------------------------------------------------
+# CLI (subprocess; exercises the exit-code contract end to end)
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_cli_exit_codes():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src"),
+         env.get("PYTHONPATH", "")])
+    clean = subprocess.run(
+        [sys.executable, "-m", "repro.lint", "--format", "json"],
+        capture_output=True, text=True, env=env)
+    assert clean.returncode == 0, clean.stdout + clean.stderr
+    summary = json.loads(clean.stdout.strip().splitlines()[-1])
+    assert summary["clean"] and summary["counts"]["error"] == 0
+    mut = subprocess.run(
+        [sys.executable, "-m", "repro.lint", "--format", "json",
+         "--mutants"],
+        capture_output=True, text=True, env=env)
+    assert mut.returncode == 1, mut.stdout + mut.stderr
+    msum = json.loads(mut.stdout.strip().splitlines()[-1])
+    assert msum["mutants"]["all_caught"]
+    assert msum["mutants"]["false_positives"] == 0

@@ -2,7 +2,6 @@
 import math
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st
@@ -15,9 +14,7 @@ from repro.core.costmodel import (baseline_cost, gconv_chain_cost,
 from repro.core.fusion import fuse_chain
 from repro.core.gconv import DimSpec, GConv
 from repro.core.interpreter import ChainExecutor
-from repro.core.mapping import (Entry, Mapping, apply_loop_exchange,
-                                consistent_load_width, factors_by, map_gconv,
-                                tile_sizes)
+from repro.core.mapping import (apply_loop_exchange, consistent_load_width, factors_by, map_gconv, tile_sizes)
 
 
 def alexnet_conv1() -> GConv:

@@ -2,8 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
-from _hypothesis_compat import assume, given, settings, st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.chain import Chain
 from repro.core.fusion import fuse_chain

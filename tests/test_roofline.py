@@ -1,0 +1,35 @@
+"""analysis.roofline: HLO shape-byte parsing edge cases."""
+from repro.analysis.roofline import _shape_bytes, collective_bytes
+
+
+def test_shape_bytes_scalar():
+    # a scalar f32[] has one element
+    assert _shape_bytes("f32[]") == 4
+    assert _shape_bytes("bf16[]") == 2
+
+
+def test_shape_bytes_simple():
+    assert _shape_bytes("f32[128,256]{1,0}") == 128 * 256 * 4
+    assert _shape_bytes("s8[3]") == 3
+
+
+def test_shape_bytes_tuple_sums_elements():
+    assert _shape_bytes("(f32[2,3], bf16[4])") == 2 * 3 * 4 + 4 * 2
+
+
+def test_shape_bytes_unknown_dtype_skipped():
+    assert _shape_bytes("opaque[8]") == 0
+    assert _shape_bytes("(opaque[8], f32[2])") == 8
+
+
+def test_collective_bytes_done_not_double_counted():
+    hlo = """
+  %ag = f32[16,8] all-gather(%p), dimensions={0}
+  %ar-start = f32[4,4] all-reduce-start(%q)
+  %ar-done = f32[4,4] all-reduce-done(%ar-start)
+"""
+    out = collective_bytes(hlo)
+    assert out["all-gather"] == 16 * 8 * 4
+    # -start counted once, -done skipped
+    assert out["all-reduce"] == 4 * 4 * 4
+    assert out["reduce-scatter"] == 0

@@ -11,7 +11,7 @@ from _hypothesis_compat import given, settings, st
 from repro.checkpoint.manager import CheckpointManager
 from repro.data.pipeline import DataConfig, Prefetcher, batches, host_slice
 from repro.optim import adamw
-from repro.optim.compress import dequantize, init_errors, quantize
+from repro.optim.compress import dequantize, quantize
 from repro.runtime.fault_tolerance import FaultTolerantLoop, StragglerMonitor
 
 
