@@ -1,0 +1,208 @@
+"""Heuristic-vs-tuned compiled-engine benchmarks (the autotuner cell).
+
+``tune``       — per-zoo-network steady-state wall time of the heuristic
+                 plan vs ``compile_chain(tune="auto")`` against the
+                 persisted DB under ``results/tune/``, plus the tuned
+                 winners per fusion group and the warm-cache compile
+                 overhead (tuned compile with a fully-populated DB vs
+                 plain heuristic compile). Seeds the tuner rows of
+                 ``results/benchmarks.json``.
+``tune_micro`` — one smoke network against a throwaway DB, run by the
+                 FAST CI tier; ``benchmarks.run`` exits nonzero when the
+                 tuned plan regresses past noise vs the heuristic, the
+                 warm-cache compile overhead exceeds its 5% budget, or
+                 tuned outputs diverge from the heuristic plan.
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+
+
+def _zoo_case(name, batch=2):
+    import jax
+
+    from repro.core.interpreter import init_chain_params
+    from repro.models import cnn
+
+    chain = cnn.build(name, reduced=True, batch=batch)
+    params = init_chain_params(chain, jax.random.PRNGKey(0))
+    return chain, cnn.random_inputs(chain), params
+
+
+def _paired_steady_us(eng_a, eng_b, inputs, params, iters=10, repeats=6):
+    """Steady-state noise floors for two engines sampled interleaved.
+
+    Wall-clock cost on a shared box drifts over seconds, so timing the
+    two engines in separate blocks biases whichever ran in the quieter
+    window. Alternating A/B blocks (order flipped each repeat) exposes
+    both engines to the same interference, and the per-engine min then
+    estimates the same-window noise floor for each.
+    """
+    import jax
+
+    jax.block_until_ready(eng_a(inputs, params))   # warmup / compile
+    jax.block_until_ready(eng_b(inputs, params))
+
+    def block(eng):
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            jax.block_until_ready(eng(inputs, params))
+        return (time.perf_counter() - t0) / iters * 1e6
+
+    a_s, b_s = [], []
+    for i in range(repeats):
+        if i % 2:
+            b_s.append(block(eng_b))
+            a_s.append(block(eng_a))
+        else:
+            a_s.append(block(eng_a))
+            b_s.append(block(eng_b))
+    return min(a_s), min(b_s)
+
+
+def _max_err(a, b):
+    import jax.numpy as jnp
+
+    err = 0.0
+    for k in a:
+        err = max(err, float(jnp.max(jnp.abs(
+            jnp.asarray(a[k], jnp.float32) - jnp.asarray(b[k],
+                                                         jnp.float32)))))
+    return err
+
+
+def _bench_net(name, db_path, batch=2, iters=10):
+    import jax
+
+    from repro.exec import compile_chain
+
+    chain, inputs, params = _zoo_case(name, batch=batch)
+    heur = compile_chain(chain)
+    tuned = compile_chain(chain, tune="auto", tune_db=db_path)
+    err = _max_err(jax.block_until_ready(heur(inputs, params)),
+                   jax.block_until_ready(tuned(inputs, params)))
+    heur_us, tuned_us = _paired_steady_us(heur, tuned, inputs, params,
+                                          iters=iters)
+    rep = tuned.tune_report or {}
+    winners = {g: m.get("backend") for g, m in rep.get("groups",
+                                                       {}).items()}
+    speedup = heur_us / max(tuned_us, 1e-9)
+    return dict(
+        net=name,
+        heuristic_us=round(heur_us, 1),
+        tuned_us=round(tuned_us, 1),
+        speedup=round(speedup, 2),
+        _speedup_raw=speedup,      # unrounded, for gates; stripped below
+        max_err=round(err, 6),
+        winners=winners,
+        measured=rep.get("measured", 0),
+        from_db=rep.get("from_db", 0),
+    )
+
+
+def _warm_overhead(chain, db_path, compiles=20):
+    """Warm-cache tune cost as a ratio over the heuristic compile.
+
+    The DB must already hold every group for ``chain`` (the caller's
+    cold tuned compile guarantees that), so the warm ``tune_plan`` stage
+    is pure lookups — and it is the *only* thing
+    ``compile_chain(tune="auto")`` adds over a plain compile. Timing
+    that ~100us stage under its own timer resolves it where
+    differencing two ~4ms full-compile timings cannot (compile cost
+    swings far more than the quantity under test on a busy box). GC is
+    held off during sampling, ``timeit``-style, so a shared collection
+    cycle isn't attributed to one sample; each quantity keeps its noise
+    floor — interference only ever adds time.
+    """
+    import gc
+
+    from repro.exec import compile_chain
+    from repro.exec.dispatch import plan_chain
+    from repro.exec.partition import partition_chain
+    from repro.exec.tune import tune_plan
+
+    compile_chain(chain, tune="auto", tune_db=db_path)  # prime caches
+    fused, _report, _parts = partition_chain(chain)
+    base = tune = 1e9
+    gc.collect()
+    gc.disable()
+    try:
+        for _ in range(compiles):
+            t0 = time.perf_counter()
+            compile_chain(chain)
+            base = min(base, time.perf_counter() - t0)
+            plan = plan_chain(fused)         # fresh plan; not timed
+            t0 = time.perf_counter()
+            tune_plan(fused, plan, mode="auto", db_path=db_path)
+            tune = min(tune, time.perf_counter() - t0)
+    finally:
+        gc.enable()
+    return 1.0 + tune / max(base, 1e-12)
+
+
+def tune_speedup():
+    """Full cell: heuristic-vs-tuned sweep over the seven zoo CNNs
+    against the committed DB under ``results/tune/``."""
+    import numpy as np
+
+    from repro.exec.tune import default_db_path
+    from repro.models import cnn
+
+    db_path = default_db_path()
+    rows = []
+    for name in cnn.ZOO:
+        rows.append(_bench_net(name, db_path))
+    speedups = [r.pop("_speedup_raw") for r in rows]
+    geomean = float(np.exp(np.mean(np.log(np.maximum(speedups, 1e-9)))))
+    # warm-cache compile overhead on one representative net (its groups
+    # were just persisted by the sweep above)
+    chain, _, _ = _zoo_case("MN")
+    overhead = _warm_overhead(chain, db_path)
+    summary = dict(
+        networks=len(rows),
+        geomean_speedup=round(geomean, 3),
+        min_speedup=round(min(speedups), 3),
+        worst_err=max(r["max_err"] for r in rows),
+        warm_compile_overhead=round(overhead - 1.0, 4),
+        target="tuned geomean > 1.0 over the heuristic plan; "
+               "warm-cache compile overhead < 5%",
+        met=bool(geomean > 1.0 and (overhead - 1.0) < 0.05),
+    )
+    return rows, summary
+
+
+def tune_micro():
+    """FAST-tier smoke: one network, throwaway DB; fails CI on a tuned
+    regression past noise, warm-compile overhead >= 5%, or divergence."""
+    with tempfile.TemporaryDirectory() as td:
+        db_path = td + "/tune_db.json"
+        r = _bench_net("MN", db_path, batch=2, iters=20)
+        raw = r.pop("_speedup_raw")
+        chain, _, _ = _zoo_case("MN", batch=2)
+        overhead = _warm_overhead(chain, db_path, compiles=20)
+        # a gate this tight on a shared box needs a confirmation run: a
+        # single bad reading (load spike spanning a whole measurement
+        # window) must not fail CI, while a genuine regression fails
+        # both readings
+        if not (raw > 0.95 and (overhead - 1.0) < 0.05):
+            r2 = _bench_net("MN", db_path, batch=2, iters=20)
+            raw = max(raw, r2.pop("_speedup_raw"))
+            overhead = min(overhead,
+                           _warm_overhead(chain, db_path, compiles=20))
+            r["max_err"] = max(r["max_err"], r2["max_err"])
+            r["speedup"] = round(raw, 2)
+            r["tuned_us"] = min(r["tuned_us"], r2["tuned_us"])
+            r["heuristic_us"] = min(r["heuristic_us"],
+                                    r2["heuristic_us"])
+    summary = dict(
+        speedup=r["speedup"],
+        max_err=r["max_err"],
+        warm_compile_overhead=round(overhead - 1.0, 4),
+        # the tuner must never make the plan slower (0.95 absorbs CI
+        # timer noise — winners are picked from measurements on this
+        # same box, so a genuine regression shows up well below that)
+        ok=bool(raw > 0.95 and (overhead - 1.0) < 0.05
+                and r["max_err"] <= 1e-3),
+    )
+    return [r], summary

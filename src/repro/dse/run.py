@@ -15,9 +15,10 @@ GCONV mappings for the best point's spec, and writes three artifacts to
   * ``best.json``       — the best point's spec, per-workload breakdown,
     sim cross-check, baseline-domination verdicts and the mapping-search
     report;
-  * ``trajectory.json`` — best-fitness-vs-evaluations convergence curve
-    (``[{n, wlc, best_wlc}...]``, evaluation order) for search-trajectory
-    analytics.
+  * ``trajectory.json`` — best-fitness-vs-evaluations convergence curve in
+    the shared ``repro.search.trajectory/v1`` schema (``metric: "wlc"``,
+    ``[{n, fitness, best_fitness}...]`` in evaluation order), directly
+    comparable with the kernel-tuner trajectories under ``results/tune/``.
 
 Exit status is nonzero when a promoted point violates the analytic-vs-sim
 agreement contract (``repro.sim.validate``) — the searched designs must stay
@@ -35,6 +36,8 @@ from typing import Dict, List, Optional, Sequence
 from repro.core import accelerators as acc
 
 from .evaluate import SUITES, EvalRecord, Evaluator, load_suite, pareto_front
+from repro.search import TrajectoryRecorder
+
 from .search import STRATEGIES, SearchResult, search_mapping
 from .space import SpecSpace, baseline_points
 
@@ -98,19 +101,15 @@ def run_dse(suite: str = "zoo", budget: int = 200, seed: int = 0,
 
     # ---- search trajectory: best fitness vs evaluations -------------------
     # Evaluator.cache preserves insertion order, so `records` IS the
-    # evaluation order; the running minimum is the convergence curve the
-    # strategy benchmarks (and the archgym-style viz loop) consume.
-    trajectory = []
-    best_so_far = float("inf")
-    for i, rec in enumerate(records):
-        if rec.wlc < best_so_far:
-            best_so_far = rec.wlc
-        trajectory.append(dict(n=i + 1, wlc=rec.wlc,
-                               best_wlc=best_so_far))
-    evals_to_best = next((t["n"] for t in trajectory
-                          if t["best_wlc"] == best_so_far), 0)
+    # evaluation order; the shared recorder's running minimum is the
+    # convergence curve the strategy benchmarks (and the archgym-style viz
+    # loop) consume — same schema as the kernel-tuner trajectories.
+    recorder = TrajectoryRecorder(metric="wlc")
+    recorder.extend([rec.wlc for rec in records])
+    best_so_far = recorder.best_fitness
+    evals_to_best = recorder.evals_to_best
     say(f"dse: trajectory converged to wlc {best_so_far:.4f} after "
-        f"{evals_to_best}/{len(trajectory)} evaluations")
+        f"{evals_to_best}/{len(recorder.entries)} evaluations")
 
     # ---- multi-fidelity promotion: top-k frontier points -> repro.sim -----
     all_promoted: List[EvalRecord] = []   # every sim promotion feeds the gate
@@ -200,7 +199,7 @@ def run_dse(suite: str = "zoo", budget: int = 200, seed: int = 0,
         frontier_size=len(frontier),
         search=dict(strategy=res.strategy, best_score=res.best_score,
                     n_evals=res.n_evals),
-        trajectory=dict(points=len(trajectory), best_wlc=best_so_far,
+        trajectory=dict(points=len(recorder.entries), best_wlc=best_so_far,
                         evals_to_best=evals_to_best),
     )
     if loaded_trace is not None:
@@ -231,12 +230,8 @@ def run_dse(suite: str = "zoo", budget: int = 200, seed: int = 0,
                       f, indent=1, default=float)
         with open(os.path.join(out_dir, "best.json"), "w") as f:
             json.dump(payload, f, indent=1, default=float)
-        with open(os.path.join(out_dir, "trajectory.json"), "w") as f:
-            json.dump(dict(config=payload["config"],
-                           strategy=res.strategy,
-                           evals_to_best=evals_to_best,
-                           trajectory=trajectory),
-                      f, indent=1, default=float)
+        recorder.write(os.path.join(out_dir, "trajectory.json"),
+                       config=payload["config"], strategy=res.strategy)
         say(f"dse: wrote {os.path.abspath(out_dir)}/"
             f"{{evals,frontier,best,trajectory}}.json")
 

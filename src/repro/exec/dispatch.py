@@ -64,14 +64,24 @@ class Plan:
 # per-node dispatch
 # ---------------------------------------------------------------------------
 def _prefer_pallas_matmul(backend: str, mxu_min: int, plan, node) -> bool:
+    """Static MXU-worthiness heuristic — the no-DB fallback the autotuner
+    (:mod:`repro.exec.tune`) measures against. All three work axes must
+    clear a threshold: K/N feed the MXU contraction, and M must at least
+    fill one sublane tile — a tiny-M huge-K product (e.g. a (1, 4096) @
+    (4096, 4096) head projection) is a matvec whose Pallas grid degenerates
+    to one M-row of padded tiles, where ``jnp.matmul`` wins. The group
+    axis never compensates for small M: G maps to the kernel grid, not the
+    tile."""
     if backend == "pallas":
         return True
     if backend != "auto" or use_interpret():
         return False
+    from ..kernels.gconv_matmul import M_ALIGN
     g_ix, m_ix, c_ix = plan
+    M = int(np.prod([node.dims[i].in_size for i in m_ix])) if m_ix else 1
     K = int(np.prod([node.dims[i].nks for i in c_ix])) if c_ix else 1
     N = int(np.prod([node.dims[i].nop for i in c_ix])) if c_ix else 1
-    return K >= mxu_min and N >= mxu_min
+    return M >= M_ALIGN and K >= mxu_min and N >= mxu_min
 
 
 def dispatch_gconv(node: GConv, k_shape: Optional[Tuple[int, ...]],

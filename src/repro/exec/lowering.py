@@ -232,9 +232,12 @@ def lower_conv(node: GConv, plan) -> Callable:
     return fn
 
 
-def lower_conv_pallas(node: GConv, plan) -> Optional[Callable]:
+def lower_conv_pallas(node: GConv, plan,
+                      block_o: int = 128) -> Optional[Callable]:
     """NHWC Pallas spatial kernel for the plain 2-D case (groups=1, square
-    stride, symmetric padding); None when the geometry doesn't fit."""
+    stride, symmetric padding); None when the geometry doesn't fit.
+    ``block_o`` threads the tuner's output-channel block through to
+    ``gconv_spatial`` (the default matches the kernel's own)."""
     ch, windows, batch = plan
     dims = node.dims
     dch = dims[ch]
@@ -261,7 +264,8 @@ def lower_conv_pallas(node: GConv, plan) -> Optional[Callable]:
         kb = jnp.transpose(k.astype(ct), [ch] + windows + batch)
         kb = kb.reshape(dch.nop, dch.nks, dh.nks, dw.nks)    # OIHW
         kb = jnp.transpose(kb, (2, 3, 1, 0))                 # HWIO
-        y = gconv_spatial(xb, kb, stride=dh.stride, pad=dh.pad)
+        y = gconv_spatial(xb, kb, stride=dh.stride, pad=dh.pad,
+                          block_o=block_o)
         y = jnp.transpose(y, (0, 3, 1, 2))
         y = y.reshape(tuple(b_sizes) + (dch.nop, dh.nopc, dw.nopc))
         y = jnp.transpose(y, np.argsort(perm)).reshape(node.out_shape)
@@ -387,8 +391,11 @@ def _tp_matmul(xb, kb, tp):
                      out_specs=out_spec)(xb, kb)
 
 
-def lower_grouped_matmul(node: GConv, plan, *,
-                         pallas: bool = False, tp=None) -> Callable:
+def lower_grouped_matmul(node: GConv, plan, *, pallas: bool = False,
+                         tp=None, block=None) -> Callable:
+    """``block`` (Pallas path only): a tuner-materialized ``(bm, bn, bk)``
+    forwarded to ``gconv_matmul``; None keeps the kernel's static
+    defaults."""
     g_ix, m_ix, c_ix = plan
     dims = node.dims
     G = int(np.prod([dims[i].ng for i in g_ix])) if g_ix else 1
@@ -440,8 +447,10 @@ def lower_grouped_matmul(node: GConv, plan, *,
             epi_seq, epi_ops = epi if epi is not None else ((), ())
             epi_seq = tuple((nm, c, None if s is None else s + len(pro_ops))
                             for nm, c, s in epi_seq)
+            bkw = (dict(block_m=block[0], block_n=block[1],
+                        block_k=block[2]) if block is not None else {})
             y = gconv_matmul(xb, kb, prologue=pro_seq, epilogue=epi_seq,
-                             operands=pro_ops + epi_ops)
+                             operands=pro_ops + epi_ops, **bkw)
         elif tp is not None:
             y = _tp_matmul(xb, kb, tp)                       # (G, M, N)
         else:

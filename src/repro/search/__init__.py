@@ -1,0 +1,32 @@
+"""Shared seeded search engines over generic point spaces.
+
+Extracted from ``repro.dse.search`` so the same strategy implementations,
+budget accounting and trajectory records drive *every* search in the repo:
+
+  * ``repro.dse``       — accelerator-spec space, analytic WLC objective;
+  * ``repro.exec.tune`` — per-fusion-group (backend, block) space, measured
+    on-device latency objective.
+
+A consumer supplies a :class:`PointSpace` (``sample``/``mutate``/
+``crossover`` over hashable, orderable points) and an objective callable;
+the engines guarantee seeded determinism — a fixed seed reproduces the
+exact evaluation history, including tie-breaks.
+"""
+from .strategies import (  # noqa: F401
+    BudgetExhausted,
+    GeneticSearch,
+    RandomSearch,
+    Scorer,
+    SearchResult,
+    SimulatedAnnealing,
+    Strategy,
+    STRATEGIES,
+)
+from .space import Point, PointSpace  # noqa: F401
+from .trajectory import TrajectoryRecorder  # noqa: F401
+
+__all__ = [
+    "BudgetExhausted", "GeneticSearch", "Point", "PointSpace",
+    "RandomSearch", "Scorer", "SearchResult", "SimulatedAnnealing",
+    "Strategy", "STRATEGIES", "TrajectoryRecorder",
+]

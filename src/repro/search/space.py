@@ -1,0 +1,40 @@
+"""Generic point-space protocol consumed by the strategy engines.
+
+A *point* is any hashable, totally-orderable value (index tuples in
+practice — both ``repro.dse.space.SpecSpace`` and
+``repro.exec.tune.KernelSpace`` encode candidates as ``Tuple[int, ...]``).
+Hashability feeds the scorer's memo table; orderability makes tie-breaks
+(``min(..., key=lambda ps: (score, point))``) deterministic under a fixed
+seed.
+"""
+from __future__ import annotations
+
+import random
+from typing import Protocol, Tuple, runtime_checkable
+
+# Index-tuple encoding shared by every concrete space in the repo. Kept as
+# an alias (not an ABC) so spaces stay plain dataclasses.
+Point = Tuple[int, ...]
+
+
+@runtime_checkable
+class PointSpace(Protocol):
+    """What a strategy needs from a search space — nothing more.
+
+    Implementations may expose richer API (``decode``, ``is_valid``,
+    ``to_spec``...) for their own consumers; the engines only ever call
+    these three, always passing the run's seeded ``random.Random``.
+    """
+
+    def sample(self, rng: random.Random) -> Point:
+        """A uniformly drawn valid point."""
+        ...
+
+    def mutate(self, point: Point, rng: random.Random,
+               n_fields: int = 1) -> Point:
+        """A valid neighbor of ``point`` differing in ``n_fields`` fields."""
+        ...
+
+    def crossover(self, a: Point, b: Point, rng: random.Random) -> Point:
+        """A valid recombination of two parents."""
+        ...

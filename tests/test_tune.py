@@ -1,0 +1,311 @@
+"""Autotuner regressions: the tuning DB contract, the measured-selection
+plumbing, the `_prefer_pallas_matmul` M-axis fix, and the lint audit of
+applied decisions.
+
+Property tests (hypothesis, self-skipping) pin the DB's tolerance
+invariants: valid entries round-trip byte-for-byte, unknown keys are
+misses, and corrupted entries are quarantined — never applied, never a
+crash (the tuner falls back to the heuristic plan)."""
+import json
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import layers as L
+from repro.core.chain import Chain
+from repro.core.interpreter import init_chain_params
+from repro.exec import compile_chain
+from repro.exec import tune as T
+
+TUNE_BACKENDS = list(T.TUNABLE)
+
+
+def _small_chain(batch=8, c=64, name="tune_small"):
+    ch = Chain(name)
+    x = ch.add_input("x", (batch, c))
+    h = L.fc(ch, x, out_f=c, name="fc1")
+    h = L.relu(ch, h, name="act")
+    h = L.fc(ch, h, out_f=c, name="fc2")
+    ch.mark_output(h)
+    return ch
+
+
+def _case(batch=8, c=64):
+    ch = _small_chain(batch, c)
+    params = init_chain_params(ch, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (batch, c))
+    return ch, {"x": x}, params
+
+
+# ---------------------------------------------------------------------------
+# DB property tests
+# ---------------------------------------------------------------------------
+_valid_blocks = st.one_of(
+    st.none(),
+    st.dictionaries(st.sampled_from(["m", "n", "k", "o"]),
+                    st.integers(min_value=1, max_value=8192), min_size=1))
+_valid_entries = st.fixed_dictionaries(dict(
+    backend=st.sampled_from(TUNE_BACKENDS),
+    block=_valid_blocks,
+    latency_us=st.floats(min_value=1e-3, max_value=1e6,
+                         allow_nan=False, allow_infinity=False)))
+_keys = st.text(min_size=1, max_size=40)
+
+_bad_entries = st.one_of(
+    st.none(), st.just([]), st.just("einsum"), st.just(7),
+    st.fixed_dictionaries(dict(backend=st.just(""),
+                               latency_us=st.just(1.0))),
+    st.fixed_dictionaries(dict(
+        backend=st.sampled_from(TUNE_BACKENDS),
+        latency_us=st.sampled_from([0.0, -4.2, float("nan"),
+                                    float("inf"), True, "fast"]))),
+    st.fixed_dictionaries(dict(
+        backend=st.sampled_from(TUNE_BACKENDS), latency_us=st.just(1.0),
+        block=st.sampled_from([{}, {"z": 4}, {"m": 0}, {"m": -8},
+                               {"m": True}, {"m": 1.5}, "blk"]))))
+
+
+@given(st.dictionaries(_keys, _valid_entries, max_size=6))
+@settings(max_examples=20, deadline=None)
+def test_db_round_trip(entries):
+    """Valid entries survive save/load unchanged and hit on lookup."""
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "db.json")
+        db = T.TuneDB(path)
+        for k, e in entries.items():
+            db.record(k, dict(e))
+        db.save()
+        back = T.TuneDB.load(path)
+        assert back.quarantined == {}
+        assert back.entries == entries
+        for k, e in entries.items():
+            assert back.lookup(k) == e
+
+
+@given(_keys, _keys, _valid_entries)
+@settings(max_examples=20, deadline=None)
+def test_db_unknown_key_misses(k1, k2, entry):
+    """A key never recorded — e.g. any signature change — is a miss."""
+    db = T.TuneDB("unused")
+    db.record(k1, dict(entry))
+    if k2 != k1:
+        assert db.lookup(k2) is None
+    assert db.lookup(k1) is not None
+
+
+@given(st.dictionaries(_keys, _bad_entries, min_size=1, max_size=4),
+       st.dictionaries(_keys, _valid_entries, max_size=3))
+@settings(max_examples=20, deadline=None)
+def test_db_corrupted_entries_quarantined(bad, good):
+    """Corrupted entries read as misses and move to the quarantine
+    section; intact entries in the same file keep working."""
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "db.json")
+        with open(path, "w") as f:
+            json.dump(dict(schema=T.SCHEMA,
+                           entries={**good, **bad}), f, default=float)
+        db = T.TuneDB.load(path)
+        for k in bad:
+            assert db.lookup(k) is None
+            if k not in good:
+                assert k in db.quarantined
+        for k in set(good) - set(bad):
+            assert db.lookup(k) == good[k]
+
+
+def test_db_unrecognized_schema_quarantined_wholesale():
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "db.json")
+        with open(path, "w") as f:
+            json.dump(dict(schema="somebody-else/v9",
+                           entries={"k": {"backend": "einsum",
+                                          "latency_us": 1.0}}), f)
+        db = T.TuneDB.load(path)
+        assert db.entries == {}
+        assert "__file__" in db.quarantined
+
+
+def test_db_unreadable_file_starts_empty():
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "db.json")
+        with open(path, "w") as f:
+            f.write("{not json")
+        db = T.TuneDB.load(path)
+        assert db.entries == {} and db.lookup("k") is None
+
+
+# ---------------------------------------------------------------------------
+# measured selection (shared repro.search engines)
+# ---------------------------------------------------------------------------
+def test_measured_select_deterministic_and_budgeted():
+    lat = [5.0, 3.0, 9.0, 1.0, 7.0]
+    calls = []
+
+    def measure(i):
+        calls.append(i)
+        return lat[i]
+
+    win, win_s, res = T.measured_select(len(lat), measure, budget=16,
+                                        seed=0)
+    assert (win, win_s) == (3, 1.0)
+    assert 0 in calls                     # heuristic always measured
+    again = T.measured_select(len(lat), lambda i: lat[i], budget=16,
+                              seed=0)
+    assert (again[0], again[1]) == (win, win_s)
+    assert again[2].n_evals == res.n_evals
+
+    calls.clear()
+    T.measured_select(len(lat), measure, budget=2, seed=0)
+    assert len(set(calls)) <= 2           # budget caps the enumeration
+
+
+def test_kernel_space_points_stay_in_range():
+    import random
+    space = T.KernelSpace(4)
+    rng = random.Random(0)
+    for _ in range(50):
+        (i,) = space.sample(rng)
+        assert 0 <= i < 4
+        (j,) = space.mutate((i,), rng)
+        assert 0 <= j < 4 and j != i
+
+
+# ---------------------------------------------------------------------------
+# tuned compilation: correctness, warm path, fallback
+# ---------------------------------------------------------------------------
+def test_tuned_compile_matches_heuristic_and_warms_from_db():
+    ch, inputs, params = _case()
+    with tempfile.TemporaryDirectory() as td:
+        db_path = os.path.join(td, "db.json")
+        heur = compile_chain(ch)
+        tuned = compile_chain(ch, tune="auto", tune_db=db_path)
+        a = heur(inputs, params)
+        b = tuned(inputs, params)
+        for k in a:
+            assert jnp.allclose(a[k], b[k], rtol=1e-4, atol=1e-5)
+        rep = tuned.tune_report
+        assert rep["measured"] >= 1 and rep["from_db"] == 0
+        # the tuned signature extends the heuristic one
+        base = heur.signature.rsplit("|", 1)[0]
+        assert tuned.signature.startswith(base)
+        # warm compile: pure DB lookups, nothing re-measured, same program
+        warm = compile_chain(ch, tune="auto", tune_db=db_path)
+        wrep = warm.tune_report
+        assert wrep["measured"] == 0
+        assert wrep["from_db"] == rep["measured"]
+        assert warm.signature == tuned.signature
+        c = warm(inputs, params)
+        for k in a:
+            assert jnp.allclose(a[k], c[k], rtol=1e-4, atol=1e-5)
+
+
+def test_corrupted_db_falls_back_to_heuristic_without_raising():
+    ch, inputs, params = _case()
+    with tempfile.TemporaryDirectory() as td:
+        db_path = os.path.join(td, "db.json")
+        # seed the DB, then corrupt every recorded decision
+        compile_chain(ch, tune="auto", tune_db=db_path)
+        with open(db_path) as f:
+            raw = json.load(f)
+        for key in raw["entries"]:
+            raw["entries"][key] = {"backend": "", "latency_us": -1}
+        with open(db_path, "w") as f:
+            json.dump(raw, f)
+        heur = compile_chain(ch)
+        eng = compile_chain(ch, tune="readonly", tune_db=db_path)
+        rep = eng.tune_report
+        assert rep["from_db"] == 0 and rep["measured"] == 0
+        assert rep["kept_heuristic"] >= 1
+        assert eng.dispatch == heur.dispatch
+        a, b = heur(inputs, params), eng(inputs, params)
+        for k in a:
+            assert jnp.allclose(a[k], b[k], rtol=1e-4, atol=1e-5)
+        # ... and the quarantine is observable on a fresh load
+        db = T.TuneDB.load(db_path)
+        assert db.entries == {} and db.quarantined
+
+
+def test_tune_rejects_unknown_mode():
+    ch, _, _ = _case()
+    with pytest.raises(ValueError):
+        compile_chain(ch, tune="always")
+
+
+# ---------------------------------------------------------------------------
+# the no-DB fallback heuristic: M-axis regression
+# ---------------------------------------------------------------------------
+def _matmul_plan(ch, name):
+    from repro.exec import lowering as low
+    node = ch.nodes[name]
+    classes = low.dim_classes(node)
+    kshape = tuple(ch.shape_of(node.kernel))
+    return node, low.match_grouped_matmul(node, classes, kshape)
+
+
+def test_prefer_pallas_rejects_tiny_m_huge_k(monkeypatch):
+    """(1, 4096) @ (4096, 4096) is a matvec: its Pallas grid degenerates
+    to one padded M-row, so the heuristic must keep jnp even though K
+    and N dwarf mxu_min (the pre-fix code only looked at K/N)."""
+    from repro.exec.dispatch import _prefer_pallas_matmul
+    monkeypatch.setenv("REPRO_FORCE_INTERPRET", "0")
+    ch = Chain("matvec")
+    x = ch.add_input("x", (1, 4096))
+    ch.mark_output(L.fc(ch, x, out_f=4096, name="fc1"))
+    node, plan = _matmul_plan(ch, "fc1")
+    assert plan is not None
+    assert not _prefer_pallas_matmul("auto", 128, plan, node)
+
+
+def test_prefer_pallas_accepts_aligned_m(monkeypatch):
+    from repro.exec.dispatch import _prefer_pallas_matmul
+    monkeypatch.setenv("REPRO_FORCE_INTERPRET", "0")
+    ch = Chain("fat")
+    x = ch.add_input("x", (8, 512))
+    ch.mark_output(L.fc(ch, x, out_f=512, name="fc1"))
+    node, plan = _matmul_plan(ch, "fc1")
+    assert _prefer_pallas_matmul("auto", 128, plan, node)
+    # forced pallas bypasses the heuristic; small K/N still fails auto
+    assert _prefer_pallas_matmul("pallas", 128, plan, node)
+    ch2 = Chain("thin")
+    x2 = ch2.add_input("x", (8, 64))
+    ch2.mark_output(L.fc(ch2, x2, out_f=64, name="fc1"))
+    node2, plan2 = _matmul_plan(ch2, "fc1")
+    assert not _prefer_pallas_matmul("auto", 128, plan2, node2)
+
+
+# ---------------------------------------------------------------------------
+# lint audits the applied decisions
+# ---------------------------------------------------------------------------
+def test_lint_catches_tampered_tuned_meta():
+    from repro.lint import lint_compiled
+    ch, _, _ = _case()
+    with tempfile.TemporaryDirectory() as td:
+        eng = compile_chain(ch, tune="auto",
+                            tune_db=os.path.join(td, "db.json"))
+        assert not any(f.rule == "plan.tuned-contract"
+                       for f in lint_compiled(eng))
+        for st_ in eng.steps:
+            if (st_.meta or {}).get("tuned"):
+                st_.meta["tuned"]["backend"] = "oracle"
+        assert any(f.rule == "plan.tuned-contract"
+                   for f in lint_compiled(eng))
+
+
+# ---------------------------------------------------------------------------
+# serving: readonly tune on an empty DB is a safe no-op
+# ---------------------------------------------------------------------------
+def test_serve_tune_readonly_empty_db_keeps_config():
+    from repro.launch.serve import Server
+    srv = Server("tinyllama-1.1b", smoke=True, slots=2, max_len=32)
+    cfg_before = srv.engine.cfg
+    with tempfile.TemporaryDirectory() as td:
+        rep = srv.engine.tune(srv.params, mode="readonly",
+                              db_path=os.path.join(td, "db.json"))
+    assert rep["applied"] == {}
+    assert all(g["source"] == "heuristic"
+               for g in rep["groups"].values())
+    assert srv.engine.cfg == cfg_before
